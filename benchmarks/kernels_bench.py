@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks.
+
+CPU wall times are NOT TPU predictions — the interpret-mode numbers exist to
+catch pathological regressions and to time the pure-jnp reference path the
+CPU examples actually execute.  TPU performance is assessed structurally via
+the dry-run roofline (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, iters=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    rows = []
+
+    B, H, KV, S, hd = 1, 8, 2, 1024, 64
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    flops = 4 * B * H * S * S * hd
+    us_ref = _time(lambda *a: ref.flash_attention_ref(*a), q, k, v)
+    us_k = _time(lambda *a: ops.flash_attention(*a, block_q=256, block_k=256), q, k, v)
+    rows.append(("kernels/flash_attention_interp", us_k,
+                 f"ref_us={us_ref:.0f};flops={flops:.3g};mode=interpret"))
+
+    T = 8192
+    qd = jax.random.normal(ks[3], (4, H, hd))
+    kc = jax.random.normal(ks[4], (4, KV, T, hd))
+    vc = jax.random.normal(ks[5], (4, KV, T, hd))
+    length = jnp.full((4,), T, jnp.int32)
+    us_ref = _time(lambda *a: ref.decode_attention_ref(*a), qd, kc, vc, length)
+    us_k = _time(lambda *a: ops.decode_attention(*a, block_k=1024), qd, kc, vc, length)
+    rows.append(("kernels/decode_attention_interp", us_k, f"ref_us={us_ref:.0f}"))
+
+    Q, G, D = 256, 8192, 64
+    qq = jax.random.normal(ks[6], (Q, D))
+    gg = jax.random.normal(ks[7], (G, D))
+    us_ref = _time(lambda *a: ref.reid_topk_ref(*a, 16), qq, gg)
+    us_k = _time(lambda *a: ops.reid_topk(*a, 16, block_q=128, block_g=1024), qq, gg)
+    rows.append(("kernels/reid_topk_interp", us_k,
+                 f"ref_us={us_ref:.0f};gallery={G}"))
+
+    Bm_, L, Dd, N = 1, 1024, 256, 16
+    u = jax.random.normal(ks[0], (Bm_, L, Dd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bm_, L, Dd))) * 0.1
+    Bm = jax.random.normal(ks[2], (Bm_, L, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (Bm_, L, N)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[4], (Dd, N)) * 0.3)
+    us_ref = _time(lambda *a: ref.mamba_scan_ref(*a, jnp.zeros((Bm_, Dd, N)))[0],
+                   u, dt, Bm, Cm, A)
+    us_k = _time(lambda *a: ops.mamba_scan(*a, chunk=128, block_d=128),
+                 u, dt, Bm, Cm, A)
+    rows.append(("kernels/mamba_scan_interp", us_k, f"ref_us={us_ref:.0f}"))
+    return rows

@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import drift, kernels_bench, tables
+
+ALL = {
+    "sec3_potential": tables.sec3_potential,
+    "fig10_anoncampus": tables.fig10_anoncampus,
+    "fig11_duke": tables.fig11_duke,
+    "fig12_porto": tables.fig12_porto,
+    "fig13_camera_scaling": tables.fig13_camera_scaling,
+    "fig14_frame_skipping": tables.fig14_frame_skipping,
+    "fig15_replay": tables.fig15_replay,
+    "fig16_profiling": tables.fig16_profiling,
+    "fig17_identity_detection": tables.fig17_identity_detection,
+    "sec6_drift": drift.run,
+    "kernels": kernels_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=list(ALL))
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = ALL[name]()
+        except Exception as e:  # noqa: BLE001 — report and continue the suite
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Multi-camera identity detection (paper §5.4): find a lost identity that
+enters the camera network at an unknown time and place, by propagating
+appearance probabilities through the spatio-temporal model.
+
+  PYTHONPATH=src python examples/identity_detection.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (DetectorParams, build_model, duke_like_network,
+                        identity_detection, simulate_network)
+from repro.core.detect import make_detection_queries
+from repro.core.features import FeatureParams, make_features
+
+net = duke_like_network()
+visits = simulate_network(net, 1800, 3600, seed=3)
+model = build_model(visits.ent, visits.cam, visits.t_in, visits.t_out,
+                    net.n_cams, time_limit=2400)
+feats, _ = make_features(visits, 1800, FeatureParams(seed=3))
+t_start = 2400
+queries = make_detection_queries(visits, 20, search_start=t_start, seed=4)
+print(f"searching for {len(queries)} lost identities from t={t_start}")
+
+for theta in (0.95, 0.75):
+    r = identity_detection(model, visits, feats, queries,
+                           DetectorParams(theta=theta), t_refs=t_start)
+    b = identity_detection(model, visits, feats, queries,
+                           DetectorParams(theta=theta), baseline=True,
+                           t_refs=t_start)
+    print(f"theta={theta}: cost {r['cost']:9.0f} vs baseline {b['cost']:9.0f} "
+          f"({b['cost']/max(r['cost'],1):.1f}x) | recall {r['recall']:.2f} "
+          f"(baseline {b['recall']:.2f}) | precision {r['precision']:.2f} "
+          f"(baseline {b['precision']:.2f})")
+print("paper: 7.6x at theta=0.95; 6.6x at 0.75 with no recall drop")

@@ -1,0 +1,15 @@
+"""Serving engine demo: live camera streams through the ReXCam admission
+filter into a batched inference plane (see repro/launch/serve.py for the
+full driver with CLI flags).
+
+  PYTHONPATH=src python examples/serve_streams.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+sys.argv = [sys.argv[0], "--queries", "6", "--steps", "400"]
+main()

@@ -1,0 +1,16 @@
+"""Train a ~100M-parameter analytics backbone (yi-6b family scaled down) for
+a few hundred steps on CPU — the end-to-end driver of deliverable (b).
+
+  PYTHONPATH=src python examples/train_backbone.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+sys.argv = [sys.argv[0], "--arch", "yi_6b", "--steps", "200", "--d-model", "384",
+            "--layers", "6", "--seq", "256", "--batch", "8",
+            "--ckpt", "/tmp/repro_train_demo"]
+main()

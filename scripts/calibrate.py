@@ -1,0 +1,33 @@
+"""Calibration sweep: find feature-oracle params hitting the paper's baseline
+operating point (precision ~0.51, recall ~0.81 on Duke, Fig. 11)."""
+import itertools, sys, time
+import numpy as np
+from repro.core import (duke_like_network, simulate_network, build_gallery,
+                        build_model, track_queries, TrackerParams)
+from repro.core.features import FeatureParams, make_features
+from repro.core.tracker import make_queries
+
+net = duke_like_network()
+vis = simulate_network(net, 2700, 5100, seed=0)
+gal, ovf = build_gallery(vis, 24)
+model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, net.n_cams, time_limit=3000)
+q_vids, gt_vids = make_queries(vis, 100, seed=1)
+print("visits", len(vis), "overflow", ovf, flush=True)
+
+grid_sigma = [0.35, 0.45]
+grid_delta = [0.40, 0.55]
+grid_thresh = [0.20, 0.28, 0.36]
+grid_ncl = [150, 300]
+exit_t = 240
+
+rows = []
+for sig, dl, th, ncl in itertools.product(grid_sigma, grid_delta, grid_thresh, grid_ncl):
+    feats, _ = make_features(vis, 2700, FeatureParams(noise_sigma=sig, cluster_delta=dl, n_clusters=ncl))
+    pb = TrackerParams(scheme="all", match_thresh=th, exit_t=exit_t)
+    rb = track_queries(model, vis, gal, feats, q_vids, gt_vids, pb, geo_adj=net.geo_adjacent).summary()
+    pr = TrackerParams(scheme="rexcam", s_thresh=.05, t_thresh=.02, match_thresh=th, exit_t=exit_t)
+    rr = track_queries(model, vis, gal, feats, q_vids, gt_vids, pr, geo_adj=net.geo_adjacent).summary()
+    sav = rb['cost']/max(rr['cost'],1)
+    print(f"sig={sig} dl={dl} th={th} ncl={ncl} | base P={rb['precision']:.2f} R={rb['recall']:.2f} "
+          f"| rex P={rr['precision']:.2f} R={rr['recall']:.2f} sav={sav:4.1f}x "
+          f"delay={rr['delay']:5.1f} resc={rr['rescued']}", flush=True)

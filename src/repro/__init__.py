@@ -1,0 +1,12 @@
+"""repro — ReXCam: resource-efficient cross-camera video analytics, as a JAX framework.
+
+Layers:
+  repro.core      — the paper's contribution (spatio-temporal correlation filtering)
+  repro.models    — analytics backbone model zoo (10 assigned architectures)
+  repro.kernels   — Pallas TPU kernels for the inference-plane hot spots
+  repro.parallel  — logical-axis sharding rules for the production mesh
+  repro.optim / .checkpoint / .data / .runtime — substrate services
+  repro.launch    — mesh construction, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

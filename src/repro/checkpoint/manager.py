@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: atomic manifests, async writes, GC, resume.
+
+Layout (one directory per step)::
+
+    <root>/step_000100.tmp-<nonce>/   # written here first
+    <root>/step_000100/               # atomic rename when complete
+        manifest.json                 # treedef, shapes, dtypes, step
+        leaf_00000.npy ...
+
+Restart safety: a crash mid-write leaves only a ``.tmp-*`` directory, which
+restore ignores and GC removes.  ``CheckpointManager`` adds async writing
+(snapshot to host, write on a worker thread — the train loop never blocks on
+disk) and keep-last-k retention.  On a multi-host cluster each process writes
+``leaf_*.proc<k>.npy`` shards of its addressable data; this single-host build
+writes fully-replicated leaves (process 0 semantics).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import uuid
+from typing import Any
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(root: str, step: int, tree: Any) -> str:
+    """Synchronous atomic checkpoint write.  Returns the final directory."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten_with_paths(tree)
+    host_leaves = jax.device_get(leaves)
+    manifest = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "n_leaves": len(leaves),
+        "shapes": [list(np.shape(x)) for x in host_leaves],
+        "dtypes": [str(np.asarray(x).dtype) for x in host_leaves],
+    }
+    for i, leaf in enumerate(host_leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), np.asarray(leaf))
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)     # atomic publish
+    return final
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and ".tmp" not in name:
+            if os.path.exists(os.path.join(root, name, _MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: str, step: int | None = None) -> tuple[int, Any]:
+    """Restores (step, pytree).  step=None -> latest complete checkpoint."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    treedef = _deserialize_treedef(manifest["treedef"])
+    leaves = [np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+              for i in range(manifest["n_leaves"])]
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _deserialize_treedef(hexstr: str):
+    from jax.tree_util import PyTreeDef, default_registry
+    return PyTreeDef.deserialize_using_proto(default_registry, bytes.fromhex(hexstr))
+
+
+def gc_checkpoints(root: str, keep: int = 3) -> list[int]:
+    """Remove tmp litter and all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(root):
+        return []
+    removed = []
+    steps = []
+    for name in list(os.listdir(root)):
+        p = os.path.join(root, name)
+        if ".tmp-" in name:
+            shutil.rmtree(p, ignore_errors=True)
+            continue
+        if name.startswith("step_"):
+            steps.append(int(name.split("_")[1]))
+    for s in sorted(steps)[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)
+        removed.append(s)
+    return removed
+
+
+class CheckpointManager:
+    """Async checkpointing with retention — the train loop calls ``save`` and
+    keeps stepping; the previous write is joined before a new one starts."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        self.wait()
+        # Snapshot on the caller thread (device_get) so the train loop can
+        # donate/overwrite buffers immediately afterwards.
+        leaves, treedef = jax.tree.flatten(tree)
+        host = jax.device_get(leaves)
+        snapshot = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            try:
+                save_checkpoint(self.root, step, snapshot)
+                gc_checkpoints(self.root, self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self):
+        self.wait()
+        return restore_checkpoint(self.root)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: spatio-temporal correlation filtering for
+cross-camera video analytics (ReXCam §5-§6), plus the calibrated trajectory
+simulators used to validate the paper's claims (DESIGN.md §7).
+"""
+from repro.core.correlation import SpatioTemporalModel  # noqa: F401
+from repro.core.profiler import build_model, transitions_from_visits  # noqa: F401
+from repro.core.simulate import (  # noqa: F401
+    CameraNetwork, Visits, simulate_network, duke_like_network,
+    anoncampus_like_network, porto_like_network, build_gallery,
+)
+from repro.core.tracker import TrackerParams, track_queries, TrackResult  # noqa: F401
+from repro.core.detect import DetectorParams, identity_detection  # noqa: F401

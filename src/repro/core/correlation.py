@@ -1,0 +1,116 @@
+"""The spatio-temporal correlation model M (paper §5.1).
+
+  S(c_s, c_d)            spatial correlation: fraction of c_s's outbound
+                         traffic seen next at c_d (row-stochastic incl. exit).
+  T(c_s, c_d, [f0, f])   temporal correlation: CDF of inter-camera travel
+                         times, evaluated at elapsed time since last sighting.
+  f0(c_s, c_d)           earliest historical arrival — search starts there.
+
+  M(c_s, c_d, f) = [S >= s_thresh] ∧ [f >= f0] ∧ [CDF(elapsed) <= 1 - t_thresh]
+
+The model is a few small dense arrays — it is the *only* persistent state of
+the ReXCam control plane (paper §7) and is replicated across the serving mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF_TIME = np.int32(2 ** 30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SpatioTemporalModel:
+    """All arrays are jnp; C = number of cameras, NB = travel-time bins."""
+
+    S: jnp.ndarray          # (C, C)  next-camera traffic fractions (rows may sum <1: exits)
+    exit_frac: jnp.ndarray  # (C,)    fraction of outbound traffic that exits the network
+    cdf: jnp.ndarray        # (C, C, NB) travel-time CDF (fraction arrived by bin b)
+    f0: jnp.ndarray         # (C, C)  earliest observed travel time (steps); INF_TIME if none
+    entry: jnp.ndarray      # (C,)    P*_c — first-appearance distribution (paper §5.4)
+    counts: jnp.ndarray     # (C, C)  raw transition counts (for drift detection / tests)
+    bin_width: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+    @property
+    def n_cams(self) -> int:
+        return self.S.shape[0]
+
+    @property
+    def n_bins(self) -> int:
+        return self.cdf.shape[-1]
+
+    # -- the paper's query interface -------------------------------------
+    def spatial_mask(self, c_s: jnp.ndarray, s_thresh: float | jnp.ndarray) -> jnp.ndarray:
+        """(C,) bool: destinations spatially correlated with c_s."""
+        return self.S[c_s] >= s_thresh
+
+    def temporal_mask(self, c_s: jnp.ndarray, elapsed: jnp.ndarray,
+                      t_thresh: float | jnp.ndarray) -> jnp.ndarray:
+        """(C,) bool: destinations temporally correlated at `elapsed` steps.
+
+        The fraction already arrived at time t is the CDF *before* t's bin —
+        the exclusive form keeps the arrival bin itself searchable even for
+        degenerate (zero-variance) travel-time distributions."""
+        b = jnp.clip(elapsed // self.bin_width, 0, self.n_bins - 1)
+        arrived = jnp.where(b > 0, self.cdf[c_s, :, jnp.maximum(b - 1, 0)], 0.0)
+        started = elapsed >= self.f0[c_s]
+        return started & (arrived <= 1.0 - t_thresh)
+
+    def correlated(self, c_s: jnp.ndarray, elapsed: jnp.ndarray,
+                   s_thresh, t_thresh) -> jnp.ndarray:
+        """M(c_s, ·, elapsed): (C,) bool mask over destination cameras."""
+        return self.spatial_mask(c_s, s_thresh) & self.temporal_mask(c_s, elapsed, t_thresh)
+
+    def window_end(self, s_thresh: float, t_thresh: float) -> jnp.ndarray:
+        """(C,) — per source camera, the elapsed time beyond which NO admitted
+        destination's temporal window is still open (Alg. 1 line 21's
+        exhaustion test, vectorized).  t_thresh=0 never exhausts within the
+        histogram range.  +1 bin for the exclusive-CDF convention of
+        ``temporal_mask``."""
+        open_bins = ((self.cdf <= 1.0 - t_thresh).sum(-1) + 1) * self.bin_width
+        open_bins = jnp.minimum(open_bins, self.n_bins * self.bin_width)  # (C,C)
+        admitted = self.S >= s_thresh
+        ends = jnp.where(admitted, open_bins, 0)
+        return ends.max(axis=1)
+
+    # -- §5.4 identity detection needs window-binned temporal mass --------
+    def window_transfer(self, window: int, n_windows: int) -> jnp.ndarray:
+        """Tw (C, C, n_windows): fraction of c_s->c_d traffic arriving with a
+        delay of exactly w windows (w = dt // window)."""
+        C, _, NB = self.cdf.shape
+        pdf = jnp.diff(self.cdf, axis=-1, prepend=0.0)      # per-bin mass
+        bins_per_w = max(window // self.bin_width, 1)
+        nw_src = NB // bins_per_w
+        trimmed = pdf[:, :, : nw_src * bins_per_w].reshape(C, C, nw_src, bins_per_w).sum(-1)
+        if nw_src >= n_windows:
+            return trimmed[:, :, :n_windows]
+        return jnp.pad(trimmed, ((0, 0), (0, 0), (0, n_windows - nw_src)))
+
+    def potential_savings(self, s_thresh: float, t_thresh: float,
+                          weight_by_traffic: bool = True) -> float:
+        """Analytic potential (paper §3.2): ratio of camera-steps searched by a
+        correlation-agnostic baseline (all C cameras for the max window) to the
+        camera-steps M admits, averaged over source cameras (optionally
+        traffic-weighted).  Spatial-only: t_thresh=0.  Temporal-only:
+        s_thresh=0."""
+        C = self.n_cams
+        sp = np.asarray(self.S) >= s_thresh                 # (C, C) searched pairs
+        cdf = np.asarray(self.cdf)
+        f0 = np.asarray(self.f0)
+        NB = cdf.shape[-1]
+        b = np.arange(NB)[None, None, :] * self.bin_width   # (1,1,NB) bin start times
+        active = (b >= f0[..., None]) & (cdf <= 1.0 - t_thresh)   # (C,C,NB)
+        steps = (active.sum(-1) * self.bin_width) * sp      # (C,C) searched steps
+        per_src = steps.sum(1).astype(np.float64)           # camera-steps per source
+        baseline = C * NB * self.bin_width
+        if weight_by_traffic:
+            w = np.asarray(self.counts).sum(1).astype(np.float64)
+            w = w / max(w.sum(), 1.0)
+            filt = float((per_src * w).sum())
+        else:
+            filt = float(per_src.mean())
+        return baseline / max(filt, 1e-9)

@@ -1,0 +1,141 @@
+"""Offline profiling of spatio-temporal correlations (paper §6).
+
+Input is the output of an MTMC tracker over historical video: per detected
+entity instance a (camera, frame, entity) tuple — here consolidated into
+*visits* (entity, camera, t_in, t_out).  The profiler:
+
+  1. orders each entity's visits in time,
+  2. extracts consecutive-visit transitions (c_s -> c_d, dt),
+  3. accumulates transition counts, travel-time histograms, first-arrival
+     times, entry distribution,
+  4. normalizes into a :class:`SpatioTemporalModel`.
+
+Frame-sampled profiling (paper §8.4): ``sample_every=k`` emulates labeling
+only every k-th frame — visits that no multiple of k intersects are dropped
+and the surviving timestamps are quantized, exactly the degradation a
+cheaper MTMC pass would produce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.correlation import INF_TIME, SpatioTemporalModel
+
+
+def subsample_visits(ent, cam, t_in, t_out, sample_every: int):
+    """Emulate frame-sampled MTMC labeling (returns filtered+quantized visits)."""
+    if sample_every <= 1:
+        return ent, cam, t_in, t_out
+    k = sample_every
+    first_tick = ((t_in + k - 1) // k) * k          # first labeled frame >= t_in
+    seen = first_tick <= t_out
+    q_in = first_tick
+    q_out = (t_out // k) * k
+    return ent[seen], cam[seen], q_in[seen], q_out[seen]
+
+
+def transitions_from_visits(ent, cam, t_in, t_out):
+    """Consecutive-visit transitions per entity.
+
+    Returns (src_cam, dst_cam, dt, src_is_last, first_cam_of_entity) where the
+    first two + dt are per *transition* and the last two are per *visit* flags
+    used for exit/entry statistics.
+    """
+    order = np.lexsort((np.asarray(t_in), np.asarray(ent)))
+    e = np.asarray(ent)[order]
+    c = np.asarray(cam)[order]
+    ti = np.asarray(t_in)[order]
+    to = np.asarray(t_out)[order]
+    same = e[1:] == e[:-1]
+    src = c[:-1][same]
+    dst = c[1:][same]
+    dt = (ti[1:] - to[:-1])[same]
+    dt = np.maximum(dt, 0)
+    # exits: a visit is terminal if it is the last of its entity
+    is_last = np.ones(len(e), bool)
+    is_last[:-1] = ~same
+    is_first = np.ones(len(e), bool)
+    is_first[1:] = ~same
+    return src, dst, dt, c[is_last], c[is_first]
+
+
+def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
+                bin_width: int = 1, sample_every: int = 1,
+                time_limit: int | None = None) -> SpatioTemporalModel:
+    """Profile a visit table into a SpatioTemporalModel.
+
+    ``time_limit`` restricts profiling to visits starting before it (paper
+    §8.4 profiles on a prefix partition of the data).
+    """
+    ent, cam, t_in, t_out = map(np.asarray, (ent, cam, t_in, t_out))
+    if time_limit is not None:
+        keep = t_in < time_limit
+        ent, cam, t_in, t_out = ent[keep], cam[keep], t_in[keep], t_out[keep]
+    ent, cam, t_in, t_out = subsample_visits(ent, cam, t_in, t_out, sample_every)
+
+    src, dst, dt, exit_cams, entry_cams = transitions_from_visits(ent, cam, t_in, t_out)
+
+    C, NB = n_cams, n_bins
+    counts = np.zeros((C, C), np.float64)
+    np.add.at(counts, (src, dst), 1.0)
+
+    hist = np.zeros((C, C, NB), np.float64)
+    b = np.clip(dt // bin_width, 0, NB - 1)
+    np.add.at(hist, (src, dst, b), 1.0)
+
+    f0 = np.full((C, C), int(INF_TIME), np.int64)
+    np.minimum.at(f0, (src, dst), dt)
+
+    exits = np.zeros((C,), np.float64)
+    np.add.at(exits, exit_cams, 1.0)
+    entry = np.zeros((C,), np.float64)
+    np.add.at(entry, entry_cams, 1.0)
+
+    out_total = counts.sum(1) + exits                # all traffic leaving each camera
+    denom = np.maximum(out_total, 1.0)
+    S = counts / denom[:, None]
+    exit_frac = exits / denom
+
+    cdf = np.cumsum(hist, axis=-1)
+    cdf = cdf / np.maximum(cdf[..., -1:], 1.0)
+
+    entry = entry / max(entry.sum(), 1.0)
+
+    return SpatioTemporalModel(
+        S=jnp.asarray(S, jnp.float32),
+        exit_frac=jnp.asarray(exit_frac, jnp.float32),
+        cdf=jnp.asarray(cdf, jnp.float32),
+        f0=jnp.asarray(np.minimum(f0, int(INF_TIME)), jnp.int32),
+        entry=jnp.asarray(entry, jnp.float32),
+        counts=jnp.asarray(counts, jnp.float32),
+        bin_width=bin_width,
+    )
+
+
+def profiling_cost(ent, cam, t_in, t_out, sample_every: int = 1,
+                   time_limit: int | None = None) -> int:
+    """Frames the MTMC tracker must label for this profile (paper §8.4
+    x-axis): one frame per camera per labeled tick in the profile window."""
+    t_in = np.asarray(t_in)
+    t_out = np.asarray(t_out)
+    if time_limit is None:
+        horizon = int(t_out.max()) + 1
+    else:
+        horizon = time_limit
+    n_cams = int(np.asarray(cam).max()) + 1
+    ticks = horizon // max(sample_every, 1)
+    return int(ticks * n_cams)
+
+
+def drift_score(model: SpatioTemporalModel, replay_rescues: np.ndarray,
+                smoothing: float = 3.0) -> np.ndarray:
+    """Paper §6 drift detection: rescue events per (c_s, c_d) normalized by the
+    profile's transition counts (additively smoothed so single rescues on
+    near-empty pairs don't dominate).  A spike (>> typical) triggers
+    re-profiling of the corresponding camera pair."""
+    counts = np.asarray(model.counts) + smoothing
+    return np.asarray(replay_rescues, np.float64) / counts

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMStream, FrameEmbedStream  # noqa: F401

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the inference-plane hot spots (DESIGN.md §3).
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+validated in interpret mode against the pure-jnp oracle in ref.py; ops.py
+holds the jit'd public wrappers (auto-interpret off-TPU).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    decode_attention, flash_attention, mamba_scan, reid_topk,
+)

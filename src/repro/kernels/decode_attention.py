@@ -1,0 +1,88 @@
+"""Decode attention (one token vs a long KV cache) — split-K Pallas kernel.
+
+Grid (B, KV, nk): the kv-cache axis is tiled innermost; all G q-heads of a kv
+head are processed together (one (G, hd) x (hd, block_k) MXU call per tile).
+Valid-length masking comes from a scalar per batch row kept in SMEM.
+This is the flash-decoding-style kernel the serving engine uses for
+``decode_32k`` / ``long_500k`` shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    # whole tile beyond the valid prefix -> skip
+    @pl.when(ki * block_k < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); caches: (B, KV, T, hd); length: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, T = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    nk = T // block_k
+    scale = hd ** -0.5
+    qr = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qr, k_cache, v_cache)
+    return out.reshape(B, H, hd)

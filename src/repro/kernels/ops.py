@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (the kernels are TPU targets;
+interpret=True executes the kernel body in Python on CPU so correctness is
+validated everywhere).  ``ref.py`` holds the pure-jnp oracles used by the
+per-kernel allclose test sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref  # noqa: F401  (re-exported for tests/benches)
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.reid_topk import reid_topk as _reid
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
+                     interpret: bool | None = None):
+    return _decode(q, k_cache, v_cache, length, block_k=block_k,
+                   interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_g", "interpret"))
+def reid_topk(queries, gallery, k: int, *, block_q: int = 128,
+              block_g: int = 512, interpret: bool | None = None):
+    return _reid(queries, gallery, k, block_q=block_q, block_g=block_g,
+                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(u, dt, Bm, Cm, A, *, chunk: int = 128, block_d: int = 256,
+               interpret: bool | None = None):
+    return _mamba(u, dt, Bm, Cm, A, chunk=chunk, block_d=block_d,
+                  interpret=_auto_interpret(interpret))

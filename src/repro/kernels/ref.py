@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B, H, S, hd); k/v: (B, KV, T, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bkth->bkgqt", qr, k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bkth->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length) -> jax.Array:
+    """q: (B, H, hd); caches: (B, KV, T, hd); length: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, T = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bkth->bkgt", qr, k_cache.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(T)[None] < length[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def reid_topk_ref(queries, gallery, k: int):
+    """queries: (Q, D); gallery: (G, D) — returns (scores (Q, k), idx (Q, k)).
+
+    Scores are inner products (for L2-normalized features, distance =
+    2 - 2*score); top-k by score descending — the paper's re-id ranking
+    (Fig. 2) over a frame gallery.
+    """
+    s = queries.astype(jnp.float32) @ gallery.astype(jnp.float32).T
+    return jax.lax.top_k(s, k)
+
+
+def mamba_scan_ref(u, dt, Bm, Cm, A, h0):
+    """Sequential (step-by-step) selective scan oracle.
+
+    u/dt: (B, L, D); Bm/Cm: (B, L, N); A: (D, N); h0: (B, D, N).
+    Returns (y (B, L, D), h_final).
+    """
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t[..., None] * A)             # (B, D, N)
+        h = da * h + (dt_t * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h

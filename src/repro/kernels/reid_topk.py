@@ -1,0 +1,88 @@
+"""Fused gallery ranking: similarity GEMM + running top-k — Pallas kernel.
+
+The paper's inference-time hot loop (Fig. 2): rank a gallery of detected
+objects by feature distance to the query.  TPU adaptation (DESIGN.md §3):
+the distance reduces to an inner-product GEMM on the MXU (features are
+L2-normalized: d = 2 - 2*s), and the ranking keeps a (block_q, K) running
+top-k in VMEM merged tile-by-tile across gallery blocks — the full (Q, G)
+score matrix never reaches HBM.
+
+Grid (nq, ng): gallery axis innermost, top-k state carried in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _reid_kernel(q_ref, g_ref, sv_ref, si_ref, val_scr, idx_scr, *,
+                 k: int, block_g: int, ng: int):
+    gi = pl.program_id(1)
+
+    @pl.when(gi == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, NEG_INF)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    q = q_ref[...].astype(jnp.float32)                    # (block_q, D)
+    g = g_ref[...].astype(jnp.float32)                    # (block_g, D)
+    s = jax.lax.dot_general(q, g, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (block_q, block_g)
+    base = gi * block_g
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # merge running top-k with this tile's scores
+    merged_v = jnp.concatenate([val_scr[...], s], axis=1)
+    merged_i = jnp.concatenate([idx_scr[...], cols], axis=1)
+    top_v, pos = jax.lax.top_k(merged_v, k)
+    top_i = jnp.take_along_axis(merged_i, pos, axis=1)
+    val_scr[...] = top_v
+    idx_scr[...] = top_i
+
+    @pl.when(gi == ng - 1)
+    def _finalize():
+        sv_ref[...] = val_scr[...]
+        si_ref[...] = idx_scr[...]
+
+
+def reid_topk(queries, gallery, k: int, *, block_q: int = 128,
+              block_g: int = 512, interpret: bool = False):
+    """queries: (Q, D); gallery: (G, D) -> (scores (Q, k), idx (Q, k)).
+
+    Scores are inner products, descending (for unit features,
+    distance = 2 - 2*score).
+    """
+    Q, D = queries.shape
+    G = gallery.shape[0]
+    block_q = min(block_q, Q)
+    block_g = min(block_g, G)
+    assert Q % block_q == 0 and G % block_g == 0
+    nq, ng = Q // block_q, G // block_g
+
+    kernel = functools.partial(_reid_kernel, k=k, block_g=block_g, ng=ng)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, ng),
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_g, D), lambda qi, gi: (gi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, gallery)

@@ -1,0 +1,158 @@
+"""Closed-form roofline model per (arch x shape x mesh) cell.
+
+XLA:CPU's ``cost_analysis()`` counts while-loop bodies once (scan-heavy
+programs are undercounted — see EXPERIMENTS.md §Dry-run caveat), so the
+compute/memory roofline terms are derived from this analytic model of the
+exact program we lower (same chunking, remat, sharding), while the
+*collective* term comes from the loop-aware HLO parse
+(``repro.launch.hlo_analysis``) of the compiled module, cross-checked against
+the analytic estimate here.
+
+All byte/flop counts are PER CHIP per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.launch.shapes import SHAPES
+from repro.models.config import ModelConfig, TP_DEGREE
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CellModel:
+    flops_chip: float
+    hbm_chip: float
+    coll_chip: float
+    detail: dict
+
+
+def _mm_params_per_token(cfg: ModelConfig) -> float:
+    """Matmul params touched per decoder token (excl. embed gather, incl.
+    unembed; MoE counts routed experts x capacity padding)."""
+    D, F = cfg.d_model, cfg.d_ff
+    Hp, KV, hd = cfg.num_padded_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = D * Hp * hd + 2 * D * KV * hd + Hp * hd * D
+
+    def mamba1():
+        di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        return (D * 2 * di + di * (dtr + 2 * n) + dtr * di + di * D
+                + cfg.ssm_conv * di + 24 * di * n)     # scan arithmetic lumped
+
+    def mamba2():
+        di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+        ssd_intra = 2 * nh * cfg.ssm_chunk * (n + cfg.ssm_head_dim)
+        return (D * (2 * di + 2 * n + nh) + di * D
+                + cfg.ssm_conv * (di + 2 * n) + ssd_intra)
+
+    if cfg.family == "ssm":
+        per_layer = mamba1() if cfg.ssm_version == 1 else mamba2()
+        body = cfg.num_layers * per_layer
+    elif cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_every
+        body = cfg.num_layers * mamba2() + n_super * (attn + 3 * D * F)
+    elif cfg.family == "moe":
+        expert = cfg.experts_per_token * cfg.capacity_factor * 3 * D * F
+        body = cfg.num_layers * (attn + D * cfg.num_experts + expert)
+    elif cfg.family == "audio":
+        body = cfg.num_layers * (2 * attn + 3 * D * F)   # self + cross attn
+    else:
+        body = cfg.num_layers * (attn + 3 * D * F)
+    return body + D * cfg.vocab_size                      # unembed
+
+
+def _attn_score_flops(cfg: ModelConfig, B: int, S: int, kind: str,
+                      causal_skip: bool) -> float:
+    """Softmax-attention score+PV flops (global)."""
+    Hp, hd = cfg.num_padded_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn = (cfg.num_layers // cfg.attn_every if cfg.family == "hybrid"
+              else cfg.num_layers)
+    if kind == "decode":
+        return n_attn * B * 4.0 * S * Hp * hd            # one token vs cache S
+    # blockwise masked computes the full S^2; the balanced schedule ~halves it
+    factor = 0.55 if causal_skip else 1.0
+    flops = n_attn * B * 4.0 * S * S * Hp * hd * factor
+    if cfg.family == "audio":
+        Te = cfg.encoder_seq
+        flops += cfg.encoder_layers * B * 4.0 * Te * Te * Hp * hd  # bidir enc
+        flops += cfg.num_layers * B * 4.0 * S * Te * Hp * hd       # cross
+    return flops
+
+
+def _weight_bytes_chip(cfg: ModelConfig, tp: int, dp: int) -> float:
+    """Weights streamed per forward pass per chip (after FSDP all-gather each
+    chip holds its TP shard of every live layer)."""
+    n_total = cfg.param_count()
+    if cfg.family == "moe":
+        D, F = cfg.d_model, cfg.d_ff
+        n_exp = cfg.num_layers * cfg.num_experts * 3 * D * F
+        n_dense = n_total - n_exp
+        return n_dense / tp * BF16 + n_exp / (dp * tp) * BF16
+    return n_total / tp * BF16
+
+
+def analytic_cell(cfg: ModelConfig, shape_name: str, *, multi_pod: bool = False,
+                  causal_skip: bool = False) -> CellModel:
+    s = SHAPES[shape_name]
+    n_chips = 512 if multi_pod else 256
+    tp = TP_DEGREE
+    dp = n_chips // tp
+    B, S = s.global_batch, s.seq_len
+    kind = s.kind
+
+    tokens = B * S if kind in ("train", "prefill") else B
+    t_loc = max(tokens // dp, 1)
+
+    # ---- FLOPs ----
+    mm = 2.0 * _mm_params_per_token(cfg) * tokens
+    attn = _attn_score_flops(cfg, B, S, kind, causal_skip)
+    fwd = mm + attn
+    mult = 4.0 if kind == "train" else 1.0               # bwd 2x + remat 1x
+    flops_chip = fwd * mult / n_chips
+
+    # ---- HBM bytes ----
+    D, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    w_pass = _weight_bytes_chip(cfg, tp, dp)
+    n_passes = 3 if kind == "train" else 1               # fwd, remat, bwd
+    bytes_w = w_pass * n_passes
+    n_total = cfg.param_count()
+    bytes_opt = (24.0 + 8.0) * n_total / n_chips if kind == "train" else 0.0
+    c_act = 56 if kind == "train" else 16
+    bytes_act = c_act * D * L * t_loc * BF16 / 8  # /8: chunked fusion residency
+    v_shard = tp if cfg.shard_vocab else 1
+    bytes_logits = (3 if kind == "train" else 1) * t_loc * V / v_shard * F32
+    bytes_kv = 0.0
+    if kind == "decode" and cfg.family != "ssm":
+        n_attn = (cfg.num_layers // cfg.attn_every if cfg.family == "hybrid" else L)
+        kv_shards = dp * (tp if cfg.shard_kv_heads else 1)
+        bytes_kv = 2.0 * S * cfg.num_kv_heads * cfg.head_dim * BF16 * n_attn * B / kv_shards
+    if kind == "decode" and cfg.family in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        bytes_kv += 2.0 * B * di * n * F32 * L / max(dp * tp, 1)
+    hbm_chip = bytes_w + bytes_opt + bytes_act + bytes_logits + bytes_kv
+
+    # ---- collective estimate (cross-check; primary = HLO parse) ----
+    n_passes_ag = 2 if kind == "train" else 1
+    ag = n_passes_ag * BF16 * n_total / tp * (dp - 1) / dp
+    rs = (F32 * n_total / tp * (dp - 1) / dp) if kind == "train" else 0.0
+    n_ar = (L * 2 * (3 if kind == "train" else 1))
+    ar = n_ar * 2.0 * t_loc * D * BF16 * (tp - 1) / tp
+    a2a = 0.0
+    if cfg.family == "moe":
+        dirs = 2 * (3 if kind == "train" else 1)
+        a2a = dirs * t_loc * cfg.experts_per_token * cfg.capacity_factor * D * BF16
+        # TP combine of expert outputs (psum)
+        a2a += dirs * t_loc * cfg.experts_per_token * cfg.capacity_factor * D * F32
+    coll = ag + rs + ar + a2a
+    return CellModel(
+        flops_chip=flops_chip, hbm_chip=hbm_chip, coll_chip=coll,
+        detail=dict(mm_flops=mm, attn_flops=attn, bytes_w=bytes_w,
+                    bytes_opt=bytes_opt, bytes_act=bytes_act,
+                    bytes_logits=bytes_logits, bytes_kv=bytes_kv,
+                    ag=ag, rs=rs, ar=ar, a2a=a2a, tokens=tokens))

@@ -1,0 +1,142 @@
+"""Loop-aware HLO analysis: collective bytes with while-loop trip counts.
+
+XLA:CPU's ``cost_analysis()`` counts while-loop bodies ONCE (scan-heavy
+programs are undercounted), but the optimized HLO annotates loops with
+``backend_config={"known_trip_count":{"n":...}}``.  This parser
+
+  1. splits the module into computations,
+  2. finds every ``while`` op, its body computation and trip count,
+  3. propagates multipliers through the call/fusion/loop graph,
+  4. sums collective payload bytes x multiplier.
+
+The result is the *actual per-step collective schedule* of the compiled
+program — the roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+def _header_name(stripped: str) -> str | None:
+    """Computation-definition header: ``[ENTRY] %name (params...) -> type {``.
+
+    Params may nest parens (tuple types), so no full-regex — a header is a
+    line that ends with '{', has a '->' return annotation, and whose text
+    before the first '(' is just the (possibly ENTRY-prefixed) name."""
+    if not stripped.endswith("{") or "->" not in stripped:
+        return None
+    head = stripped.split("(", 1)[0].strip()
+    if "=" in head or not head:
+        return None
+    parts = head.split()
+    if parts[0] == "ENTRY" and len(parts) > 1:
+        return parts[1].lstrip("%")
+    if len(parts) == 1:
+        return parts[0].lstrip("%")
+    return None
+_SHAPE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_WHILE = re.compile(r"while\(.*?\).*?body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_COLLECTIVE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_module(hlo: str):
+    """Returns computations: name -> list[instruction line]."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        name = _header_name(stripped)
+        if name is not None:
+            cur = name
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def collective_schedule(hlo: str) -> dict:
+    """Loop-aware collective byte totals {kind: bytes, 'total': ..., 'ops': n}."""
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.strip().startswith("ENTRY"):
+            entry = _header_name(line.strip())
+            if entry:
+                break
+    # edges: computation -> [(callee, multiplier)]
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE.search(ln)
+            if wm:
+                tm = _TRIP.search(ln)
+                trips = int(tm.group(1)) if tm else 1
+                edges[name].append((wm.group(1), trips))
+                continue
+            cm = _CALLS.search(ln)
+            if cm:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        edges[name].append((callee, 1))
+
+    # propagate multipliers from entry
+    mult: dict[str, int] = defaultdict(int)
+    start = entry if entry in comps else max(comps, key=lambda c: len(comps[c]))
+    stack = [(start, 1)]
+    seen_pairs = set()
+    while stack:
+        node, m = stack.pop()
+        mult[node] = max(mult[node], m) if mult[node] else m
+        mult[node] = m if mult[node] < m else mult[node]
+        for callee, k in edges.get(node, []):
+            key = (node, callee, m * k)
+            if key in seen_pairs:
+                continue
+            seen_pairs.add(key)
+            stack.append((callee, m * k))
+
+    totals: dict[str, float] = defaultdict(float)
+    n_ops = 0
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for ln in lines:
+            cm = _COLLECTIVE.search(ln)
+            if not cm or "-done" in ln.split("=")[0]:
+                continue
+            lhs = ln.split("=", 1)
+            if len(lhs) < 2:
+                continue
+            nbytes = _shape_bytes(lhs[1].split(cm.group(0))[0])
+            totals[cm.group(1)] += nbytes * m
+            n_ops += m
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    totals["ops"] = n_ops
+    return dict(totals)

@@ -1,0 +1,115 @@
+"""Roofline report: aggregate the dry-run artifacts into EXPERIMENTS.md tables.
+
+Terms (per-chip seconds per step), TPU v5e constants:
+  compute_s    = FLOPs_chip / 197e12        (bf16 peak)
+  memory_s     = HBM_bytes_chip / 819e9
+  collective_s = collective_bytes_chip / 50e9
+
+Sources: compute/memory from the analytic program model
+(``repro.launch.analytic`` — XLA:CPU cost_analysis counts scan bodies once,
+see §Dry-run caveat), collective from the loop-aware parse of the compiled
+HLO (``repro.launch.hlo_analysis``).  ``useful`` = MODEL_FLOPS /
+(program FLOPs x chips): how much of the compiled compute is the 6·N·D /
+2·N·D ideal.  ``roofline frac`` = ideal-program time / dominant-term time.
+
+Usage: python -m repro.launch.roofline [--mesh pod] [--suffix _cs] [--md out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str, mesh: str, suffix: str = ""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}{suffix}.json"))):
+        base = os.path.basename(f)[:-len(".json")]
+        if suffix == "" and base.endswith("_cs"):
+            continue
+        recs.append(json.load(open(f)))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def analyze(r: dict) -> dict | None:
+    if r["status"] != "ok":
+        if r["status"] == "skipped":
+            return dict(arch=r["arch"], shape=r["shape"], skipped=True,
+                        why=r.get("why", ""))
+        return None
+    n = r["n_chips"]
+    a = r["analytic"]
+    coll_b = r["collective_bytes"]["total"]
+    terms = dict(
+        compute_s=a["flops_chip"] / PEAK_FLOPS,
+        memory_s=a["hbm_chip"] / HBM_BW,
+        collective_s=coll_b / ICI_BW,
+    )
+    dom = max(terms, key=terms.get)
+    ideal_s = r["model_flops"] / n / PEAK_FLOPS
+    bound_s = max(terms.values())
+    useful = r["model_flops"] / max(a["flops_chip"] * n, 1.0)
+    return dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"], n_chips=n,
+                skipped=False, **terms, dominant=dom, useful=useful,
+                roofline_frac=min(ideal_s / max(bound_s, 1e-30), 1.0),
+                model_flops=r["model_flops"], coll=r["collective_bytes"],
+                coll_est=a["coll_chip"], hlo_flops=r["hlo_flops"],
+                mem_bytes=r["memory"]["bytes_per_device"])
+
+
+def fmt_table(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful (MODEL/HLO) | roofline frac | HBM/chip (GB) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in rows:
+        if a is None:
+            continue
+        if a.get("skipped"):
+            out.append(f"| {a['arch']} | {a['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3e} | "
+            f"{a['memory_s']:.3e} | {a['collective_s']:.3e} | "
+            f"{a['dominant'].replace('_s','')} | {a['useful']:.2f} | "
+            f"{a['roofline_frac']:.3f} | {a['mem_bytes']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    rows = [analyze(r) for r in load(args.dir, args.mesh, args.suffix)]
+    rows = [r for r in rows if r]
+    live = [r for r in rows if not r.get("skipped")]
+    print(fmt_table(rows, f"Roofline — {args.mesh} mesh"))
+    print()
+    worst = sorted(live, key=lambda a: a["roofline_frac"])[:6]
+    print("worst roofline fraction:")
+    for a in worst:
+        print(f"  {a['arch']} x {a['shape']}: {a['roofline_frac']:.4f} "
+              f"(dom {a['dominant']})")
+    collb = sorted(live, key=lambda a: -(a["collective_s"] /
+                                         max(max(a["compute_s"], a["memory_s"]), 1e-30)))[:6]
+    print("most collective-bound (coll / max(other terms)):")
+    for a in collb:
+        print(f"  {a['arch']} x {a['shape']}: "
+              f"{a['collective_s']/max(max(a['compute_s'],a['memory_s']),1e-30):.2f} "
+              f"coll={a['collective_s']:.2e}s")
+
+
+if __name__ == "__main__":
+    main()

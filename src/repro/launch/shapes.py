@@ -1,0 +1,70 @@
+"""Assigned input-shape registry + abstract input specs per (arch, shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — exactly what
+``jax.jit(...).lower()`` needs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    seq_shard: bool = False  # long-context: shard the KV/cache sequence axis
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, seq_shard=True),
+}
+
+# long_500k needs a sub-quadratic path: run for SSM/hybrid, skip for pure
+# full-attention archs (DESIGN.md §4).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    s = SHAPES[shape]
+    if s.name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, ("skipped: pure full-attention arch has no sub-quadratic "
+                       "path at 512k (DESIGN.md §4)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, s: ShapeSpec) -> dict:
+    B, S = s.global_batch, s.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.mrope:
+        batch["positions"] = sds((3, B, S), jnp.int32)
+    return batch
+
+
+def batch_logical_axes(cfg: ModelConfig) -> dict:
+    ax = {"tokens": ("batch", "seq")}
+    if cfg.family == "audio":
+        ax["frames"] = ("batch", None, "embed")
+    if cfg.mrope:
+        ax["positions"] = (None, "batch", "seq")
+    return ax
+
+
+def decode_token_specs(cfg: ModelConfig, s: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return sds((s.global_batch,), jnp.int32)

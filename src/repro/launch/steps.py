@@ -1,0 +1,177 @@
+"""Step builders: train / prefill / decode with full sharding specs.
+
+Each builder returns ``(fn, in_shardings, out_shardings, abstract_inputs)``
+ready for ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*abstract)``
+— the single code path shared by the dry-run, the train driver and the
+serving driver.  Sharding specs are derived from the models' logical axis
+trees through the active rule table, so swapping meshes is a rules change.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.shapes import (
+    SHAPES, ShapeSpec, batch_logical_axes, decode_token_specs, sds,
+    train_batch_specs,
+)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.parallel.sharding import AxisRules, logical_to_spec
+from repro.perf import get_flags
+
+SERVE_HBM_BUDGET = 8e9  # bytes/chip for weight-stationary (no-FSDP) serving
+
+
+def _serve_param_rules(cfg: ModelConfig, rules: AxisRules) -> AxisRules:
+    """Weight-stationary serving (PerfFlags.serve_params_replicated): drop the
+    FSDP axis when the per-chip TP shard fits — removes the per-token weight
+    all-gathers that dominate the decode collective term."""
+    if not get_flags().serve_params_replicated:
+        return rules
+    n_total = cfg.param_count()
+    if cfg.family == "moe":
+        n_exp = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+        n_dense = n_total - n_exp        # experts stay EP-sharded over data
+        per_chip = n_dense * 4 / 16
+    else:
+        per_chip = n_total * 4 / 16
+    if per_chip > SERVE_HBM_BUDGET:
+        return rules                     # 104B-class: keep FSDP-serving
+    return AxisRules({**rules.rules, "fsdp": ()})
+
+REPL = P()
+
+
+def _tree_shardings(mesh: Mesh, rules: AxisRules, logical_tree: Any) -> Any:
+    def is_ax(x):
+        return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, logical_to_spec(ax, rules)),
+        logical_tree, is_leaf=is_ax)
+
+
+def opt_state_axes(param_axes):
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                     shape: ShapeSpec, opt_cfg: OptConfig | None = None,
+                     causal_skip: bool = False):
+    opt_cfg = opt_cfg or OptConfig()
+    import dataclasses as _dc
+    flags = get_flags()
+    bf16_params = flags.bf16_params
+    if bf16_params:
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    if flags.pad_vocab:
+        cfg = cfg.with_padded_vocab()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.lm_loss, has_aux=True)(params, batch, cfg, causal_skip=causal_skip)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    p_ax = M.param_logical_axes(cfg)
+    p_sh = _tree_shardings(mesh, rules, p_ax)
+    o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, REPL)}
+    if bf16_params:
+        o_sh["master"] = p_sh
+    b_sh = _tree_shardings(mesh, rules, batch_logical_axes(cfg))
+    m_sh = NamedSharding(mesh, REPL)
+
+    params_abs = M.abstract_params(cfg)
+    opt_abs = jax.eval_shape(
+        lambda p: init_opt_state(p, master_weights=bf16_params), params_abs)
+    batch_abs = train_batch_specs(cfg, shape)
+    metrics_sh = jax.tree.map(lambda _: m_sh,
+                              {"loss": 0, "ntok": 0, "moe_aux": 0, "moe_z": 0,
+                               "grad_norm": 0, "lr": 0})
+
+    jitted = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, metrics_sh),
+                     donate_argnums=(0, 1))
+    return jitted, (params_abs, opt_abs, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                       shape: ShapeSpec):
+    max_len = shape.seq_len
+    if get_flags().pad_vocab:
+        cfg = cfg.with_padded_vocab()
+
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, max_len=max_len)
+
+    p_rules = _serve_param_rules(cfg, rules)
+    p_sh = _tree_shardings(mesh, p_rules, M.param_logical_axes(cfg))
+    b_sh = _tree_shardings(mesh, rules, batch_logical_axes(cfg))
+    st_sh = _tree_shardings(
+        mesh, rules, M.decode_state_logical_axes(cfg, seq_shard=shape.seq_shard))
+    v_ax = "vocab" if cfg.shard_vocab else None
+    logits_sh = NamedSharding(mesh, logical_to_spec(("batch", v_ax), rules))
+
+    params_abs = M.abstract_params(cfg)
+    batch_abs = train_batch_specs(cfg, shape)
+
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, st_sh))
+    return jitted, (params_abs, batch_abs)
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                      shape: ShapeSpec):
+
+    if get_flags().pad_vocab:
+        cfg = cfg.with_padded_vocab()
+
+    def decode_step(params, state, token):
+        return M.decode_step(params, state, token, cfg)
+
+    p_rules = _serve_param_rules(cfg, rules)
+    p_sh = _tree_shardings(mesh, p_rules, M.param_logical_axes(cfg))
+    st_ax = M.decode_state_logical_axes(cfg, seq_shard=shape.seq_shard)
+    st_sh = _tree_shardings(mesh, rules, st_ax)
+    b_ax = None if shape.seq_shard else "batch"   # long_500k: batch=1 replicated
+    tok_sh = NamedSharding(mesh, logical_to_spec((b_ax,), rules))
+    v_ax = "vocab" if cfg.shard_vocab else None
+    logits_sh = NamedSharding(mesh, logical_to_spec((b_ax, v_ax), rules))
+
+    params_abs = M.abstract_params(cfg)
+    state_abs = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                    seq_shard=shape.seq_shard))
+    token_abs = decode_token_specs(cfg, shape)
+
+    jitted = jax.jit(decode_step,
+                     in_shardings=(p_sh, st_sh, tok_sh),
+                     out_shardings=(logits_sh, st_sh),
+                     donate_argnums=(1,))
+    return jitted, (params_abs, state_abs, token_abs)
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, rules: AxisRules, shape_name: str,
+               **kw):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, rules, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, rules, shape)
+    return build_decode_step(cfg, mesh, rules, shape)

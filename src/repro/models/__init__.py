@@ -1,0 +1,11 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params,
+    param_logical_axes,
+    forward,
+    lm_loss,
+    init_decode_state,
+    decode_state_logical_axes,
+    prefill,
+    decode_step,
+)

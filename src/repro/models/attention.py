@@ -1,0 +1,361 @@
+"""Attention: GQA projections + blockwise (memory-bounded) prefill + decode.
+
+Sharding-robust layout (DESIGN.md §5): every einsum operates on the FLAT
+query-head dim H, which is zero-padded to a multiple of the tensor-parallel
+degree (``cfg.num_padded_heads``) — the sharded dim is never reshaped, so
+mesh-axis divisibility holds for all ten archs (phi3's 40 heads, whisper's 6
+heads, ...).  K/V stay at their true KV-head count (replicated over the
+model axis when KV % TP != 0) and are expanded to H heads chunk-by-chunk
+inside the blockwise loops — the expansion never exceeds one chunk.
+
+Pad heads are structurally inert: their q/k/v columns are zero-initialized
+and the attention output is masked before the out-projection, so activations
+AND gradients through the pads are exactly zero (numerically identical to
+the published arch).
+
+The pure-JAX blockwise path mirrors the Pallas flash-attention kernel's math
+(online softmax over KV chunks).  ``causal_skip`` enables the balanced
+two-sided q-chunk pairing that removes the ~2x masked-out FLOPs of naive
+blockwise causal attention (a beyond-paper perf optimization; EXPERIMENTS.md
+§Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dtype, _pdtype, apply_rope, apply_mrope, dense_init
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def kv_map(cfg: ModelConfig) -> np.ndarray:
+    """(H_pad,) static map: query head -> kv head (pads map to kv 0)."""
+    G = cfg.num_heads // cfg.num_kv_heads
+    m = np.arange(cfg.num_padded_heads) // G
+    return np.where(np.arange(cfg.num_padded_heads) < cfg.num_heads, m, 0).astype(np.int32)
+
+
+def head_mask(cfg: ModelConfig) -> np.ndarray | None:
+    if cfg.num_padded_heads == cfg.num_heads:
+        return None
+    return (np.arange(cfg.num_padded_heads) < cfg.num_heads).astype(np.float32)
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, hp, kv, hd = cfg.d_model, cfg.num_padded_heads, cfg.num_kv_heads, cfg.head_dim
+    h = cfg.num_heads
+    dt = _pdtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq = dense_init(k1, (d, hp * hd), d, dt)
+    wo = dense_init(k4, (hp * hd, d), h * hd, dt)
+    if hp != h:  # zero the pad-head slices (structurally inert)
+        mask = jnp.repeat(jnp.asarray(head_mask(cfg)), hd)
+        wq = wq * mask[None, :].astype(dt)
+        wo = wo * mask[:, None].astype(dt)
+    p = {
+        "wq": wq,
+        "wk": dense_init(k2, (d, kv * hd), d, dt),
+        "wv": dense_init(k3, (d, kv * hd), d, dt),
+        "wo": wo,
+    }
+    kv_ax = "kv_heads" if cfg.shard_kv_heads else "none"
+    ax = {"wq": ("fsdp", "heads"), "wk": ("fsdp", kv_ax),
+          "wv": ("fsdp", kv_ax), "wo": ("heads", "fsdp")}
+    if cfg.use_bias:
+        bq = jnp.zeros((hp * hd,), dt)
+        p["bq"] = bq
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+        ax["bq"] = ("heads",)
+        ax["bk"] = (kv_ax,)
+        ax["bv"] = (kv_ax,)
+    return p, ax
+
+
+def qkv_project(p: Params, x: jax.Array, cfg: ModelConfig, positions):
+    """x: (B,S,D) -> q:(B,S,Hp,hd), k,v:(B,S,KV,hd) with RoPE applied."""
+    B, S, _ = x.shape
+    dt = _dtype(cfg)
+    x = x.astype(dt)
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.num_padded_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kv_ax = "kv_heads" if cfg.shard_kv_heads else None
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", kv_ax, None))
+    v = constrain(v, ("batch", "seq", kv_ax, None))
+    return q, k, v
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (odd seq lens like whisper's
+    1500 encoder frames get 500-sized tiles instead of an assert)."""
+    if n <= target:
+        return n
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def _expand_kv(k_c: jax.Array, kvm: jax.Array) -> jax.Array:
+    """(B, C, KV, hd) -> (B, C, Hp, hd) via the static head map (one chunk)."""
+    if k_c.shape[2] == kvm.shape[0]:  # MHA / already expanded: identity map
+        return k_c
+    return jnp.take(k_c, kvm, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, cfg: ModelConfig, *, causal: bool = True,
+                        causal_skip: bool = False) -> jax.Array:
+    """Memory-bounded attention: scan over q chunks (outer) / kv chunks (inner).
+
+    q: (B,S,Hp,hd), k/v: (B,T,KV,hd) -> (B,S,Hp,hd).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    Cq = _pick_chunk(S, cfg.attn_q_chunk)
+    Ck = _pick_chunk(T, cfg.attn_kv_chunk)
+    assert S % Cq == 0 and T % Ck == 0, (S, Cq, T, Ck)
+    nq, nk = S // Cq, T // Ck
+    kvm = jnp.asarray(kv_map(cfg))
+
+    qr = q.reshape(B, nq, Cq, H, hd).transpose(1, 0, 2, 3, 4)      # (nq,B,Cq,H,hd)
+    kr = k.reshape(B, nk, Ck, k.shape[2], hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, Ck, v.shape[2], hd).transpose(1, 0, 2, 3, 4)
+
+    if causal and causal_skip and nq == nk and nq % 2 == 0:
+        return _blockwise_causal_balanced(qr, kr, vr, cfg, scale, kvm,
+                                          B, S, H, hd, Cq, Ck)
+
+    def q_step(_, qi):
+        q_c, iq = qi                              # (B,Cq,H,hd), chunk index
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_c, v_c, ik = ki
+            kx = _expand_kv(k_c, kvm).astype(jnp.float32)          # (B,Ck,H,hd)
+            vx = _expand_kv(v_c, kvm).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bchd->bhqc", q_c.astype(jnp.float32), kx,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = iq * Cq + jnp.arange(Cq)
+                kpos = ik * Ck + jnp.arange(Ck)
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhqc,bchd->bhqd", p, vx,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, H, Cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, Cq), jnp.float32)
+        a0 = jnp.zeros((B, H, Cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kr, vr, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)               # (B,H,Cq,hd)
+        return None, out.transpose(0, 2, 1, 3)                     # (B,Cq,H,hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))     # (nq,B,Cq,H,hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def _blockwise_causal_balanced(qr, kr, vr, cfg, scale, kvm, B, S, H, hd, Cq, Ck):
+    """Causal attention with two-sided q-chunk pairing (FLOP-balanced).
+
+    Pairs q-chunk i with q-chunk n-1-i: together they need exactly n+1
+    kv-tile visits, constant across pairs.  A 3-way ``lax.switch`` per kv
+    step (both rows / hi row only / skip) keeps shapes static while issuing
+    ~n(n+1)/2 tile visits total instead of n^2.
+    """
+    n = qr.shape[0]
+    in_dtype = qr.dtype
+    half = n // 2
+
+    idx_lo = jnp.arange(half)
+    idx_hi = n - 1 - idx_lo
+    q_pair = jnp.stack([qr[idx_lo], qr[idx_hi]], axis=1)   # (half,2,B,Cq,H,hd)
+
+    def pair_step(_, pi):
+        q2, i = pi                                          # (2,B,Cq,H,hd)
+        qpos2 = jnp.stack([i * Cq + jnp.arange(Cq),
+                           (n - 1 - i) * Cq + jnp.arange(Cq)])   # (2, Cq)
+
+        def tile(q_rows, kx, kpos, qpos_rows):
+            s = jnp.einsum("rbqhd,bchd->rbhqc", q_rows.astype(jnp.float32), kx,
+                           preferred_element_type=jnp.float32) * scale
+            mask = qpos_rows[:, None, None, :, None] >= kpos[None, None, None, None, :]
+            return jnp.where(mask, s, NEG_INF)
+
+        def kv_step(carry, j):
+            m, l, acc = carry                               # (2,B,H,Cq), ...
+            kx = _expand_kv(kr[j], kvm).astype(jnp.float32)
+            vx = _expand_kv(vr[j], kvm).astype(jnp.float32)
+            kpos = j * Ck + jnp.arange(Ck)
+
+            def both(op):
+                m, l, acc = op
+                s = tile(q2, kx, kpos, qpos2)
+                m_new = jnp.maximum(m, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                pv = jnp.einsum("rbhqc,bchd->rbhqd", p, vx,
+                                preferred_element_type=jnp.float32)
+                return m_new, l * corr + p.sum(-1), acc * corr[..., None] + pv
+
+            def hi_only(op):
+                m, l, acc = op
+                s1 = tile(q2[1:2], kx, kpos, qpos2[1:2])
+                m1 = jnp.maximum(m[1:2], s1.max(-1))
+                p1 = jnp.exp(s1 - m1[..., None])
+                c1 = jnp.exp(m[1:2] - m1)
+                pv1 = jnp.einsum("rbhqc,bchd->rbhqd", p1, vx,
+                                 preferred_element_type=jnp.float32)
+                return (jnp.concatenate([m[0:1], m1]),
+                        jnp.concatenate([l[0:1], l[1:2] * c1 + p1.sum(-1)]),
+                        jnp.concatenate([acc[0:1], acc[1:2] * c1[..., None] + pv1]))
+
+            def skip(op):
+                return op
+
+            branch = jnp.where(j <= i, 0, jnp.where(j <= n - 1 - i, 1, 2))
+            return jax.lax.switch(branch, (both, hi_only, skip), (m, l, acc)), None
+
+        m0 = jnp.full((2, B, H, Cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((2, B, H, Cq), jnp.float32)
+        a0 = jnp.zeros((2, B, H, Cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 1, 3, 2, 4)           # (2,B,Cq,H,hd)
+
+    _, outs = jax.lax.scan(pair_step, None, (q_pair, idx_lo))
+    out_lo = outs[:, 0]
+    out_hi = outs[:, 1][::-1]
+    out = jnp.concatenate([out_lo, out_hi], 0)              # (n,B,Cq,H,hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out.astype(in_dtype)
+
+
+def full_attention(q, k, v, cfg: ModelConfig, *, causal: bool = True) -> jax.Array:
+    """Reference O(S^2)-memory attention (small shapes / oracles only)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    kvm = jnp.asarray(kv_map(cfg))
+    kx = _expand_kv(k, kvm).astype(jnp.float32)
+    vx = _expand_kv(v, kvm).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32), kx) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p, vx)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one new token against a KV cache) — chunked flash-decode
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, length, cfg: ModelConfig, *,
+                     seq_shard=False, chunk: int = 4096) -> jax.Array:
+    """q: (B,1,Hp,hd); k/v_cache: (B,T,KV,hd); length: (B,) valid prefix.
+
+    Online-softmax scan over cache chunks: the expanded (B, chunk, Hp, hd)
+    tile is the only transient.  With ``seq_shard`` the cache is
+    sequence-sharded over the data axis (long_500k): the chunk axis keeps
+    that sharding and XLA reduces the partial softmax stats across shards —
+    flash-decoding expressed in SPMD.
+    """
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    scale = hd ** -0.5
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    kvm = jnp.asarray(kv_map(cfg))
+    q0 = q[:, 0].astype(jnp.float32)                        # (B,H,hd)
+
+    if seq_shard:
+        # Sequence-sharded cache: dense sharded-softmax path — scores stay
+        # sharded on T, XLA reduces the softmax stats and the weighted sum
+        # across the shards (flash-decoding in SPMD).
+        #   "data"  (long_500k): batch=1 replicated, heads stay TP-sharded.
+        #   "model" (serve_seq_sharded_kv): KV heads not TP-divisible — the
+        #   model axis carries the sequence split, so q heads are gathered
+        #   (replicated) for the score einsum and re-sharded afterwards.
+        kx = _expand_kv(k_cache, kvm).astype(jnp.float32)
+        vx = _expand_kv(v_cache, kvm).astype(jnp.float32)
+        s = jnp.einsum("bhd,bthd->bht", q0, kx,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where((jnp.arange(T)[None] < length[:, None])[:, None], s, NEG_INF)
+        if seq_shard == "model":
+            s = constrain(s, ("batch", None, "kv_seq_model"))
+        else:
+            s = constrain(s, (None, "heads", "kv_seq_shard"))
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bht,bthd->bhd", p, vx, preferred_element_type=jnp.float32)
+        out = out[:, None].astype(q.dtype)
+        if seq_shard == "model":
+            out = constrain(out, ("batch", "seq", "heads", None))
+        return out
+
+    kr = k_cache.reshape(B, nc, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vr = v_cache.reshape(B, nc, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def kv_step(carry, ki):
+        m, l, acc = carry
+        k_c, v_c, ic = ki
+        kx = _expand_kv(k_c, kvm).astype(jnp.float32)        # (B,chunk,H,hd)
+        vx = _expand_kv(v_c, kvm).astype(jnp.float32)
+        s = jnp.einsum("bhd,bchd->bhc", q0, kx,
+                       preferred_element_type=jnp.float32) * scale
+        pos = ic * chunk + jnp.arange(chunk)
+        s = jnp.where((pos[None] < length[:, None])[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhc,bchd->bhd", p, vx, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    a0 = jnp.zeros((B, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kr, vr, jnp.arange(nc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out[:, None].astype(q.dtype)                      # (B,1,H,hd)
+
+
+def attn_output(p: Params, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S = o.shape[:2]
+    dt = _dtype(cfg)
+    hm = head_mask(cfg)
+    if hm is not None:  # keep pad heads inert in both value and gradient
+        o = o * jnp.asarray(hm, o.dtype)[None, None, :, None]
+    out = o.reshape(B, S, cfg.num_padded_heads * cfg.head_dim).astype(dt) @ p["wo"].astype(dt)
+    return constrain(out, ("batch", "seq", "embed"))

@@ -1,0 +1,194 @@
+"""Common neural-net building blocks (pure JAX, functional, dict params).
+
+Every ``init_*`` returns ``(params, logical_axes)`` pytrees with identical
+structure; logical axis names are resolved to mesh axes by
+``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (maxtext-style scale 1/sqrt(fan_in))."""
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        p = {"scale": jnp.ones((d,), _pdtype(cfg)), "bias": jnp.zeros((d,), _pdtype(cfg))}
+        ax = {"scale": ("none",), "bias": ("none",)}
+    else:
+        p = {"scale": jnp.ones((d,), _pdtype(cfg))}
+        ax = {"scale": ("none",)}
+    return p, ax
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, N, H); positions: (B, S) int32."""
+    h = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(h, theta), jnp.float32)  # (h/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, h/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, N, H); positions3: (3, B, S) — (temporal, height, width) position
+    streams.  The rotary half-dim is partitioned into three sections, each
+    rotated by its own position stream (interleaved as in the HF reference).
+    """
+    h = x.shape[-1]
+    half = h // 2
+    sec = np.asarray(sections, np.int64)
+    sec = (sec * half / sec.sum()).astype(np.int64)
+    sec[2] = half - sec[0] - sec[1]
+    freqs = jnp.asarray(rope_freqs(h, theta), jnp.float32)  # (half,)
+    # Build per-frequency position source: section 0 uses temporal, 1 height, 2 width.
+    src = np.concatenate([np.full(int(s), i, np.int32) for i, s in enumerate(sec)])
+    pos = jnp.take(positions3, jnp.asarray(src), axis=0)           # (half, B, S)
+    angles = jnp.transpose(pos, (1, 2, 0)).astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, gated: bool = True):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if gated:
+        p = {
+            "wi": dense_init(k1, (d, f), d, dt),
+            "wg": dense_init(k2, (d, f), d, dt),
+            "wo": dense_init(k3, (f, d), f, dt),
+        }
+        ax = {"wi": ("fsdp", "mlp"), "wg": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+    else:
+        p = {
+            "wi": dense_init(k1, (d, f), d, dt),
+            "wo": dense_init(k3, (f, d), f, dt),
+        }
+        ax = {"wi": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((f,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+        ax["bi"] = ("mlp",)
+        ax["bo"] = ("none",)
+    return p, ax
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = _dtype(cfg)
+    x = x.astype(dt)
+    h = x @ p["wi"].astype(dt)
+    if "bi" in p:
+        h = h + p["bi"].astype(dt)
+    if "wg" in p:
+        g = x @ p["wg"].astype(dt)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    o = h @ p["wo"].astype(dt)
+    if "bo" in p:
+        o = o + p["bo"].astype(dt)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    dt = _pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    v_ax = "vocab" if cfg.shard_vocab else "none"
+    p = {"tok": embed_init(k1, (cfg.vocab_size, cfg.d_model), dt)}
+    ax = {"tok": (v_ax, "fsdp")}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), cfg.d_model, dt)
+        ax["head"] = ("fsdp", v_ax)
+    return p, ax
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok"].astype(_dtype(cfg)), tokens, axis=0)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["head"] if "head" in p else p["tok"].T
+    logits = x.astype(_dtype(cfg)) @ w.astype(_dtype(cfg))
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.real_vocab_size:  # padded vocab: pad columns can never win
+        pad_mask = jnp.arange(cfg.vocab_size) >= cfg.real_vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    v_ax = "vocab" if cfg.shard_vocab else None
+    return constrain(logits, ("batch", "seq", v_ax))

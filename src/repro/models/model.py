@@ -1,0 +1,672 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Families:
+  dense  — llama-style GQA + SwiGLU (deepseek, yi, phi3, command-r parallel-block)
+  vlm    — dense + M-RoPE (qwen2-vl); vision frontend is a stub (precomputed
+           patch embeddings may be supplied via batch["embeds"])
+  moe    — dense attention + expert-parallel MoE FFN (phi3.5-moe, qwen3-moe)
+  ssm    — mamba1 stack (falcon-mamba)
+  hybrid — mamba2 stack + one *shared* attention block applied every
+           ``attn_every`` layers (zamba2)
+  audio  — whisper-style enc-dec; conv frontend is a stub (precomputed frame
+           embeddings supplied via batch["frames"])
+
+Homogeneous layer stacks are parameter-stacked and driven by ``lax.scan``
+(bounded compile time at 80 layers) with per-layer remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Params, _dtype, apply_mlp, apply_norm, embed_tokens, init_embed, init_mlp,
+    init_norm, unembed,
+)
+from repro.models.moe import init_moe, moe_block
+from repro.parallel.sharding import constrain
+
+LOSS_CHUNK = 2048
+
+
+def _is_ax(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def _stack_axes(ax):
+    return jax.tree.map(lambda a: ("layers",) + a, ax, is_leaf=_is_ax)
+
+
+def _stacked_init(init_fn, key, n):
+    """init_fn(key) -> (params, ax).  Returns params stacked on axis 0."""
+    _, ax = init_fn(key)  # structure + axes only (arrays discarded)
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    return stacked, _stack_axes(ax)
+
+
+# ---------------------------------------------------------------------------
+# per-family layer inits
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg: ModelConfig, with_cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    ax: dict[str, Any] = {}
+    p["ln1"], ax["ln1"] = init_norm(cfg)
+    p["attn"], ax["attn"] = attn.init_attention(ks[0], cfg)
+    if not cfg.parallel_block:
+        p["ln2"], ax["ln2"] = init_norm(cfg)
+    if with_cross:
+        p["lnx"], ax["lnx"] = init_norm(cfg)
+        p["xattn"], ax["xattn"] = attn.init_attention(ks[1], cfg)
+    if cfg.family == "moe":
+        p["moe"], ax["moe"] = init_moe(ks[2], cfg)
+    else:
+        p["mlp"], ax["mlp"] = init_mlp(ks[3], cfg)
+    return p, ax
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    p: dict[str, Any] = {}
+    ax: dict[str, Any] = {}
+    p["ln1"], ax["ln1"] = init_norm(cfg)
+    if cfg.ssm_version == 1:
+        p["mamba"], ax["mamba"] = ssm.init_mamba1(key, cfg)
+    else:
+        p["mamba"], ax["mamba"] = ssm.init_mamba2(key, cfg)
+    return p, ax
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    p, _ = _init_all(cfg, key)
+    return p
+
+
+def param_logical_axes(cfg: ModelConfig):
+    box = {}
+
+    def f():
+        p, ax = _init_all(cfg, jax.random.PRNGKey(0))
+        box["ax"] = ax
+        return p
+
+    jax.eval_shape(f)
+    return box["ax"]
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _init_all(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    ax: dict[str, Any] = {}
+    p["embed"], ax["embed"] = init_embed(ks[0], cfg)
+    p["final_norm"], ax["final_norm"] = init_norm(cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["layers"], ax["layers"] = _stacked_init(
+            lambda k: _init_dense_layer(k, cfg), ks[1], cfg.num_layers)
+    elif cfg.family == "ssm":
+        p["layers"], ax["layers"] = _stacked_init(
+            lambda k: _init_ssm_layer(k, cfg), ks[1], cfg.num_layers)
+    elif cfg.family == "hybrid":
+        p["layers"], ax["layers"] = _stacked_init(
+            lambda k: _init_ssm_layer(k, cfg), ks[1], cfg.num_layers)
+        p["shared_attn"], ax["shared_attn"] = _init_dense_layer(ks[2], cfg)
+    elif cfg.family == "audio":
+        p["layers"], ax["layers"] = _stacked_init(
+            lambda k: _init_dense_layer(k, cfg, with_cross=True), ks[1], cfg.num_layers)
+        enc_cfg = cfg
+        p["enc_layers"], ax["enc_layers"] = _stacked_init(
+            lambda k: _init_dense_layer(k, enc_cfg), ks[3], cfg.encoder_layers)
+        p["enc_norm"], ax["enc_norm"] = init_norm(cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# layer application (training / prefill / decode share one code path)
+# ---------------------------------------------------------------------------
+
+def _dense_layer_apply(lp, x, cfg: ModelConfig, positions, *, causal=True,
+                       cache=None, pos=None, enc_kv=None, causal_skip=False):
+    """Returns (x_out, (aux, zloss), new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+    h = apply_norm(lp["ln1"], x, cfg)
+    q, k, v = attn.qkv_project(lp["attn"], h, cfg, positions)
+    new_cache = cache
+    if cache is None:
+        o = attn.blockwise_attention(q, k, v, cfg, causal=causal, causal_skip=causal_skip)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        length = jnp.full((x.shape[0],), pos + q.shape[1], jnp.int32)
+        from repro.perf import get_flags as _gf
+        if cache.get("seq_shard", False):
+            seq_mode = "data"                       # long_500k shapes
+        elif _gf().serve_seq_sharded_kv and not cfg.shard_kv_heads:
+            seq_mode = "model"                      # PerfFlags serving layout
+        else:
+            seq_mode = False
+        o = attn.decode_attention(q, ck, cv, length, cfg, seq_shard=seq_mode)
+        new_cache = dict(cache, k=ck, v=cv)
+    from repro.perf import get_flags
+
+    if cfg.parallel_block and get_flags().parallel_fused_ar:
+        # Sum the attn and mlp partial outputs BEFORE any sharding constraint:
+        # the tensor-parallel combine becomes ONE all-reduce per layer.
+        B_, S_ = o.shape[:2]
+        hm = attn.head_mask(cfg)
+        if hm is not None:
+            o = o * jnp.asarray(hm, o.dtype)[None, None, :, None]
+        dt = _dtype(cfg)
+        a_part = o.reshape(B_, S_, -1).astype(dt) @ lp["attn"]["wo"].astype(dt)
+        g = h.astype(dt) @ lp["mlp"]["wg"].astype(dt)
+        u = h.astype(dt) @ lp["mlp"]["wi"].astype(dt)
+        m_part = (jax.nn.silu(g) * u) @ lp["mlp"]["wo"].astype(dt)
+        out = constrain(a_part + m_part, ("batch", "seq", "embed"))
+        return x + out, (aux, zl), new_cache
+
+    a_out = attn.attn_output(lp["attn"], o, cfg)
+
+    if cfg.parallel_block:
+        m_out = apply_mlp(lp["mlp"], h, cfg)
+        return x + a_out + m_out, (aux, zl), new_cache
+
+    x = x + a_out
+    if enc_kv is not None:  # cross attention (whisper decoder)
+        hx = apply_norm(lp["lnx"], x, cfg)
+        qx = hx.astype(_dtype(cfg)) @ lp["xattn"]["wq"].astype(_dtype(cfg))
+        B, S = hx.shape[:2]
+        qx = qx.reshape(B, S, cfg.num_padded_heads, cfg.head_dim)
+        ek, ev, elen = enc_kv
+        if S == 1:
+            ox = attn.decode_attention(qx, ek, ev, elen, cfg)
+        else:
+            ox = attn.blockwise_attention(qx, ek, ev, cfg, causal=False)
+        x = x + attn.attn_output(lp["xattn"], ox, cfg)
+
+    h2 = apply_norm(lp["ln2"], x, cfg)
+    if cfg.family == "moe":
+        m_out, aux, zl = moe_block(lp["moe"], h2, cfg)
+    else:
+        m_out = apply_mlp(lp["mlp"], h2, cfg)
+    return x + m_out, (aux, zl), new_cache
+
+
+def _ssm_layer_apply(lp, x, cfg: ModelConfig, state=None):
+    h = apply_norm(lp["ln1"], x, cfg)
+    if cfg.ssm_version == 1:
+        o, new_state = ssm.mamba1_block(lp["mamba"], h, cfg, state)
+    else:
+        o, new_state = ssm.mamba2_block(lp["mamba"], h, cfg, state)
+    return x + o, new_state
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# trunk forward (training: full teacher-forced sequence -> final hidden)
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params: Params, batch: dict, cfg: ModelConfig,
+                   *, causal_skip: bool = False):
+    """Returns (hidden (B,S,D) after final norm, aux_losses dict)."""
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    B, S = x.shape[:2]
+    if cfg.mrope:
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+            positions = jnp.stack([base, base, base])
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+
+    aux = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        f = _maybe_remat(
+            lambda lp, x: _dense_layer_apply(lp, x, cfg, positions,
+                                             causal_skip=causal_skip)[:2], cfg)
+
+        def body(carry, lp):
+            x, a, z = carry
+            x, (da, dz) = f(lp, x)
+            return (x, a + da, z + dz), None
+
+        (x, aux, zl), _ = jax.lax.scan(body, (x, aux, zl), params["layers"])
+
+    elif cfg.family == "ssm":
+        f = _maybe_remat(lambda lp, x: _ssm_layer_apply(lp, x, cfg)[0], cfg)
+
+        def body(x, lp):
+            return f(lp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def super_fn(sp, x):
+            def inner(x, lp):
+                return _ssm_layer_apply(lp, x, cfg)[0], None
+            x, _ = jax.lax.scan(inner, x, sp)
+            x, _, _ = _dense_layer_apply(shared, x, cfg, positions,
+                                         causal_skip=causal_skip)
+            return x
+
+        f = _maybe_remat(super_fn, cfg)
+
+        def body(x, sp):
+            return f(sp, x), None
+
+        x, _ = jax.lax.scan(body, x, stacked)
+
+    elif cfg.family == "audio":
+        enc = encode_audio(params, batch["frames"], cfg)
+        elen = jnp.full((B,), enc.shape[1], jnp.int32)
+        f = _maybe_remat(
+            lambda lp, x, ek, ev: _dense_layer_apply(
+                lp, x, cfg, positions, enc_kv=(ek, ev, elen),
+                causal_skip=causal_skip)[:2], cfg)
+
+        def body(carry, lp):
+            x = carry
+            ek, ev = _cross_kv(lp["xattn"], enc, cfg)
+            x, _ = f(lp, x, ek, ev)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return constrain(x, ("batch", "seq", "embed")), {"moe_aux": aux / max(cfg.num_layers, 1),
+                                                     "moe_z": zl / max(cfg.num_layers, 1)}
+
+
+def _cross_kv(xp, enc, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    B, T, _ = enc.shape
+    k = (enc.astype(dt) @ xp["wk"].astype(dt)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc.astype(dt) @ xp["wv"].astype(dt)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def encode_audio(params: Params, frames, cfg: ModelConfig):
+    """Whisper encoder over precomputed (stub) conv-frontend frame embeddings."""
+    x = frames.astype(_dtype(cfg))
+    B, T = x.shape[:2]
+    positions = jnp.arange(T, dtype=jnp.int32)[None].repeat(B, 0)
+    f = _maybe_remat(
+        lambda lp, x: _dense_layer_apply(lp, x, cfg, positions, causal=False)[0], cfg)
+
+    def body(x, lp):
+        return f(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig):
+    """Full logits (small models / tests only — O(B,S,V) memory)."""
+    h, aux = forward_hidden(params, batch, cfg)
+    return unembed(params["embed"], h, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over sequence to bound the logits buffer)
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            *, causal_skip: bool = False):
+    h, aux = forward_hidden(params, batch, cfg, causal_skip=causal_skip)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate([jnp.ones((B, S - 1), jnp.float32),
+                            jnp.zeros((B, 1), jnp.float32)], axis=1)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+
+    C = min(LOSS_CHUNK, S)
+    assert S % C == 0
+    n = S // C
+    hr = h.reshape(B, n, C, -1).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, C).transpose(1, 0, 2)
+    mr = mask.reshape(B, n, C).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hc, lc, mc = inp
+        logits = unembed(params["embed"], hc, cfg).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hr, lr, mr))
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = total / ntok
+    if cfg.family == "moe":
+        loss = loss + cfg.aux_loss_coef * aux["moe_aux"] + cfg.router_z_coef * aux["moe_z"]
+    return loss, {"loss": loss, "ntok": ntok, **aux}
+
+
+# ---------------------------------------------------------------------------
+# decode: state init / prefill / single-token step
+# ---------------------------------------------------------------------------
+
+def _kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                   seq_shard: bool):
+    dt = jnp.dtype(cfg.dtype)
+    kv = {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+    if seq_shard:
+        kv["seq_shard"] = jnp.ones((n_layers,), jnp.bool_)
+    return kv
+
+
+def _kv_cache_axes(cfg: ModelConfig, seq_shard: bool):
+    from repro.perf import get_flags
+
+    seq_ax = "kv_seq_shard" if seq_shard else "kv_seq"
+    kv_ax = "kv_heads" if cfg.shard_kv_heads else None
+    if (get_flags().serve_seq_sharded_kv and not seq_shard
+            and not cfg.shard_kv_heads):
+        # KV heads are not TP-divisible -> the cache would replicate over the
+        # model axis and overflow HBM at 32k; shard its sequence dim instead
+        # (sharded-softmax decode handles it like the long_500k path).
+        seq_ax = "kv_seq_model"
+    # long_500k runs at global_batch=1: the batch dim cannot shard — the
+    # sequence axis carries the data-parallel split instead.
+    b_ax = None if seq_shard else "batch"
+    ax = {"k": ("layers", b_ax, seq_ax, kv_ax, None),
+          "v": ("layers", b_ax, seq_ax, kv_ax, None)}
+    if seq_shard:
+        ax["seq_shard"] = ("layers",)
+    return ax
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      *, seq_shard: bool = False) -> dict:
+    st: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        st["kv"] = _kv_cache_init(cfg, batch, max_len, cfg.num_layers, seq_shard)
+    elif cfg.family == "ssm":
+        one = (ssm.mamba1_state_init(cfg, batch) if cfg.ssm_version == 1
+               else ssm.mamba2_state_init(cfg, batch))
+        st["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+    elif cfg.family == "hybrid":
+        one = ssm.mamba2_state_init(cfg, batch)
+        st["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+        n_super = cfg.num_layers // cfg.attn_every
+        st["kv"] = _kv_cache_init(cfg, batch, max_len, n_super, seq_shard)
+    elif cfg.family == "audio":
+        st["kv"] = _kv_cache_init(cfg, batch, max_len, cfg.num_layers, False)
+        dt = jnp.dtype(cfg.dtype)
+        st["enc_kv"] = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    return st
+
+
+def _no_batch(ax_tree):
+    """Replace the 'batch' logical axis with None (batch=1 decode shapes)."""
+    return jax.tree.map(
+        lambda a: tuple(None if x == "batch" else x for x in a),
+        ax_tree, is_leaf=_is_ax)
+
+
+def decode_state_logical_axes(cfg: ModelConfig, *, seq_shard: bool = False):
+    ax: dict[str, Any] = {"pos": ()}
+    if cfg.family in ("dense", "vlm", "moe"):
+        ax["kv"] = _kv_cache_axes(cfg, seq_shard)
+    elif cfg.family == "ssm":
+        one = (ssm.mamba1_state_axes() if cfg.ssm_version == 1
+               else ssm.mamba2_state_axes())
+        ax["ssm"] = _stack_axes(one)
+        if seq_shard:
+            ax["ssm"] = _no_batch(ax["ssm"])
+    elif cfg.family == "hybrid":
+        ax["ssm"] = _stack_axes(ssm.mamba2_state_axes())
+        if seq_shard:
+            ax["ssm"] = _no_batch(ax["ssm"])
+        ax["kv"] = _kv_cache_axes(cfg, seq_shard)
+    elif cfg.family == "audio":
+        ax["kv"] = _kv_cache_axes(cfg, False)
+        kv_ax = "kv_heads" if cfg.shard_kv_heads else None
+        ax["enc_kv"] = {"k": ("layers", "batch", None, kv_ax, None),
+                        "v": ("layers", "batch", None, kv_ax, None),
+                        "len": ("batch",)}
+    return ax
+
+
+def decode_step(params: Params, state: dict, token: jax.Array, cfg: ModelConfig):
+    """token: (B,) int32.  Returns (logits (B,V), new_state)."""
+    B = token.shape[0]
+    pos = state["pos"]
+    x = embed_tokens(params["embed"], token[:, None], cfg)          # (B,1,D)
+    if cfg.mrope:
+        p1 = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        positions = jnp.stack([p1, p1, p1])
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    new_state = dict(state, pos=pos + 1)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            lp, ck, cv = inp
+            cache = {"k": ck, "v": cv}
+            if "seq_shard" in state["kv"]:
+                cache["seq_shard"] = True
+            x, _, nc = _dense_layer_apply(lp, x, cfg, positions, cache=cache, pos=pos)
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"],
+                                             state["kv"]["k"], state["kv"]["v"]))
+        new_state["kv"] = dict(state["kv"], k=nk, v=nv)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            x, ns = _ssm_layer_apply(lp, x, cfg, state=st)
+            return x, ns
+
+        x, nss = jax.lax.scan(body, x, (params["layers"], state["ssm"]))
+        new_state["ssm"] = nss
+
+    elif cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        sstates = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            state["ssm"])
+        shared = params["shared_attn"]
+
+        def body(x, inp):
+            sp, st, ck, cv = inp
+
+            def inner(x, li):
+                lp, lst = li
+                x, ns = _ssm_layer_apply(lp, x, cfg, state=lst)
+                return x, ns
+
+            x, nst = jax.lax.scan(inner, x, (sp, st))
+            cache = {"k": ck, "v": cv}
+            if "seq_shard" in state["kv"]:
+                cache["seq_shard"] = True
+            x, _, nc = _dense_layer_apply(shared, x, cfg, positions, cache=cache, pos=pos)
+            return x, (nst, nc["k"], nc["v"])
+
+        x, (nss, nk, nv) = jax.lax.scan(
+            body, x, (stacked, sstates, state["kv"]["k"], state["kv"]["v"]))
+        new_state["ssm"] = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), nss)
+        new_state["kv"] = dict(state["kv"], k=nk, v=nv)
+
+    elif cfg.family == "audio":
+        ek, ev = state["enc_kv"]["k"], state["enc_kv"]["v"]
+        elen = state["enc_kv"]["len"]
+
+        def body(x, inp):
+            lp, ck, cv, eki, evi = inp
+            cache = {"k": ck, "v": cv}
+            x, _, nc = _dense_layer_apply(lp, x, cfg, positions, cache=cache,
+                                          pos=pos, enc_kv=(eki, evi, elen))
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"],
+                                             state["kv"]["k"], state["kv"]["v"],
+                                             ek, ev))
+        new_state["kv"] = dict(state["kv"], k=nk, v=nv)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_state
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, max_len: int | None = None):
+    """Prefill: one trunk pass that emits (last-position logits, decode state).
+
+    Attention layers store their K/V into a fresh cache of size
+    ``max_len or S``; SSM layers keep the chunked scan's final carry.
+    """
+    if "tokens" in batch:
+        B, S = batch["tokens"].shape
+    else:
+        B, S = batch["embeds"].shape[:2]
+    max_len = max_len or S
+    state = init_decode_state(cfg, B, max_len)
+    x_final, state = _fill_state(params, batch, cfg, state, max_len)
+    state["pos"] = jnp.asarray(S, jnp.int32)
+    h = apply_norm(params["final_norm"], x_final[:, -1:], cfg)
+    logits = unembed(params["embed"], h, cfg)[:, 0]
+    return logits, state
+
+
+def _ssm_layer_capture(lp, x, cfg: ModelConfig):
+    """SSM layer forward that also returns the final scan state (prefill)."""
+    h = apply_norm(lp["ln1"], x, cfg)
+    if cfg.ssm_version == 1:
+        o, st = ssm.mamba1_block(lp["mamba"], h, cfg, return_final_state=True)
+    else:
+        o, st = ssm.mamba2_block(lp["mamba"], h, cfg, return_final_state=True)
+    return x + o, st
+
+
+def _fill_state(params, batch, cfg, state, max_len):
+    """One capture pass over the trunk filling KV caches and/or SSM states."""
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    B, S = x.shape[:2]
+    if cfg.mrope:
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+            positions = jnp.stack([base, base, base])
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    pad = max_len - S
+    kdt = jnp.dtype(cfg.dtype)
+
+    def padded(k, v):
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kdt)
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kdt)
+        return kp, vp
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            _, k, v = attn.qkv_project(lp["attn"], h, cfg, positions)
+            x, _, _ = _dense_layer_apply(lp, x, cfg, positions)
+            return x, padded(k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        return x, dict(state, kv=dict(state["kv"], k=ks, v=vs))
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            x, st = _ssm_layer_capture(lp, x, cfg)
+            return x, st
+
+        x, sstates = jax.lax.scan(body, x, params["layers"])
+        return x, dict(state, ssm=sstates)
+
+    if cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def body(x, sp):
+            def inner(x, lp):
+                return _ssm_layer_capture(lp, x, cfg)
+
+            x, sst = jax.lax.scan(inner, x, sp)
+            h = apply_norm(shared["ln1"], x, cfg)
+            _, k, v = attn.qkv_project(shared["attn"], h, cfg, positions)
+            x, _, _ = _dense_layer_apply(shared, x, cfg, positions)
+            return x, (sst, *padded(k, v))
+
+        x, (sst, ks, vs) = jax.lax.scan(body, x, stacked)
+        # (n_super, attn_every, ...) -> (num_layers, ...)
+        sstates = jax.tree.map(lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), sst)
+        return x, dict(state, ssm=sstates, kv=dict(state["kv"], k=ks, v=vs))
+
+    if cfg.family == "audio":
+        enc = encode_audio(params, batch["frames"], cfg)
+        elen = jnp.full((B,), enc.shape[1], jnp.int32)
+
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            _, k, v = attn.qkv_project(lp["attn"], h, cfg, positions)
+            ek, ev = _cross_kv(lp["xattn"], enc, cfg)
+            x, _, _ = _dense_layer_apply(lp, x, cfg, positions, enc_kv=(ek, ev, elen))
+            return x, (padded(k, v), (ek.astype(kdt), ev.astype(kdt)))
+
+        x, ((ks, vs), (eks, evs)) = jax.lax.scan(body, x, params["layers"])
+        enc_kv = {"k": eks, "v": evs,
+                  "len": jnp.full((B,), enc.shape[1], jnp.int32)}
+        return x, dict(state, kv=dict(state["kv"], k=ks, v=vs), enc_kv=enc_kv)
+
+    raise ValueError(cfg.family)

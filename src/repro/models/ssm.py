@@ -1,0 +1,316 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+TPU adaptation: the CUDA selective-scan kernel is recast as a *chunked* scan —
+``lax.scan`` over chunks with an intra-chunk associative scan (mamba1) or the
+matmul-form SSD recurrence (mamba2).  The ``(B, L, d_inner, N)`` tensor is
+never materialized in HBM; peak live memory is one chunk.  The decode path is
+the O(1)-state single-step update.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dtype, _pdtype, dense_init
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    """x: (B, L, C); w: (C, W) depthwise; returns (B, L, C)."""
+    W = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # sum of shifted slices — W is tiny (4), unrolled adds beat a conv op here.
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    L = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + L].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  x_t: (B, C); conv_state: (B, W-1, C)."""
+    W = w.shape[-1]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg: ModelConfig):
+    d, di, n, dtr, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    dt = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, dt),
+        "conv_w": dense_init(ks[1], (di, cw), cw, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), di, dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtr, dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))).astype(dt),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[4], (di, d), di, dt),
+    }
+    ax = {
+        "in_proj": ("fsdp", "ssm_inner"),
+        "conv_w": ("ssm_inner", "none"),
+        "conv_b": ("ssm_inner",),
+        "x_proj": ("ssm_inner", "none"),
+        "dt_proj": ("none", "ssm_inner"),
+        "dt_bias": ("ssm_inner",),
+        "A_log": ("ssm_inner", "ssm_state"),
+        "D": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "fsdp"),
+    }
+    return p, ax
+
+
+def _mamba1_scan_chunked(u, dt, Bm, Cm, A, h0, chunk: int):
+    """u/dt: (B,L,di); Bm/Cm: (B,L,N); A: (di,N); h0: (B,di,N) fp32.
+
+    Returns y: (B,L,di) fp32 and final state.
+    """
+    B, L, di = u.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L
+
+    ur = u.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    Br = Bm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cr = Cm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        u_c, dt_c, B_c, C_c = inp              # (B,chunk,di), ..., (B,chunk,N)
+        da = jnp.exp(dt_c[..., None] * A)       # (B,chunk,di,N) decay
+        db = (dt_c * u_c)[..., None] * B_c[:, :, None, :]  # (B,chunk,di,N) input
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        ca, cb = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h_t = ca * h[:, None] + cb              # (B,chunk,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, C_c)
+        return h_t[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (ur, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, di)
+    return y, h_final
+
+
+def mamba1_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None,
+                 return_final_state: bool = False) -> tuple[jax.Array, dict | None]:
+    """x: (B,L,D).  state: decode-mode {"h": (B,di,N), "conv": (B,W-1,di)}."""
+    B, L, D = x.shape
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt_ = _dtype(cfg)
+    xz = x.astype(dt_) @ p["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, ("batch", "seq", "ssm_inner"))
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+
+    if state is None:
+        xc = jax.nn.silu(causal_conv1d(xs, p["conv_w"], p["conv_b"]))
+        proj = xc @ p["x_proj"].astype(dt_)
+        dt_raw, Bm, Cm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus(
+            (dt_raw @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+            + p["dt_bias"].astype(jnp.float32))
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        chunk = min(cfg.ssm_chunk, L)
+        y, h_final = _mamba1_scan_chunked(xc.astype(jnp.float32), dt,
+                                          Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                          A, h0, chunk)
+        y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+        new_state = None
+        if return_final_state:
+            # conv state = last (W-1) *pre-activation* conv inputs
+            tail = xs[:, L - (cfg.ssm_conv - 1):, :]
+            new_state = {"h": h_final, "conv": tail.astype(jnp.dtype(cfg.dtype))}
+    else:
+        xc_t, conv_state = conv1d_step(xs[:, 0], state["conv"], p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc_t)
+        proj = xc @ p["x_proj"].astype(dt_)
+        dt_raw, Bm, Cm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus(
+            (dt_raw @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+            + p["dt_bias"].astype(jnp.float32))                       # (B, di)
+        da = jnp.exp(dt[..., None] * A)                               # (B,di,N)
+        db = (dt * xc.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, None, :]
+        h = da * state["h"] + db
+        y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+        y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+        y = y[:, None]
+        xc = xc[:, None]
+        z = z
+        new_state = {"h": h, "conv": conv_state}
+
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(dt_)
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def mamba1_state_init(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba1_state_axes():
+    return {"h": ("batch", "ssm_inner", "ssm_state"), "conv": ("batch", None, "ssm_inner")}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, cw = cfg.ssm_num_heads, cfg.ssm_conv
+    dt = _pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh), d, dt),
+        "conv_w": dense_init(ks[1], (conv_ch, cw), cw, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))).astype(dt),
+        "D": jnp.ones((nh,), dt),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), di, dt),
+    }
+    ax = {
+        "in_proj": ("fsdp", "ssm_inner"),
+        "conv_w": ("ssm_inner", "none"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("none",),
+        "dt_bias": ("none",),
+        "D": ("none",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "fsdp"),
+    }
+    return p, ax
+
+
+def _ssd_chunked(x, dt, Bm, Cm, A, h0, chunk: int):
+    """SSD matmul-form chunked scan.
+
+    x: (B,L,nh,hd) fp32; dt: (B,L,nh); Bm/Cm: (B,L,N); A: (nh,) negative.
+    h0: (B,nh,hd,N).  Returns y (B,L,nh,hd), h_final.
+    """
+    B, L, nh, hd = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L
+
+    xr = x.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+    Br = Bm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cr = Cm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        x_c, dt_c, B_c, C_c = inp
+        loga = dt_c * A                                    # (B,chunk,nh) <= 0
+        cl = jnp.cumsum(loga, axis=1)                      # cumulative log decay
+        # intra-chunk: seg[i,j] = exp(cl_i - cl_j) for i >= j
+        seg = cl[:, :, None, :] - cl[:, None, :, :]        # (B,i,j,nh)
+        ii = jnp.arange(chunk)
+        causal = ii[:, None] >= ii[None, :]
+        seg = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", C_c, B_c)          # (B,i,j)
+        scores = cb[..., None] * seg                       # (B,i,j,nh)
+        xdt = x_c * dt_c[..., None]                        # (B,chunk,nh,hd)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xdt)
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", C_c, h) * jnp.exp(cl)[..., None]
+        # carry update
+        w = jnp.exp(cl[:, -1:, :] - cl) * dt_c             # (B,chunk,nh)
+        h_new = h * jnp.exp(cl[:, -1])[:, :, None, None] + \
+            jnp.einsum("bjhp,bjn->bhpn", x_c * w[..., None], B_c)
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, nh, hd)
+    return y, h_final
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None,
+                 return_final_state: bool = False) -> tuple[jax.Array, dict | None]:
+    B, L, D = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    dt_ = _dtype(cfg)
+    proj = x.astype(dt_) @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xBC = constrain(xBC, ("batch", "seq", "ssm_inner"))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (nh,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if state is None:
+        pre_conv = xBC
+        xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+        xs, Bm, Cm = jnp.split(xBC, [di, di + n], axis=-1)
+        xh = xs.astype(jnp.float32).reshape(B, L, nh, hd)
+        h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+        chunk = min(cfg.ssm_chunk, L)
+        y, h_final = _ssd_chunked(xh, dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                  A, h0, chunk)
+        y = y + xh * p["D"].astype(jnp.float32)[:, None]
+        y = y.reshape(B, L, di)
+        new_state = None
+        if return_final_state:
+            tail = pre_conv[:, L - (cfg.ssm_conv - 1):, :]
+            new_state = {"h": h_final, "conv": tail.astype(jnp.dtype(cfg.dtype))}
+    else:
+        xBC_t, conv_state = conv1d_step(xBC[:, 0], state["conv"], p["conv_w"], p["conv_b"])
+        xBC_t = jax.nn.silu(xBC_t)
+        xs, Bm, Cm = jnp.split(xBC_t, [di, di + n], axis=-1)
+        xh = xs.astype(jnp.float32).reshape(B, nh, hd)
+        dt1 = dt[:, 0]                                     # (B,nh)
+        da = jnp.exp(dt1 * A)                              # (B,nh)
+        h = state["h"] * da[:, :, None, None] + \
+            jnp.einsum("bhp,bn->bhpn", xh * dt1[..., None], Bm.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+        y = y + xh * p["D"].astype(jnp.float32)[:, None]
+        y = y.reshape(B, 1, di)
+        new_state = {"h": h, "conv": conv_state}
+
+    # gated RMSNorm (mamba2 style) then out-projection
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"].astype(jnp.float32)
+    out = y.astype(dt_) @ p["out_proj"].astype(dt_)
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba2_state_axes():
+    return {"h": ("batch", "ssm_inner", None, "ssm_state"), "conv": ("batch", None, "ssm_inner")}

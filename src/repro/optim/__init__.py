@@ -1,0 +1,5 @@
+from repro.optim.adamw import OptConfig, init_opt_state, adamw_update, lr_at  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    quantize_int8, dequantize_int8, compressed_psum, CompressionState,
+    init_compression_state,
+)

@@ -1,0 +1,94 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (no optax).
+
+Optimizer state shards like the parameters (the specs are derived from the
+same logical axes), so FSDP-sharded params get ZeRO-sharded moments for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step, cfg: OptConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = cfg.lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, master_weights: bool = False):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    st = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master_weights:
+        # fp32 master copy (PerfFlags.bf16_params): params themselves are
+        # stored/gathered in bf16; updates apply to the master.
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    masters = state.get("master")
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, cfg)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 1:  # decay matrices/vectors, not scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    if masters is not None:
+        flat_w = treedef.flatten_up_to(masters)
+        out = [upd(w, g, m, v) for w, g, m, v in zip(flat_w, flat_g, flat_m, flat_v)]
+        new_master = treedef.unflatten([o[0] for o in out])
+        new_p = jax.tree.map(lambda w, p: w.astype(p.dtype), new_master, params)
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "master": new_master,
+                       "step": step}, {"grad_norm": gnorm, "lr": lr}
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

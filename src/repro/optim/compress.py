@@ -1,0 +1,56 @@
+"""Int8 error-feedback gradient compression for cross-pod reduction.
+
+Inter-pod links are the scarcest bandwidth on a multi-pod mesh; 1-byte
+gradients with error feedback (residual carried into the next step) keep
+convergence while cutting the pod-axis reduce volume 4x.  The intra-pod
+reduce stays fp32.
+
+``compressed_psum`` is written for use inside ``shard_map``: it quantizes,
+all-gathers the int8 payload over the (small) pod axis, and accumulates in
+fp32.  Error feedback state is per-leaf and shards like the gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+CompressionState = Any  # pytree of residuals, same structure as grads
+
+
+def init_compression_state(grads_template):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array):
+    """Returns (q, scale, new_err).  g is reconstructed as deq(q) + err'."""
+    target = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    return q, scale, target - deq
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """Error-feedback int8 mean-reduce over ``axis_name`` (inside shard_map).
+
+    Returns (g_reduced fp32, new_err)."""
+    q, scale, new_err = compress_with_feedback(g, err)
+    n = jax.lax.psum(1, axis_name)
+    qs = jax.lax.all_gather(q, axis_name)          # (n, ...) int8 payload
+    ss = jax.lax.all_gather(scale, axis_name)      # (n,)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+    return deq.sum(0) / n, new_err

@@ -1,0 +1,12 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    SINGLE_POD_RULES,
+    MULTI_POD_RULES,
+    HOST_RULES,
+    logical_to_spec,
+    shard_params_specs,
+    constrain,
+    set_mesh_context,
+    get_mesh_context,
+    mesh_context,
+)

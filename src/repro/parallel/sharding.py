@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Model code annotates parameters and activations with *logical* axis names
+("batch", "heads", "mlp", "fsdp", ...).  A rule table maps each logical name to
+zero or more *mesh* axes.  This indirection is what lets the same model code
+lower onto the single-pod (data=16, model=16) mesh, the multi-pod
+(pod=2, data=16, model=16) mesh, a tiny test mesh, or a single host device.
+
+Rules follow the MaxText convention: the value of a rule is a tuple of mesh
+axis names (sharded over their product) or () for replicated.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to mesh axis tuples."""
+
+    rules: Mapping[str, tuple[str, ...]]
+
+    def get(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}; known: {sorted(self.rules)}")
+        return tuple(self.rules[logical])
+
+
+# Single-pod production mesh: (data=16, model=16).
+SINGLE_POD_RULES = AxisRules(
+    rules={
+        # data-parallel / stream-parallel batch dim
+        "batch": ("data",),
+        # ZeRO-3 / FSDP shard dim for parameters (largest non-tensor dim)
+        "fsdp": ("data",),
+        # tensor-parallel dims
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "embed": (),            # d_model replicated (activations)
+        "embed_tensor": ("model",),  # optional: shard d_model of some params over model
+        # MoE: experts over the data axis (EP), expert hidden over model (TP)
+        "experts": ("data",),
+        "expert_mlp": ("model",),
+        # sequence axes
+        "seq": (),
+        "kv_seq": (),             # decode KV cache sequence dim (dense decode)
+        "kv_seq_shard": ("data",),  # long-context: sequence-parallel KV
+        "kv_seq_model": ("model",),  # serve: seq-sharded cache when KV heads
+                                     # are not TP-divisible (PerfFlags)
+        # ssm
+        "ssm_state": (),
+        "ssm_inner": ("model",),
+        # scan-stacked layer dim — never sharded
+        "layers": (),
+        # replicated
+        "none": (),
+    }
+)
+
+# Multi-pod mesh: (pod=2, data=16, model=16).  batch/fsdp additionally shard
+# over the pod axis; tensor parallelism stays intra-pod (ICI locality).
+MULTI_POD_RULES = AxisRules(
+    rules={
+        **SINGLE_POD_RULES.rules,
+        "batch": ("pod", "data"),
+        "fsdp": ("pod", "data"),
+        "experts": ("data",),       # keep expert all-to-all intra-pod
+        "kv_seq_shard": ("data",),
+    }
+)
+
+# Single-device rules (tests, examples): everything replicated.
+HOST_RULES = AxisRules(rules={k: () for k in SINGLE_POD_RULES.rules})
+
+
+def pure_fsdp_rules(rules: AxisRules) -> AxisRules:
+    """ZeRO-3-only variant (PerfFlags.dense_pure_fsdp): batch and parameter
+    shards span BOTH mesh axes; tensor-parallel axes collapse to replicated.
+    Communication becomes per-layer weight all-gathers + gradient
+    reduce-scatters — no per-token activation all-reduces."""
+    base = dict(rules.rules)
+    both = tuple(base["fsdp"]) + ("model",)
+    return AxisRules({**base,
+                      "batch": both, "fsdp": both,
+                      "heads": (), "kv_heads": (), "mlp": (), "vocab": (),
+                      "embed_tensor": (), "ssm_inner": (), "expert_mlp": ()})
+
+
+def logical_to_spec(logical_axes: Sequence[str | None], rules: AxisRules) -> P:
+    """Convert a tuple of logical axis names (one per tensor dim) to a PartitionSpec."""
+    spec: list[Any] = []
+    for name in logical_axes:
+        mesh_axes = rules.get(name)
+        if len(mesh_axes) == 0:
+            spec.append(None)
+        elif len(mesh_axes) == 1:
+            spec.append(mesh_axes[0])
+        else:
+            spec.append(tuple(mesh_axes))
+    # Trailing Nones are harmless; keep explicit length for readability.
+    return P(*spec)
+
+
+def shard_params_specs(logical_tree: Any, rules: AxisRules) -> Any:
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mesh context: model code calls constrain(x, (...logical...)) and we resolve
+# against the active (mesh, rules) pair.  Outside any context this is a no-op,
+# which keeps single-device tests and examples trivially runnable.
+# ---------------------------------------------------------------------------
+
+class _MeshContext(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: AxisRules | None = None
+
+
+_CTX = _MeshContext()
+
+
+def set_mesh_context(mesh: Mesh | None, rules: AxisRules | None) -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = rules
+
+
+def get_mesh_context() -> tuple[Mesh | None, AxisRules | None]:
+    return _CTX.mesh, _CTX.rules
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: AxisRules | None):
+    prev = get_mesh_context()
+    set_mesh_context(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh_context(*prev)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """Apply a sharding constraint given logical axis names (no-op without a mesh)."""
+    mesh, rules = get_mesh_context()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec(logical_axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[str | None]) -> NamedSharding:
+    mesh, rules = get_mesh_context()
+    assert mesh is not None and rules is not None, "named_sharding needs a mesh context"
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules))

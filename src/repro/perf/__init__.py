@@ -1,0 +1,1 @@
+from repro.perf.flags import PerfFlags, get_flags, set_flags, perf_flags  # noqa: F401

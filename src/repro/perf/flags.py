@@ -1,0 +1,83 @@
+"""Beyond-paper performance toggles (EXPERIMENTS.md §Perf).
+
+Each flag is one hillclimb iteration; the paper-faithful baseline is all-off.
+Flags are read at trace time by the model/moe/steps code.
+
+  causal_skip            balanced two-sided q-chunk schedule: removes the ~2x
+                         masked-out attention FLOPs of blockwise causal attn.
+  moe_tp_dispatch        shard MoE dispatch over the model axis: each TP rank
+                         routes a distinct 1/TP slice of the token chunk, so
+                         the EP all-to-all and the expert-output psum shrink
+                         ~TP x (they were duplicated across TP ranks).
+  parallel_fused_ar      command-r parallel block: sum attn+mlp partial
+                         outputs BEFORE the sharding constraint -> one TP
+                         all-reduce per layer instead of two.
+  serve_params_replicated  decode/prefill: drop FSDP on parameters when the
+                         TP shard fits HBM -> no per-token weight all-gather
+                         (weight-stationary serving).
+  serve_seq_sharded_kv   decode: shard the KV-cache sequence dim over the
+                         model axis when KV heads are not TP-divisible
+                         (replicated KV caches overflow HBM on 32k shapes).
+  dense_pure_fsdp        dense train: ZeRO-3 over all 256/512 chips, no TP.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    causal_skip: bool = False
+    moe_tp_dispatch: bool = False
+    parallel_fused_ar: bool = False
+    serve_params_replicated: bool = False
+    serve_seq_sharded_kv: bool = False
+    # pure-FSDP (ZeRO-3, no tensor parallelism) for DENSE training: at 1M
+    # tokens/step the per-chip weight all-gather (param bytes) is far below
+    # the per-chip activation all-reduce volume (tokens_loc x D x layers), so
+    # communication drops ~2.7x on the 104B arch.  Dense/vlm train only.
+    dense_pure_fsdp: bool = False
+    # bf16 stored/gathered params with an fp32 master copy in the optimizer
+    # state: halves every weight all-gather and weight HBM stream (the fp32
+    # gathers dominate pure-FSDP training comms).
+    bf16_params: bool = False
+    # pad non-TP-divisible vocabs (whisper: 51865 -> 51872) so logits shard;
+    # pad columns are -inf-masked (softmax/CE unchanged).
+    pad_vocab: bool = False
+
+    @classmethod
+    def all_on(cls) -> "PerfFlags":
+        # dense_pure_fsdp intentionally NOT in all_on: it is a per-cell
+        # tradeoff (helps big-dense train, hurts small models' memory)
+        return cls(causal_skip=True, moe_tp_dispatch=True,
+                   parallel_fused_ar=True, serve_params_replicated=True,
+                   serve_seq_sharded_kv=True, bf16_params=True,
+                   pad_vocab=True)
+
+
+class _Box(threading.local):
+    def __init__(self):
+        self.flags = PerfFlags()
+
+
+_BOX = _Box()
+
+
+def get_flags() -> PerfFlags:
+    return _BOX.flags
+
+
+def set_flags(flags: PerfFlags) -> None:
+    _BOX.flags = flags
+
+
+@contextlib.contextmanager
+def perf_flags(flags: PerfFlags):
+    prev = get_flags()
+    set_flags(flags)
+    try:
+        yield
+    finally:
+        set_flags(prev)

@@ -1,0 +1,156 @@
+"""The serving engine: ReXCam admission control over the inference plane.
+
+Per tick (one content step over all live camera streams):
+
+  1. every active tracking query asks the spatio-temporal model which
+     (camera, frame) pairs to admit (``repro.core.tracker`` semantics),
+  2. admitted frames are deduplicated across queries (a frame is detected /
+     embedded once no matter how many queries want it — the fleet-scale
+     batching win),
+  3. the batch runs through the backbone embed function and the
+     ``reid_topk`` kernel against each query's representation,
+  4. matches update tracker states; misses escalate to replay, which reads
+     the ``FrameStore`` ring buffer.
+
+The engine is deliberately backbone-agnostic: ``embed_fn(frames) ->
+(n, D)`` may be a smoke-scale transformer from ``repro.models`` or the
+simulator's feature oracle (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.correlation import SpatioTemporalModel
+from repro.runtime.stream_store import FrameStore
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    s_thresh: float = 0.05
+    t_thresh: float = 0.02
+    match_thresh: float = 0.28
+    feat_alpha: float = 0.25
+    relax_factor: float = 10.0
+    self_window: int = 6
+    exit_t: int = 240
+    max_batch: int = 256
+    retention: int = 600
+
+
+@dataclasses.dataclass
+class QueryState:
+    qid: int
+    feat: np.ndarray
+    c_q: int
+    f_q: int
+    phase: int = 1
+    done: bool = False
+    matches: list = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, model: SpatioTemporalModel, embed_fn: Callable,
+                 cfg: EngineConfig):
+        self.model = model
+        self.embed_fn = embed_fn
+        self.cfg = cfg
+        self.C = model.n_cams
+        self.store = FrameStore(self.C, cfg.retention)
+        self.queries: dict[int, QueryState] = {}
+        self.t = 0
+        self.frames_processed = 0
+        self.ticks = 0
+        self._S = np.asarray(model.S)
+        self._cdf = np.asarray(model.cdf)
+        self._f0 = np.asarray(model.f0)
+        self._w_end1 = np.asarray(model.window_end(cfg.s_thresh, cfg.t_thresh))
+        self._w_end2 = np.asarray(model.window_end(
+            cfg.s_thresh / cfg.relax_factor, cfg.t_thresh / cfg.relax_factor))
+
+    # -- query lifecycle --------------------------------------------------
+    def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
+        self.queries[qid] = QueryState(qid, feat / max(np.linalg.norm(feat), 1e-9),
+                                       cam, frame)
+
+    def _admitted(self, q: QueryState, t: int) -> np.ndarray:
+        cfg = self.cfg
+        elapsed = t - q.f_q
+        relax = cfg.relax_factor if q.phase >= 2 else 1.0
+        s_th = cfg.s_thresh / relax
+        t_th = cfg.t_thresh / relax
+        b = np.clip(elapsed // self.model.bin_width, 0, self.model.n_bins - 1)
+        arrived = self._cdf[q.c_q, :, max(b - 1, 0)] if b > 0 else 0.0
+        mask = (self._S[q.c_q] >= s_th) & (elapsed >= self._f0[q.c_q]) & \
+            (arrived <= 1.0 - t_th)
+        if elapsed <= cfg.self_window:
+            mask[q.c_q] = True
+        return mask
+
+    # -- per-tick ----------------------------------------------------------
+    def ingest(self, frames_by_cam: dict[int, Any]):
+        """New live frames at the current step (frame = detector crops)."""
+        for cam, frame in frames_by_cam.items():
+            self.store.append(cam, self.t, frame)
+
+    def tick(self) -> dict:
+        """One admission+inference round over the live step. Returns stats."""
+        cfg = self.cfg
+        wanted: dict[tuple[int, int], list[int]] = {}
+        for q in self.queries.values():
+            if q.done:
+                continue
+            mask = self._admitted(q, self.t)
+            for cam in np.where(mask)[0]:
+                wanted.setdefault((int(cam), self.t), []).append(q.qid)
+
+        # dedup: each admitted frame embeds once (fleet batching win)
+        batch_keys = [k for k in wanted if self.store.get(*k) is not None]
+        stats = {"t": self.t, "admitted": len(wanted), "batched": len(batch_keys),
+                 "matches": 0}
+        for start in range(0, len(batch_keys), cfg.max_batch):
+            keys = batch_keys[start:start + cfg.max_batch]
+            crops, owners = [], []
+            for key in keys:
+                for crop in self.store.get(*key):
+                    crops.append(crop)
+                    owners.append(key)
+            if not crops:
+                continue
+            emb = self.embed_fn(np.stack(crops))           # (n, D)
+            emb = emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+            self.frames_processed += len(keys)
+            for key, qids in ((k, wanted[k]) for k in keys):
+                idx = [i for i, o in enumerate(owners) if o == key]
+                if not idx:
+                    continue
+                gal = emb[idx]
+                for qid in qids:
+                    q = self.queries[qid]
+                    s = gal @ q.feat
+                    j = int(np.argmax(s))
+                    if 1.0 - s[j] < cfg.match_thresh:
+                        self._on_match(q, key[0], key[1], gal[j])
+                        stats["matches"] += 1
+
+        # escalation / termination
+        for q in self.queries.values():
+            if q.done:
+                continue
+            elapsed = self.t - q.f_q
+            if q.phase == 1 and elapsed > min(self._w_end1[q.c_q], cfg.exit_t):
+                q.phase = 2
+            elif q.phase >= 2 and elapsed > min(self._w_end2[q.c_q], cfg.exit_t):
+                q.done = True
+        self.t += 1
+        self.ticks += 1
+        return stats
+
+    def _on_match(self, q: QueryState, cam: int, t: int, feat: np.ndarray):
+        a = self.cfg.feat_alpha
+        q.feat = (1 - a) * q.feat + a * feat
+        q.feat /= max(np.linalg.norm(q.feat), 1e-9)
+        q.c_q, q.f_q, q.phase = cam, t, 1
+        q.matches.append((cam, t))

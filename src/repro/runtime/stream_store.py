@@ -1,0 +1,46 @@
+"""Per-camera ring buffer of recent frames — the replay substrate (paper §5.3).
+
+The paper: "Implicit to replay search is also the ability to store videos in
+the past.  However, this only needs to be for the last few minutes."  The
+store keeps a bounded window per camera; replay reads are range queries into
+it, and reads past the retention window raise (that replay would have to fall
+back to cold storage — surfaced to the caller as a miss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+
+class FrameStore:
+    def __init__(self, n_cams: int, retention: int):
+        self.n_cams = n_cams
+        self.retention = retention
+        self._buf: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
+        self._latest = np.full(n_cams, -1, np.int64)
+
+    def append(self, cam: int, t: int, frame: Any) -> None:
+        buf = self._buf[cam]
+        buf[t] = frame
+        self._latest[cam] = max(self._latest[cam], t)
+        # evict
+        horizon = self._latest[cam] - self.retention
+        for key in [k for k in buf if k < horizon]:
+            del buf[key]
+
+    def get(self, cam: int, t: int) -> Any:
+        horizon = self._latest[cam] - self.retention
+        if t < horizon:
+            raise KeyError(f"frame ({cam}, {t}) evicted (retention {self.retention})")
+        return self._buf[cam].get(t)
+
+    def range(self, cam: int, t0: int, t1: int) -> list[tuple[int, Any]]:
+        """Frames in [t0, t1] still retained (replay read)."""
+        horizon = self._latest[cam] - self.retention
+        return [(t, self._buf[cam][t]) for t in range(max(t0, horizon), t1 + 1)
+                if t in self._buf[cam]]
+
+    def memory_frames(self) -> int:
+        return sum(len(b) for b in self._buf)

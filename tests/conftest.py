@@ -1,0 +1,28 @@
+import os
+import sys
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and benches
+# must see 1 device.  Sharding tests spawn subprocesses that set the flag.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def duke_sim():
+    """Small-but-real duke-like scenario shared across tests (session-cached)."""
+    from repro.core import (duke_like_network, simulate_network, build_gallery,
+                            build_model)
+    from repro.core.features import FeatureParams, make_features
+    from repro.core.tracker import make_queries
+
+    net = duke_like_network()
+    vis = simulate_network(net, n_entities=900, horizon=2400, seed=0)
+    gal, _ = build_gallery(vis, max_slots=24)
+    model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, net.n_cams,
+                        time_limit=1600)
+    feats, emb = make_features(vis, 900, FeatureParams())
+    q_vids, gt_vids = make_queries(vis, 40, seed=1)
+    return dict(net=net, vis=vis, gal=gal, model=model, feats=feats,
+                q_vids=q_vids, gt_vids=gt_vids)

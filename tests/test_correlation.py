@@ -1,0 +1,122 @@
+"""Profiler + spatio-temporal model properties (unit + hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.correlation import INF_TIME
+from repro.core.profiler import (build_model, profiling_cost, subsample_visits,
+                                 transitions_from_visits)
+
+# -- strategies -------------------------------------------------------------
+
+@st.composite
+def visit_tables(draw, max_ents=12, max_visits=60, n_cams=5, horizon=600):
+    n = draw(st.integers(1, max_visits))
+    ent = draw(st.lists(st.integers(0, max_ents - 1), min_size=n, max_size=n))
+    cam = draw(st.lists(st.integers(0, n_cams - 1), min_size=n, max_size=n))
+    t_in, t_out, cur = [], [], {}
+    for i in range(n):
+        start = cur.get(ent[i], 0) + draw(st.integers(1, 40))
+        dur = draw(st.integers(1, 20))
+        t_in.append(start)
+        t_out.append(start + dur)
+        cur[ent[i]] = start + dur
+    return (np.array(ent), np.array(cam), np.array(t_in), np.array(t_out), n_cams)
+
+
+@settings(max_examples=40, deadline=None)
+@given(visit_tables())
+def test_spatial_rows_are_substochastic(tab):
+    ent, cam, t_in, t_out, C = tab
+    m = build_model(ent, cam, t_in, t_out, C)
+    S = np.asarray(m.S)
+    ex = np.asarray(m.exit_frac)
+    assert (S >= -1e-6).all()
+    # rows + exit fraction sum to 1 for cameras with outbound traffic, 0 else
+    total = S.sum(1) + ex
+    counts = np.asarray(m.counts).sum(1) + ex * 0  # cameras with transitions
+    for c in range(C):
+        assert total[c] == pytest.approx(1.0, abs=1e-5) or total[c] == pytest.approx(0.0, abs=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(visit_tables())
+def test_cdf_monotone_and_bounded(tab):
+    ent, cam, t_in, t_out, C = tab
+    m = build_model(ent, cam, t_in, t_out, C)
+    cdf = np.asarray(m.cdf)
+    assert (np.diff(cdf, axis=-1) >= -1e-6).all()
+    assert (cdf <= 1.0 + 1e-6).all() and (cdf >= -1e-6).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(visit_tables())
+def test_transition_conservation(tab):
+    """Each entity with k visits contributes exactly k-1 transitions + 1 exit."""
+    ent, cam, t_in, t_out, C = tab
+    src, dst, dt, exits, entries = transitions_from_visits(ent, cam, t_in, t_out)
+    n_ents = len(np.unique(ent))
+    assert len(src) == len(ent) - n_ents
+    assert len(exits) == n_ents
+    assert len(entries) == n_ents
+    assert (dt >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(visit_tables(), st.integers(2, 10))
+def test_subsampling_only_drops_or_quantizes(tab, k):
+    ent, cam, t_in, t_out, C = tab
+    e2, c2, i2, o2 = subsample_visits(ent, cam, t_in, t_out, k)
+    assert len(e2) <= len(ent)
+    assert ((i2 % k) == 0).all() and ((o2 % k) == 0).all()
+    assert (i2 <= o2).all()
+
+
+def test_f0_is_min_travel_time():
+    ent = np.array([0, 0, 1, 1])
+    cam = np.array([0, 1, 0, 1])
+    t_in = np.array([0, 20, 100, 150])
+    t_out = np.array([5, 25, 110, 160])
+    m = build_model(ent, cam, t_in, t_out, 2)
+    assert int(m.f0[0, 1]) == 15  # min(20-5, 150-110)
+    assert int(m.f0[1, 0]) == int(INF_TIME)
+
+
+def test_window_end_monotone_in_threshold():
+    ent = np.repeat(np.arange(50), 2)
+    rng = np.random.default_rng(0)
+    cam = np.tile([0, 1], 50)
+    t_in = np.empty(100, np.int64)
+    t_out = np.empty(100, np.int64)
+    for e in range(50):
+        a = e * 100
+        travel = int(rng.normal(40, 8))
+        t_in[2 * e], t_out[2 * e] = a, a + 5
+        t_in[2 * e + 1], t_out[2 * e + 1] = a + 5 + travel, a + 15 + travel
+    m = build_model(ent, cam, t_in, t_out, 2)
+    w_tight = np.asarray(m.window_end(0.01, 0.10))
+    w_loose = np.asarray(m.window_end(0.01, 0.01))
+    assert (w_tight <= w_loose).all()
+
+
+def test_temporal_mask_respects_f0(duke_sim):
+    m = duke_sim["model"]
+    import jax.numpy as jnp
+    cs = jnp.asarray(0)
+    early = np.asarray(m.temporal_mask(cs, jnp.asarray(1), 0.02))
+    f0 = np.asarray(m.f0[0])
+    assert not early[f0 > 1].any()
+
+
+def test_profiling_cost_scales_with_sampling(duke_sim):
+    vis = duke_sim["vis"]
+    full = profiling_cost(vis.ent, vis.cam, vis.t_in, vis.t_out, 1)
+    half = profiling_cost(vis.ent, vis.cam, vis.t_in, vis.t_out, 2)
+    assert full == pytest.approx(2 * half, rel=0.01)
+
+
+def test_potential_savings_positive(duke_sim):
+    m = duke_sim["model"]
+    s = m.potential_savings(0.05, 0.02)
+    s_spatial = m.potential_savings(0.05, 0.0)
+    assert s > s_spatial > 1.0

@@ -1,0 +1,63 @@
+"""Multi-camera identity detection (§5.4): probability propagation + search."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DetectorParams, identity_detection
+from repro.core.detect import propagate
+
+
+def test_propagation_probability_mass(duke_sim):
+    model = duke_sim["model"]
+    W = 64
+    I = jnp.ones((1, model.n_cams, W))
+    # paper-literal prior (rho=0): window 0 is exactly the mixed prior
+    p0 = DetectorParams(window=20, surface_rho=0.0)
+    P = np.asarray(propagate(model, I, W, p0))
+    inbound = np.asarray(model.counts).sum(0)
+    occ = inbound / max(inbound.sum(), 1.0)
+    prior = 0.5 * occ + 0.5 * np.asarray(model.entry)
+    assert (P >= -1e-6).all()
+    np.testing.assert_allclose(P[0, :, 0], prior, atol=1e-6)
+    # surfacing prior: still non-negative, mass bounded
+    P2 = np.asarray(propagate(model, I, W, DetectorParams(window=20)))
+    assert (P2 >= -1e-6).all()
+    assert P2[0].sum() <= W + 1.0
+
+
+def test_scanned_cells_stop_contributing(duke_sim):
+    model = duke_sim["model"]
+    p = DetectorParams(window=20)
+    W = duke_sim["vis"].horizon // p.window
+    I_all = jnp.ones((1, model.n_cams, W))
+    I_cut = I_all.at[:, :, :3].set(0.0)
+    P_all = np.asarray(propagate(model, I_all, W, p))
+    P_cut = np.asarray(propagate(model, I_cut, W, p))
+    # cutting early windows removes downstream probability mass
+    assert P_cut[0, :, 3:].sum() <= P_all[0, :, 3:].sum() + 1e-6
+
+
+def test_detection_cheaper_than_baseline(duke_sim):
+    from repro.core.detect import make_detection_queries
+
+    vis, feats, model = duke_sim["vis"], duke_sim["feats"], duke_sim["model"]
+    t0 = 1200
+    q = make_detection_queries(vis, 12, search_start=t0, seed=2)
+    p = DetectorParams(theta=0.95, window=20)
+    rex = identity_detection(model, vis, feats, q, p, t_refs=t0)
+    base = identity_detection(model, vis, feats, q, p, baseline=True, t_refs=t0)
+    assert rex["cost"] < base["cost"]
+    assert rex["recall"] > 0.5
+    assert rex["recall"] >= base["recall"] - 0.2
+
+
+def test_lower_theta_scans_more(duke_sim):
+    from repro.core.detect import make_detection_queries
+
+    vis, feats, model = duke_sim["vis"], duke_sim["feats"], duke_sim["model"]
+    t0 = 1200
+    q = make_detection_queries(vis, 6, search_start=t0, seed=3)
+    hi = identity_detection(model, vis, feats, q, DetectorParams(theta=0.95), t_refs=t0)
+    lo = identity_detection(model, vis, feats, q, DetectorParams(theta=0.75), t_refs=t0)
+    assert lo["recall"] >= hi["recall"] - 1e-6
+    assert lo["rounds"] <= hi["rounds"]

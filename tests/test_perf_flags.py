@@ -1,0 +1,157 @@
+"""Beyond-paper optimization flags (EXPERIMENTS.md §Perf) — numerics must be
+unchanged vs the paper-faithful baseline."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import forward, init_params, lm_loss
+from repro.perf import PerfFlags, perf_flags
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_causal_skip_identical_loss():
+    cfg = get_smoke_config("deepseek_7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                          cfg.vocab_size)}
+    l0, _ = lm_loss(params, batch, cfg, causal_skip=False)
+    l1, _ = lm_loss(params, batch, cfg, causal_skip=True)
+    np.testing.assert_allclose(l0, l1, rtol=1e-5)
+
+
+def test_pad_vocab_preserves_distribution():
+    """Padded-vocab softmax over real tokens == unpadded (same weights)."""
+    cfg = get_smoke_config("whisper_tiny")
+    cfg = dataclasses.replace(cfg, vocab_size=510)
+    cfg_p = cfg.with_padded_vocab()
+    assert cfg_p.vocab_size == 512 and cfg_p.real_vocab_size == 510
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # embed the unpadded params into the padded shapes (pad rows arbitrary)
+    pp = jax.tree.map(lambda x: x, params)
+    emb = params["embed"]
+    pp["embed"] = dict(emb)
+    pp["embed"]["tok"] = jnp.pad(emb["tok"], ((0, 2), (0, 0)),
+                                 constant_values=7.0)
+    if "head" in emb:
+        pp["embed"]["head"] = jnp.pad(emb["head"], ((0, 0), (0, 2)),
+                                      constant_values=7.0)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 510),
+             "frames": jax.random.normal(jax.random.PRNGKey(2),
+                                         (2, cfg.encoder_seq, cfg.d_model)) * 0.1}
+    lg0, _ = forward(params, batch, cfg)
+    lg1, _ = forward(pp, batch, cfg_p)
+    assert float(lg1[..., 510:].max()) < -1e29
+    sm0 = jax.nn.softmax(lg0.astype(jnp.float32), axis=-1)
+    sm1 = jax.nn.softmax(lg1.astype(jnp.float32), axis=-1)[..., :510]
+    np.testing.assert_allclose(sm0, sm1, atol=2e-5)
+    l0, _ = lm_loss(params, batch, cfg)
+    l1, _ = lm_loss(pp, batch, cfg_p)
+    np.testing.assert_allclose(l0, l1, rtol=1e-4)
+
+
+def test_master_weight_optimizer_matches_fp32():
+    """bf16 params + fp32 master == fp32 params after a step (master path)."""
+    from repro.optim import OptConfig, adamw_update, init_opt_state
+
+    w32 = {"w": jnp.linspace(-1, 1, 64, dtype=jnp.float32)}
+    w16 = {"w": w32["w"].astype(jnp.bfloat16)}
+    g = {"w": jnp.sin(jnp.arange(64.0)) * 0.1}
+    cfg = OptConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
+    o32 = init_opt_state(w32)
+    o16 = init_opt_state(w16, master_weights=True)
+    p32, _, _ = adamw_update(w32, g, o32, cfg)
+    p16, o16n, _ = adamw_update(w16, {"w": g["w"].astype(jnp.bfloat16)}, o16, cfg)
+    # master tracks the fp32 trajectory exactly (modulo bf16 grad rounding)
+    np.testing.assert_allclose(o16n["master"]["w"], p32["w"], rtol=1e-2, atol=1e-4)
+    assert p16["w"].dtype == jnp.bfloat16
+
+
+def _run_sub(code: str, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+def test_serve_flags_decode_equivalence_on_mesh():
+    """serve_params_replicated + serve_seq_sharded_kv: decode logits match the
+    single-device decode bit-for-bit (fp32) on a 4x2 mesh."""
+    _run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.launch.shapes import ShapeSpec
+        from repro.launch.steps import build_decode_step
+        from repro.models import init_params, init_decode_state, decode_step
+        from repro.parallel.sharding import SINGLE_POD_RULES, mesh_context
+        from repro.perf import PerfFlags, perf_flags
+
+        # phi3 smoke: kv heads not TP-divisible -> exercises seq-sharded KV
+        cfg = dataclasses.replace(get_smoke_config("phi3_medium_14b"),
+                                  dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        B, T = 8, 64
+        state = init_decode_state(cfg, B, T)
+        tok = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, cfg.vocab_size)
+        ref, _ = decode_step(params, state, tok, cfg)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        flags = PerfFlags(serve_params_replicated=True, serve_seq_sharded_kv=True)
+        with perf_flags(flags), mesh_context(mesh, SINGLE_POD_RULES):
+            step, _ = build_decode_step(cfg, mesh, SINGLE_POD_RULES,
+                                        ShapeSpec("d", "decode", T, B))
+            out, _ = step(params, state, tok)
+        err = float(jnp.abs(out - ref).max())
+        assert err < 1e-4, err
+        print("serve-flags decode equivalence ok", err)
+    """)
+
+
+def test_moe_tp_dispatch_flag_equivalence():
+    _run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_smoke_config
+        from repro.models.moe import moe_block, init_moe
+        from repro.parallel.sharding import SINGLE_POD_RULES, mesh_context
+        from repro.perf import PerfFlags, perf_flags
+
+        cfg = dataclasses.replace(get_smoke_config("qwen3_moe_30b"),
+                                  capacity_factor=8.0)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        p, _ = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
+                              jnp.float32)
+        out_local, _, _ = moe_block(p, x, cfg)
+        shard = (
+            {"router": NamedSharding(mesh, P()),
+             "wi": NamedSharding(mesh, P("data", None, "model")),
+             "wg": NamedSharding(mesh, P("data", None, "model")),
+             "wo": NamedSharding(mesh, P("data", "model", None))},
+            NamedSharding(mesh, P("data", None, None)))
+        with perf_flags(PerfFlags(moe_tp_dispatch=True)), \\
+             mesh_context(mesh, SINGLE_POD_RULES):
+            f = jax.jit(lambda p, x: moe_block(p, x, cfg), in_shardings=shard)
+            out, _, _ = f(p, x)
+        rel = float(jnp.abs(out_local - out).max() / jnp.abs(out_local).max())
+        assert rel < 2e-2, rel
+        print("moe tp-dispatch flag equivalence ok", rel)
+    """)

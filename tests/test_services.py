@@ -1,0 +1,224 @@
+"""Substrate services: optimizer, compression, checkpointing, data, runtime."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CheckpointManager, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.manager import gc_checkpoints
+from repro.data import SyntheticLMStream
+from repro.optim import (OptConfig, adamw_update, dequantize_int8,
+                         init_compression_state, init_opt_state, lr_at,
+                         quantize_int8)
+from repro.optim.compress import compress_with_feedback
+from repro.runtime import ElasticMesh, FrameStore, HeartbeatMonitor
+
+
+# -- optimizer ---------------------------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    w = {"w": jnp.array([3.0, -2.0, 1.0])}
+    opt = init_opt_state(w)
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0)
+
+    @jax.jit
+    def step(w, opt):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+        return adamw_update(w, g, opt, cfg)
+
+    for _ in range(100):
+        w, opt, m = step(w, opt)
+    assert float(jnp.abs(w["w"]).max()) < 0.2
+    assert int(opt["step"]) == 100
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(jnp.asarray(0), cfg)) == 0.0
+    assert float(lr_at(jnp.asarray(10), cfg)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(jnp.asarray(100), cfg)) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clipping_bounds_update():
+    w = {"w": jnp.ones(4)}
+    opt = init_opt_state(w)
+    cfg = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    g = {"w": jnp.full(4, 1e6)}
+    _, _, m = adamw_update(w, g, opt, cfg)
+    assert float(m["grad_norm"]) > 1e6  # reported pre-clip
+
+
+# -- int8 error-feedback compression ----------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With error feedback, the accumulated dequantized sum tracks the true
+    gradient sum (compression error does not accumulate)."""
+    key = jax.random.PRNGKey(0)
+    err = jnp.zeros((256,))
+    true_sum = jnp.zeros((256,))
+    deq_sum = jnp.zeros((256,))
+    for i in range(50):
+        g = jax.random.normal(jax.random.fold_in(key, i), (256,))
+        q, s, err = compress_with_feedback(g, err)
+        deq_sum = deq_sum + dequantize_int8(q, s)
+        true_sum = true_sum + g
+    # residual bounded by one quantization step, NOT growing with steps
+    assert float(jnp.abs(deq_sum + err - true_sum).max()) < 1e-3
+
+
+# -- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.float32(2.5)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    step, back = restore_checkpoint(str(tmp_path))
+    assert step == 7
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    assert back["b"]["c"] == tree["b"]["c"]
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A half-written tmp dir is invisible to restore and removed by GC."""
+    save_checkpoint(str(tmp_path), 1, {"x": np.ones(3)})
+    litter = tmp_path / "step_00000002.tmp-dead"
+    litter.mkdir()
+    (litter / "leaf_00000.npy").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+    gc_checkpoints(str(tmp_path), keep=3)
+    assert not litter.exists()
+
+
+def test_checkpoint_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(5):
+        mgr.save(s, {"x": np.full(4, s)})
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+    step, tree = mgr.restore_latest()
+    assert step == 4 and tree["x"][0] == 4
+
+
+def test_restart_resumes_from_latest(tmp_path):
+    """Simulated failure: train 3 steps, 'crash', resume at step 3."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"w": np.zeros(2), "stream": {"cursor": 0, "seed": 0}}
+    for s in range(1, 4):
+        state = {"w": state["w"] + 1, "stream": {"cursor": s, "seed": 0}}
+        mgr.save(s, state, blocking=True)
+    del mgr, state  # crash
+    step, state = CheckpointManager(str(tmp_path)).restore_latest()
+    assert step == 3 and state["w"][0] == 3 and state["stream"]["cursor"] == 3
+
+
+# -- data pipeline -----------------------------------------------------------
+
+def test_stream_deterministic_and_resumable():
+    a = SyntheticLMStream(vocab_size=64, seq_len=32, global_batch=4, seed=1)
+    b1 = [a.next_batch()["tokens"] for _ in range(3)]
+    b = SyntheticLMStream(vocab_size=64, seq_len=32, global_batch=4, seed=1)
+    b.load_state_dict({"cursor": 2, "seed": 1})
+    np.testing.assert_array_equal(b.next_batch()["tokens"], b1[2])
+
+
+def test_stream_host_sharding_disjoint():
+    full = SyntheticLMStream(vocab_size=64, seq_len=16, global_batch=8, seed=2)
+    h0 = SyntheticLMStream(vocab_size=64, seq_len=16, global_batch=8, seed=2,
+                           process_index=0, process_count=2)
+    h1 = SyntheticLMStream(vocab_size=64, seq_len=16, global_batch=8, seed=2,
+                           process_index=1, process_count=2)
+    assert h0.local_batch == h1.local_batch == 4
+    t0, t1 = h0.next_batch()["tokens"], h1.next_batch()["tokens"]
+    assert not np.array_equal(t0, t1)
+
+
+def test_stream_is_learnable_structure():
+    """Bigram process: successor entropy must be far below uniform."""
+    s = SyntheticLMStream(vocab_size=64, seq_len=256, global_batch=8, seed=0,
+                          branching=4)
+    toks = s.next_batch()["tokens"]
+    pairs = set(zip(toks[:, :-1].ravel().tolist(), toks[:, 1:].ravel().tolist()))
+    # at most branching successors per token
+    from collections import defaultdict
+    succ = defaultdict(set)
+    for a, b in pairs:
+        succ[a].add(b)
+    assert max(len(v) for v in succ.values()) <= 4
+
+
+# -- runtime / fault tolerance ------------------------------------------------
+
+def test_frame_store_retention_and_replay_range():
+    fs = FrameStore(n_cams=2, retention=10)
+    for t in range(25):
+        fs.append(0, t, f"f{t}")
+    assert fs.get(0, 20) == "f20"
+    with pytest.raises(KeyError):
+        fs.get(0, 5)  # evicted
+    rng = fs.range(0, 0, 24)
+    assert rng[0][0] >= 14 and rng[-1][0] == 24
+
+
+def test_heartbeat_dead_and_straggler_detection():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b", "c"], timeout=5.0, clock=lambda: t[0])
+    for _ in range(5):
+        mon.heartbeat("a", 1.0)
+        mon.heartbeat("b", 1.1)
+        mon.heartbeat("c", 9.0)   # straggler
+    assert mon.stragglers() == ["c"]
+    mon.quarantine("c")
+    t[0] = 10.0
+    mon.heartbeat("a", 1.0)
+    assert "b" in mon.dead()
+    assert mon.active() == ["a"]
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    em = ElasticMesh(model_parallel=2)
+    assert em.grid_for(8) == (4, 2)
+    assert em.grid_for(7) == (3, 2)  # drops one device
+    with pytest.raises(RuntimeError):
+        em.grid_for(1)
+    groups = em.rebalance_streams(list(range(10)), 3)
+    assert sum(len(g) for g in groups) == 10
+    assert max(len(g) for g in groups) - min(len(g) for g in groups) <= 1
+
+
+def test_serving_engine_end_to_end(duke_sim):
+    """Engine tracks a query through the duke sim using the feature oracle."""
+    from repro.runtime import EngineConfig, ServingEngine
+
+    vis, gal, feats, model = (duke_sim["vis"], duke_sim["gal"],
+                              duke_sim["feats"], duke_sim["model"])
+    q = int(duke_sim["q_vids"][0])
+    eng = ServingEngine(model, embed_fn=lambda x: x, cfg=EngineConfig())
+    t0, t1 = int(vis.t_out[q]), min(int(vis.t_out[q]) + 300, vis.horizon)
+    eng.t = t0
+    eng.submit_query(0, feats[q], int(vis.cam[q]), t0)
+    for t in range(t0, t1):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t]
+            vids = vids[vids >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick()
+    qs = eng.queries[0]
+    # the engine must have processed far fewer frames than cams x steps
+    assert eng.frames_processed < (t1 - t0) * vis.n_cams * 0.7

@@ -1,0 +1,105 @@
+"""Tracker (Algorithm 1) behaviour on hand-built deterministic scenarios."""
+import numpy as np
+import pytest
+
+from repro.core import TrackerParams, build_model, track_queries
+from repro.core.simulate import Visits
+from repro.core.tracker import make_queries
+
+
+def _toy_world():
+    """2 entities walking 0 -> 1 -> 2 on a 3-camera corridor, well separated.
+
+    History (entities 0..19) trains the profile; entities 20, 21 are tracked.
+    Travel time is exactly 10 steps, dwell 5.
+    """
+    ents, cams, tin, tout = [], [], [], []
+    t0 = 0
+    for e in range(22):
+        t = t0 + e * 40
+        for c in range(3):
+            ents.append(e)
+            cams.append(c)
+            tin.append(t)
+            tout.append(t + 5)
+            t += 5 + 10  # dwell 5, travel 10
+    horizon = max(tout) + 50
+    vis = Visits(np.array(ents), np.array(cams), np.array(tin),
+                 np.array(tout), horizon, 3)
+    # orthogonal features: perfect re-id
+    feats = np.zeros((len(vis), 64), np.float32)
+    for v in range(len(vis)):
+        feats[v, vis.ent[v] % 64] = 1.0
+    gal = np.full((3, horizon, 4), -1, np.int32)
+    fill = np.zeros((3, horizon), np.int32)
+    for v in range(len(vis)):
+        for t in range(vis.t_in[v], vis.t_out[v] + 1):
+            gal[vis.cam[v], t, fill[vis.cam[v], t]] = v
+            fill[vis.cam[v], t] += 1
+    model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, 3,
+                        time_limit=20 * 40)
+    return vis, gal, feats, model
+
+
+def test_perfect_world_full_recall():
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 2, seed=0)
+    p = TrackerParams(scheme="rexcam", s_thresh=0.3, t_thresh=0.02, exit_t=60)
+    r = track_queries(model, vis, gal, feats, q_vids, gt_vids, p)
+    assert r.recall == 1.0
+    assert r.precision == 1.0
+    assert r.rescued.sum() == 0         # no pruning errors in a clean world
+    assert r.mean_delay == 0.0
+
+
+def test_filtered_cost_below_baseline():
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 2, seed=0)
+    r_all = track_queries(model, vis, gal, feats, q_vids, gt_vids,
+                          TrackerParams(scheme="all", exit_t=60))
+    r_rex = track_queries(model, vis, gal, feats, q_vids, gt_vids,
+                          TrackerParams(scheme="rexcam", s_thresh=0.3,
+                                        t_thresh=0.02, exit_t=60))
+    assert r_rex.total_cost < r_all.total_cost
+    assert r_rex.recall == r_all.recall == 1.0
+
+
+def test_cost_is_camera_frames():
+    """Baseline cost = C * steps_searched exactly in a world with one query."""
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 1, seed=0)
+    p = TrackerParams(scheme="all", exit_t=30)
+    r = track_queries(model, vis, gal, feats, q_vids, gt_vids, p)
+    assert r.cost[0] % 3 == 0           # multiples of C=3
+    assert r.cost[0] > 0
+
+
+def test_self_window_tracks_current_camera():
+    """A query whose entity is still visible must re-match instantly."""
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 2, seed=0)
+    p = TrackerParams(scheme="rexcam", s_thresh=0.3, t_thresh=0.02,
+                      exit_t=60, self_window=6)
+    r = track_queries(model, vis, gal, feats, q_vids, gt_vids, p)
+    assert r.n_match.sum() > 2 * 2      # multiple matches per visit
+
+
+def test_make_queries_gt_is_future_only(duke_sim):
+    vis = duke_sim["vis"]
+    q_vids, gt_vids = duke_sim["q_vids"], duke_sim["gt_vids"]
+    for i, q in enumerate(q_vids):
+        for g in gt_vids[i]:
+            if g >= 0:
+                assert vis.ent[g] == vis.ent[q]
+                assert vis.t_in[g] > vis.t_out[q]
+
+
+def test_track_result_metrics_consistent(duke_sim):
+    r = track_queries(duke_sim["model"], duke_sim["vis"], duke_sim["gal"],
+                      duke_sim["feats"], duke_sim["q_vids"], duke_sim["gt_vids"],
+                      TrackerParams(scheme="rexcam"),
+                      geo_adj=duke_sim["net"].geo_adjacent)
+    assert (r.n_correct <= r.n_match).all()
+    assert (r.visit_hits.sum(1) <= r.gt_count).all()
+    assert 0.0 <= r.recall <= 1.0 and 0.0 <= r.precision <= 1.0
+    assert (r.delay >= 0).all()
