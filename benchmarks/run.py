@@ -7,9 +7,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import drift, kernels_bench, tables
+from benchmarks import drift, kernels_bench, scenarios, tables
 
 ALL = {
+    "policy_sweep": scenarios.policy_sweep,
     "sec3_potential": tables.sec3_potential,
     "fig10_anoncampus": tables.fig10_anoncampus,
     "fig11_duke": tables.fig11_duke,

@@ -3,17 +3,23 @@
 Each scenario = (network, profile model, live visits, gallery, features,
 queries) — profiling runs on a dedicated historical partition, live tracking
 on held-out traffic, exactly the paper's §8.1 methodology.
+
+``policy_sweep`` additionally exercises every admission scheme through the
+``repro.api`` facade and reports compute-savings multipliers vs the
+all-camera baseline (paper targets: 8.3x on Duke, 23-38x at city scale).
 """
 from __future__ import annotations
 
 import functools
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import api as rexcam
 from repro.core import (anoncampus_like_network, build_gallery, build_model,
                         duke_like_network, porto_like_network, simulate_network)
 from repro.core.features import FeatureParams, make_features
@@ -65,3 +71,42 @@ def porto(n_cams: int = 130, n_queries: int = 100):
     q_vids, gt_vids = make_queries(vis, n_queries, seed=3)
     return dict(net=net, vis=vis, gal=gal, model=model, feats=feats,
                 q_vids=q_vids, gt_vids=gt_vids, name=f"porto{n_cams}")
+
+
+# ---------------------------------------------------------------------------
+# policy_sweep: every admission scheme through the repro.api facade.
+# ---------------------------------------------------------------------------
+
+SWEEP_POLICIES = (
+    ("all", rexcam.SearchPolicy(scheme="all")),
+    ("geo", rexcam.SearchPolicy(scheme="geo")),
+    ("spatial_only", rexcam.SearchPolicy(scheme="spatial_only", s_thresh=.05)),
+    ("rexcam", rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02)),
+)
+
+
+def policy_sweep(scenarios=("duke", "porto130")):
+    """(name, us_per_call, derived) rows: per scenario, each scheme's cost,
+    recall/precision, and savings multiplier vs the all-camera baseline
+    (paper Table targets: 8.3x Duke spatio-temporal, 23-38x at 130 cams)."""
+    builders = {"duke": lambda: duke(60), "anoncampus": lambda: anoncampus(20),
+                "porto130": lambda: porto(130, 60)}
+    rows = []
+    for sc_name in scenarios:
+        sc = builders[sc_name]()
+        base_cost = None
+        for pname, policy in SWEEP_POLICIES:
+            t0 = time.perf_counter()
+            r = rexcam.track(sc["model"], sc["vis"], sc["gal"], sc["feats"],
+                             sc["q_vids"], sc["gt_vids"], policy,
+                             geo_adj=sc["net"].geo_adjacent)
+            # per-query us, matching the other benchmark tables' convention
+            us = (time.perf_counter() - t0) * 1e6 / max(len(sc["q_vids"]), 1)
+            if pname == "all":
+                base_cost = r.total_cost
+            savings = base_cost / max(r.total_cost, 1.0)
+            rows.append((f"policy_sweep/{sc['name']}/{pname}", us,
+                         f"savings={savings:.1f}x recall={r.recall:.2f} "
+                         f"precision={r.precision:.2f} "
+                         f"rescued={int(r.rescued.sum())}"))
+    return rows

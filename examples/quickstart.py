@@ -1,5 +1,6 @@
 """Quickstart: build a correlation model from simulated history, track a
-query across cameras, and compare against the all-camera baseline.
+query across cameras, and compare against the all-camera baseline — all
+through the stable ``repro.api`` facade.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +11,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (TrackerParams, build_gallery, build_model,
-                        duke_like_network, simulate_network, track_queries)
+from repro import api as rexcam
+from repro.core import build_gallery, duke_like_network, simulate_network
 from repro.core.features import FeatureParams, make_features
-from repro.core.tracker import make_queries
 
 # 1. A calibrated 8-camera network (DukeMTMC statistics; DESIGN.md §7)
 net = duke_like_network()
@@ -21,21 +21,22 @@ visits = simulate_network(net, n_entities=1200, horizon=2400, seed=0)
 print(f"simulated {len(visits)} visits of 1200 identities on {net.n_cams} cameras")
 
 # 2. Offline profiling (paper §6): historical partition -> spatio-temporal model
-model = build_model(visits.ent, visits.cam, visits.t_in, visits.t_out,
-                    net.n_cams, time_limit=1600)
+model = rexcam.profile(visits, time_limit=1600)
 S = np.asarray(model.S)
 print(f"peers receiving >=5% of outbound traffic: {(S >= .05).sum(1).mean():.2f}"
       " per camera (paper: 1.9)")
 
-# 3. Live tracking (paper Alg. 1): ReXCam vs the all-camera baseline
+# 3. Live tracking (paper Alg. 1): ReXCam vs the all-camera baseline —
+#    the same SearchPolicy/admit plane the serving engine runs.
 gallery, _ = build_gallery(visits, 24)
 feats, _ = make_features(visits, 1200, FeatureParams())
-queries, gt = make_queries(visits, 25, seed=1)
+queries, gt = rexcam.make_queries(visits, 25, seed=1)
 
-base = track_queries(model, visits, gallery, feats, queries, gt,
-                     TrackerParams(scheme="all"))
-rex = track_queries(model, visits, gallery, feats, queries, gt,
-                    TrackerParams(scheme="rexcam", s_thresh=.05, t_thresh=.02))
+base = rexcam.track(model, visits, gallery, feats, queries, gt,
+                    rexcam.SearchPolicy(scheme="all"))
+rex = rexcam.track(model, visits, gallery, feats, queries, gt,
+                   rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
+                                       t_thresh=.02))
 
 print(f"\nbaseline:  {base.total_cost:9.0f} camera-frames | "
       f"recall {base.recall:.2f} | precision {base.precision:.2f}")

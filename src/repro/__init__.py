@@ -1,7 +1,9 @@
 """repro — ReXCam: resource-efficient cross-camera video analytics, as a JAX framework.
 
 Layers:
-  repro.core      — the paper's contribution (spatio-temporal correlation filtering)
+  repro.api       — stable control-plane facade (profile / track / serve, SearchPolicy)
+  repro.core      — the paper's contribution (spatio-temporal correlation filtering;
+                    core.policy is the single admission/phase control plane)
   repro.models    — analytics backbone model zoo (10 assigned architectures)
   repro.kernels   — Pallas TPU kernels for the inference-plane hot spots
   repro.parallel  — logical-axis sharding rules for the production mesh

@@ -1,0 +1,55 @@
+"""rexcam facade — the stable control-plane API every consumer programs to.
+
+    from repro import api as rexcam
+
+    model  = rexcam.profile(history_visits)                  # offline §6
+    result = rexcam.track(model, visits, gallery, feats,     # batched Alg. 1
+                          q_vids, gt_vids,
+                          policy=rexcam.SearchPolicy(s_thresh=.05))
+    engine = rexcam.serve(model, embed_fn,                   # live engine
+                          policy=rexcam.SearchPolicy())
+
+All three run the SAME admission/phase machinery from
+``repro.core.policy`` — one ``SearchPolicy``, one ``admit``, one phase
+machine — so offline experiments, benchmarks and the live serving plane
+cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.correlation import SpatioTemporalModel
+from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,  # noqa: F401
+                               phase_windows)
+from repro.core.profiler import build_model
+from repro.core.simulate import Visits
+from repro.core.tracker import (TrackResult, make_queries, track_queries,  # noqa: F401
+                                trace_queries)
+from repro.runtime.engine import EngineConfig, ServingEngine
+
+
+def profile(visits: Visits, *, time_limit: int | None = None,
+            n_bins: int = 256, bin_width: int = 1,
+            sample_every: int = 1) -> SpatioTemporalModel:
+    """Offline profiling (paper §6): historical visits -> spatio-temporal
+    model M.  ``time_limit`` restricts profiling to the historical partition
+    (visits *starting* at or after it are excluded)."""
+    return build_model(visits.ent, visits.cam, visits.t_in, visits.t_out,
+                       visits.n_cams, n_bins=n_bins, bin_width=bin_width,
+                       sample_every=sample_every, time_limit=time_limit)
+
+
+def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
+          q_vids, gt_vids, policy: SearchPolicy = SearchPolicy(),
+          geo_adj=None) -> TrackResult:
+    """Batched Algorithm-1 tracking of all queries under one policy."""
+    return track_queries(model, visits, gallery, feats, q_vids, gt_vids,
+                         policy, geo_adj=geo_adj)
+
+
+def serve(model: SpatioTemporalModel, embed_fn: Callable,
+          policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
+          retention: int = 600, geo_adj=None) -> ServingEngine:
+    """Live serving engine driving the same vectorized admission plane."""
+    cfg = EngineConfig(policy=policy, max_batch=max_batch, retention=retention)
+    return ServingEngine(model, embed_fn, cfg, geo_adj=geo_adj)

@@ -3,6 +3,9 @@ cross-camera video analytics (ReXCam §5-§6), plus the calibrated trajectory
 simulators used to validate the paper's claims (DESIGN.md §7).
 """
 from repro.core.correlation import SpatioTemporalModel  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    PhaseState, PhaseWindows, SearchPolicy, admit, advance, phase_windows,
+)
 from repro.core.profiler import build_model, transitions_from_visits  # noqa: F401
 from repro.core.simulate import (  # noqa: F401
     CameraNetwork, Visits, simulate_network, duke_like_network,

@@ -6,10 +6,13 @@
                          times, evaluated at elapsed time since last sighting.
   f0(c_s, c_d)           earliest historical arrival — search starts there.
 
-  M(c_s, c_d, f) = [S >= s_thresh] ∧ [f >= f0] ∧ [CDF(elapsed) <= 1 - t_thresh]
+  M(c_s, c_d, f) = [S ≥ s_thresh] ∧ [f ≥ f0] ∧ [CDF(elapsed) ≤ 1 - t_thresh]
 
 The model is a few small dense arrays — it is the *only* persistent state of
 the ReXCam control plane (paper §7) and is replicated across the serving mesh.
+The threshold/query interface (mask construction, window exhaustion,
+potential savings) lives in ``repro.core.policy``; the methods below are
+thin compatibility delegates over this data container.
 """
 from __future__ import annotations
 
@@ -43,39 +46,29 @@ class SpatioTemporalModel:
     def n_bins(self) -> int:
         return self.cdf.shape[-1]
 
-    # -- the paper's query interface -------------------------------------
+    # -- the paper's query interface (delegates to repro.core.policy) -----
     def spatial_mask(self, c_s: jnp.ndarray, s_thresh: float | jnp.ndarray) -> jnp.ndarray:
         """(C,) bool: destinations spatially correlated with c_s."""
-        return self.S[c_s] >= s_thresh
+        from repro.core import policy
+        return policy.spatial_mask(self, c_s, s_thresh)
 
     def temporal_mask(self, c_s: jnp.ndarray, elapsed: jnp.ndarray,
                       t_thresh: float | jnp.ndarray) -> jnp.ndarray:
-        """(C,) bool: destinations temporally correlated at `elapsed` steps.
-
-        The fraction already arrived at time t is the CDF *before* t's bin —
-        the exclusive form keeps the arrival bin itself searchable even for
-        degenerate (zero-variance) travel-time distributions."""
-        b = jnp.clip(elapsed // self.bin_width, 0, self.n_bins - 1)
-        arrived = jnp.where(b > 0, self.cdf[c_s, :, jnp.maximum(b - 1, 0)], 0.0)
-        started = elapsed >= self.f0[c_s]
-        return started & (arrived <= 1.0 - t_thresh)
+        """(C,) bool: destinations temporally correlated at `elapsed` steps."""
+        from repro.core import policy
+        return policy.temporal_mask(self, c_s, elapsed, t_thresh)
 
     def correlated(self, c_s: jnp.ndarray, elapsed: jnp.ndarray,
                    s_thresh, t_thresh) -> jnp.ndarray:
         """M(c_s, ·, elapsed): (C,) bool mask over destination cameras."""
-        return self.spatial_mask(c_s, s_thresh) & self.temporal_mask(c_s, elapsed, t_thresh)
+        from repro.core import policy
+        return policy.correlated(self, c_s, elapsed, s_thresh, t_thresh)
 
     def window_end(self, s_thresh: float, t_thresh: float) -> jnp.ndarray:
-        """(C,) — per source camera, the elapsed time beyond which NO admitted
-        destination's temporal window is still open (Alg. 1 line 21's
-        exhaustion test, vectorized).  t_thresh=0 never exhausts within the
-        histogram range.  +1 bin for the exclusive-CDF convention of
-        ``temporal_mask``."""
-        open_bins = ((self.cdf <= 1.0 - t_thresh).sum(-1) + 1) * self.bin_width
-        open_bins = jnp.minimum(open_bins, self.n_bins * self.bin_width)  # (C,C)
-        admitted = self.S >= s_thresh
-        ends = jnp.where(admitted, open_bins, 0)
-        return ends.max(axis=1)
+        """(C,) per-source elapsed time at which every admitted destination's
+        temporal window has closed (Alg. 1 line 21's exhaustion test)."""
+        from repro.core import policy
+        return policy.window_end(self, s_thresh, t_thresh)
 
     # -- §5.4 identity detection needs window-binned temporal mass --------
     def window_transfer(self, window: int, n_windows: int) -> jnp.ndarray:
@@ -92,25 +85,9 @@ class SpatioTemporalModel:
 
     def potential_savings(self, s_thresh: float, t_thresh: float,
                           weight_by_traffic: bool = True) -> float:
-        """Analytic potential (paper §3.2): ratio of camera-steps searched by a
-        correlation-agnostic baseline (all C cameras for the max window) to the
-        camera-steps M admits, averaged over source cameras (optionally
-        traffic-weighted).  Spatial-only: t_thresh=0.  Temporal-only:
+        """Analytic potential (paper §3.2): baseline camera-steps over the
+        camera-steps M admits.  Spatial-only: t_thresh=0.  Temporal-only:
         s_thresh=0."""
-        C = self.n_cams
-        sp = np.asarray(self.S) >= s_thresh                 # (C, C) searched pairs
-        cdf = np.asarray(self.cdf)
-        f0 = np.asarray(self.f0)
-        NB = cdf.shape[-1]
-        b = np.arange(NB)[None, None, :] * self.bin_width   # (1,1,NB) bin start times
-        active = (b >= f0[..., None]) & (cdf <= 1.0 - t_thresh)   # (C,C,NB)
-        steps = (active.sum(-1) * self.bin_width) * sp      # (C,C) searched steps
-        per_src = steps.sum(1).astype(np.float64)           # camera-steps per source
-        baseline = C * NB * self.bin_width
-        if weight_by_traffic:
-            w = np.asarray(self.counts).sum(1).astype(np.float64)
-            w = w / max(w.sum(), 1.0)
-            filt = float((per_src * w).sum())
-        else:
-            filt = float(per_src.mean())
-        return baseline / max(filt, 1e-9)
+        from repro.core import policy
+        return policy.potential_savings(self, s_thresh, t_thresh,
+                                        weight_by_traffic)

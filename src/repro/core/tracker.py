@@ -3,19 +3,23 @@
 The whole query set runs as ONE batched ``lax.while_loop`` (state arrays are
 (Q, ...)): each step every live query
 
-  1. asks the spatio-temporal model M which cameras are correlated with its
-     last-seen camera at the current elapsed time (phase 1), with thresholds
-     relaxed x10 (phase 2 = replay), or searches everything (phase 3),
+  1. asks the shared control plane (``repro.core.policy.admit``) which
+     cameras are correlated with its last-seen camera at the current elapsed
+     time (phase 1), with thresholds relaxed x10 (phase 2 = replay), or
+     searches everything (phase 3),
   2. pays compute cost = number of admitted camera-frames,
   3. ranks the admitted galleries by feature distance to its query
      representation (the re-id step the inference plane executes),
-  4. on a match: updates its representation (EMA), resets to phase 1 at the
-     match camera; on exit-threshold expiry: escalates phase.
+  4. hands the match outcome to ``repro.core.policy.advance`` — the same
+     phase machine the live serving engine runs.
 
 Replay lag follows §5.3: phase>=2 processes *historical* frames; skip mode
 (process 1-in-k) and fast-forward mode (k x throughput) trade cost, accuracy
 and delay differently — both are modeled exactly as the deployment would
 behave (skip mode can miss short visits; ff mode costs extra compute).
+
+``SearchPolicy`` supersedes the old ``TrackerParams``; the legacy name is
+kept as an alias for existing callers.
 """
 from __future__ import annotations
 
@@ -27,48 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.correlation import SpatioTemporalModel
+from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
+                               phase_windows)
 from repro.core.simulate import Visits
 
 BIG = jnp.float32(1e9)
 
-
-@dataclasses.dataclass(frozen=True)
-class TrackerParams:
-    """Algorithm-1 parameters.
-
-    Phase semantics (paper §5.2-5.3, Alg. 1 line 21): phase 1 searches the
-    normal spatio-temporal windows; when those are *exhausted* (all admitted
-    cameras past their travel-time windows) the tracker rewinds to f_q+1 and
-    replays with thresholds relaxed x ``relax_factor`` (phase 2).  When the
-    relaxed windows are exhausted too, the model's prediction is that q has
-    exited; ``exhaustive_final=True`` additionally runs the paper's literal
-    "search the entire network until the exit threshold" pass (phase 3) —
-    off by default since the paper's own reported delays (~3s) show this
-    all-camera terminal sweep cannot be running per query (DESIGN.md §7).
-    ``exit_t`` is the baseline's "maximum duration" (§3.2) and an upper bound
-    on every phase.
-    """
-
-    scheme: str = "rexcam"          # rexcam | all | geo | spatial_only
-    s_thresh: float = 0.05
-    t_thresh: float = 0.02
-    exit_t: int = 240               # max steps without a match (baseline window)
-    match_thresh: float = 0.28      # cosine-distance acceptance
-    feat_alpha: float = 0.25        # query-representation EMA rate
-    relax_factor: float = 10.0      # replay threshold relaxation (paper: x10)
-    replay_speed: float = 1.0       # >1 = parallelism ("ff") mode
-    replay_skip: int = 1            # >1 = frame-skip mode
-    use_replay: bool = True
-    exhaustive_final: bool = False  # paper-literal terminal all-camera pass
-    self_window: int = 6            # steps the last-seen camera stays admitted
-
-    @property
-    def use_spatial(self) -> bool:
-        return self.scheme in ("rexcam", "spatial_only")
-
-    @property
-    def use_temporal(self) -> bool:
-        return self.scheme == "rexcam" and self.t_thresh > 0.0
+# Legacy alias: the batched tracker's parameters ARE the shared SearchPolicy.
+TrackerParams = SearchPolicy
 
 
 @dataclasses.dataclass
@@ -126,176 +96,127 @@ def make_queries(visits: Visits, n_queries: int, seed: int = 0,
     return q_vids, gt
 
 
-@partial(jax.jit, static_argnames=("p", "horizon"))
-def _track_jit(model: SpatioTemporalModel, gallery, feats, visit_ent,
-               visit_cam, visit_tout, q_vids, gt_vids, geo_adj, p: TrackerParams,
-               horizon: int):
-    Q = q_vids.shape[0]
+def _rank_galleries(gallery, feats, q_feat, f_curr, mask, match_thresh):
+    """The re-id step: best (distance, camera, vid) per query over the
+    admitted camera-frames at each query's content cursor."""
+    Q = q_feat.shape[0]
     C, T, K = gallery.shape
+    f_idx = jnp.clip(f_curr, 0, T - 1)
+    vids = jnp.take(gallery, f_idx, axis=1)                   # (C, Q, K)
+    vids = vids.transpose(1, 0, 2)                            # (Q, C, K)
+    valid = (vids >= 0) & mask[:, :, None]
+    g = feats[jnp.maximum(vids, 0)]                           # (Q, C, K, D)
+    d = 1.0 - jnp.einsum("qckd,qd->qck", g, q_feat)
+    d = jnp.where(valid, d, BIG)
+    flat = d.reshape(Q, C * K)
+    best = jnp.argmin(flat, axis=1)
+    best_d = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
+    best_cam = (best // K).astype(jnp.int32)
+    best_vid = jnp.take_along_axis(vids.reshape(Q, C * K), best[:, None], 1)[:, 0]
+    matched = best_d < match_thresh
+    return matched, best_cam, best_vid
+
+
+def _track_step(st, model, gallery, feats, visit_ent, q_ent, gt_vids, geo_adj,
+                windows, p: SearchPolicy, horizon: int):
+    """One batched Alg.-1 step shared by the while-loop and the trace scan."""
+    ps: PhaseState = st["ps"]
+
+    mask = admit(model, p, ps, geo_adj)                       # (Q, C)
+    st = dict(st, cost=st["cost"] + mask.sum(1).astype(jnp.float32))
+
+    matched, best_cam, best_vid = _rank_galleries(
+        gallery, feats, st["q_feat"], ps.f_curr, mask, p.match_thresh)
+    matched = matched & ~ps.done
+
+    # --- match bookkeeping ---
+    ent_b = visit_ent[jnp.maximum(best_vid, 0)]
+    correct = matched & (ent_b == q_ent)
+    hits = st["visit_hits"] | (correct[:, None] & (gt_vids == best_vid[:, None]))
+    fb = feats[jnp.maximum(best_vid, 0)]
+    new_feat = (1 - p.feat_alpha) * st["q_feat"] + p.feat_alpha * fb
+    new_feat = new_feat / jnp.maximum(
+        jnp.linalg.norm(new_feat, axis=-1, keepdims=True), 1e-9)
+    was_replay = matched & (ps.phase >= 2)
+    rp = st["rescue_pairs"].at[ps.c_q, best_cam].add(was_replay.astype(jnp.int32))
+
+    st = dict(
+        st,
+        n_match=st["n_match"] + matched.astype(jnp.int32),
+        n_correct=st["n_correct"] + correct.astype(jnp.int32),
+        visit_hits=hits,
+        rescued=st["rescued"] + was_replay.astype(jnp.int32),
+        rescue_pairs=rp,
+        q_feat=jnp.where(matched[:, None], new_feat, st["q_feat"]),
+        ps=advance(p, windows, ps, matched, best_cam, horizon),
+        iters=st["iters"] + 1,
+    )
+    trace = dict(f_curr=ps.f_curr, phase=ps.phase, live=~ps.done, mask=mask,
+                 matched=matched, match_cam=best_cam)
+    return st, trace
+
+
+def _init_state(feats, visit_cam, visit_tout, q_vids, gt_vids, n_cams):
+    Q = q_vids.shape[0]
     Vmax = gt_vids.shape[1]
-
-    q_ent = visit_ent[q_vids]                       # (Q,)
-    c_q0 = visit_cam[q_vids]
-    f_q0 = visit_tout[q_vids]
-
-    state = dict(
-        f_q=f_q0.astype(jnp.int32),
-        c_q=c_q0.astype(jnp.int32),
-        f_curr=(f_q0 + 1).astype(jnp.int32),
-        phase=jnp.ones((Q,), jnp.int32),
+    return dict(
+        rescue_pairs=jnp.zeros((n_cams, n_cams), jnp.int32),
+        ps=PhaseState.init(visit_cam[q_vids], visit_tout[q_vids]),
         q_feat=feats[q_vids],
-        live_f=(f_q0 + 1).astype(jnp.float32),
         cost=jnp.zeros((Q,), jnp.float32),
         n_match=jnp.zeros((Q,), jnp.int32),
         n_correct=jnp.zeros((Q,), jnp.int32),
         visit_hits=jnp.zeros((Q, Vmax), jnp.bool_),
         rescued=jnp.zeros((Q,), jnp.int32),
-        rescue_pairs=jnp.zeros((C, C), jnp.int32),
-        done=jnp.zeros((Q,), jnp.bool_),
         iters=jnp.zeros((), jnp.int32),
     )
 
+
+@partial(jax.jit, static_argnames=("p", "horizon"))
+def _track_jit(model: SpatioTemporalModel, gallery, feats, visit_ent,
+               visit_cam, visit_tout, q_vids, gt_vids, geo_adj, p: SearchPolicy,
+               horizon: int):
+    C = gallery.shape[0]
+    q_ent = visit_ent[q_vids]                       # (Q,)
+    state = _init_state(feats, visit_cam, visit_tout, q_vids, gt_vids, C)
+    windows = phase_windows(model, p)
     max_iters = 4 * horizon
 
-    # Per-source window-exhaustion horizons for phase 1 and the relaxed phase 2.
-    w_end1 = model.window_end(p.s_thresh, p.t_thresh if p.use_temporal else 0.0)
-    w_end2 = model.window_end(p.s_thresh / p.relax_factor,
-                              (p.t_thresh / p.relax_factor) if p.use_temporal else 0.0)
-    w_end1 = jnp.minimum(jnp.maximum(w_end1, p.self_window), p.exit_t)
-    w_end2 = jnp.minimum(jnp.maximum(w_end2, p.self_window), p.exit_t)
-
     def cond(st):
-        return (~st["done"]).any() & (st["iters"] < max_iters)
+        return (~st["ps"].done).any() & (st["iters"] < max_iters)
 
     def body(st):
-        f_curr, f_q, c_q, phase = st["f_curr"], st["f_q"], st["c_q"], st["phase"]
-        live = ~st["done"]
-        elapsed = f_curr - f_q
-
-        # last-seen camera stays admitted briefly (single-camera follow)
-        self_mask = jax.nn.one_hot(c_q, C, dtype=jnp.bool_) & \
-            (elapsed <= p.self_window)[:, None]
-
-        # --- camera admission mask (Q, C) ---
-        if p.scheme == "all":
-            mask = jnp.ones((Q, C), bool)
-        elif p.scheme == "geo":
-            mask = geo_adj[c_q] | self_mask
-        else:
-            relax = jnp.where(phase >= 2, 1.0 / p.relax_factor, 1.0)
-            s_th = p.s_thresh * relax
-            sp = model.S[c_q] >= s_th[:, None] if p.use_spatial else jnp.ones((Q, C), bool)
-            if p.use_temporal:
-                t_th = p.t_thresh * relax
-                b = jnp.clip(elapsed // model.bin_width, 0, model.n_bins - 1)
-                # exclusive CDF: fraction arrived strictly before this bin
-                arrived = jnp.where((b > 0)[:, None],
-                                    model.cdf[c_q, :, jnp.maximum(b - 1, 0)], 0.0)
-                started = elapsed[:, None] >= model.f0[c_q]
-                tp = started & (arrived <= 1.0 - t_th[:, None])
-            else:
-                tp = jnp.ones((Q, C), bool)
-            mask = (sp & tp) | self_mask
-            mask = jnp.where(phase[:, None] >= 3, True, mask)     # exhaustive pass
-
-        # lag-aware processing: behind the live frontier -> historical frames,
-        # optionally sampled 1-in-k (skip mode)
-        behind = f_curr.astype(jnp.float32) < st["live_f"] - 0.5
-        process = jnp.where(behind & (p.replay_skip > 1),
-                            (f_curr - f_q) % p.replay_skip == 0, True)
-        mask = mask & process[:, None] & live[:, None]
-
-        st = dict(st, cost=st["cost"] + mask.sum(1).astype(jnp.float32))
-
-        # --- gallery ranking (the re-id step) ---
-        f_idx = jnp.clip(f_curr, 0, T - 1)
-        vids = jnp.take(gallery, f_idx, axis=1)                   # (C, Q, K)
-        vids = vids.transpose(1, 0, 2)                            # (Q, C, K)
-        valid = (vids >= 0) & mask[:, :, None]
-        g = feats[jnp.maximum(vids, 0)]                           # (Q, C, K, D)
-        d = 1.0 - jnp.einsum("qckd,qd->qck", g, st["q_feat"])
-        d = jnp.where(valid, d, BIG)
-        flat = d.reshape(Q, C * K)
-        best = jnp.argmin(flat, axis=1)
-        best_d = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
-        best_cam = (best // K).astype(jnp.int32)
-        best_vid = jnp.take_along_axis(vids.reshape(Q, C * K), best[:, None], 1)[:, 0]
-        matched = (best_d < p.match_thresh) & live
-
-        # --- match bookkeeping ---
-        ent_b = visit_ent[jnp.maximum(best_vid, 0)]
-        correct = matched & (ent_b == q_ent)
-        hits = st["visit_hits"] | (correct[:, None] & (gt_vids == best_vid[:, None]))
-        fb = feats[jnp.maximum(best_vid, 0)]
-        new_feat = (1 - p.feat_alpha) * st["q_feat"] + p.feat_alpha * fb
-        new_feat = new_feat / jnp.maximum(
-            jnp.linalg.norm(new_feat, axis=-1, keepdims=True), 1e-9)
-        was_replay = matched & (phase >= 2)
-        rp = st["rescue_pairs"].at[c_q, best_cam].add(was_replay.astype(jnp.int32))
-
-        st = dict(
-            st,
-            n_match=st["n_match"] + matched.astype(jnp.int32),
-            n_correct=st["n_correct"] + correct.astype(jnp.int32),
-            visit_hits=hits,
-            rescued=st["rescued"] + was_replay.astype(jnp.int32),
-            rescue_pairs=rp,
-            q_feat=jnp.where(matched[:, None], new_feat, st["q_feat"]),
-            f_q=jnp.where(matched, f_curr, f_q),
-            c_q=jnp.where(matched, best_cam, c_q),
-            phase=jnp.where(matched, 1, phase),
-        )
-
-        # --- time advance + phase escalation ---
-        f_next = f_curr + 1
-        # behind the frontier: content advances (speed*skip) x realtime, so the
-        # live frontier only moves 1/(speed*skip) wall-steps per content step;
-        # caught up: the frontier IS the content time.
-        rate = 1.0 / (p.replay_speed * p.replay_skip)
-        live_next = jnp.where(behind, st["live_f"] + rate, f_next.astype(jnp.float32))
-        live_next = jnp.maximum(live_next, f_next.astype(jnp.float32))
-
-        el_next = f_next - st["f_q"]
-        if p.scheme in ("all", "geo") or not p.use_replay:
-            done_new = st["done"] | (el_next > p.exit_t) | (f_next >= horizon)
-            phase_new = st["phase"]
-            f_new = f_next
-        else:
-            # phase 1 exhausts its windows -> rewind + relax (phase 2);
-            # phase 2 exhausts -> exhaustive pass (phase 3) or conclude exit;
-            # phase 3 runs to the exit threshold.  If even the relaxed model
-            # admits nothing beyond the self-window, the model's prediction is
-            # "exited" — conclude directly, no pointless rewind.
-            nothing_relaxed = w_end2[st["c_q"]] <= p.self_window
-            exh1 = (st["phase"] == 1) & (el_next > w_end1[st["c_q"]])
-            exh2 = (st["phase"] == 2) & (el_next > w_end2[st["c_q"]])
-            exh3 = (st["phase"] >= 3) & (el_next > p.exit_t)
-            if p.exhaustive_final:
-                esc = exh1 | exh2
-                done_new = st["done"] | exh3 | (f_next >= horizon)
-            else:
-                esc = exh1 & ~nothing_relaxed
-                done_new = (st["done"] | (exh1 & nothing_relaxed) | exh2 | exh3
-                            | (f_next >= horizon))
-            phase_new = jnp.where(esc, st["phase"] + 1, st["phase"])
-            f_new = jnp.where(esc, st["f_q"] + 1, f_next)
-
-        return dict(
-            st,
-            f_curr=jnp.where(st["done"], f_curr, f_new),
-            phase=jnp.where(st["done"], phase, phase_new),
-            live_f=jnp.where(st["done"], st["live_f"], live_next),
-            done=done_new,
-            iters=st["iters"] + 1,
-        )
+        st, _ = _track_step(st, model, gallery, feats, visit_ent, q_ent,
+                            gt_vids, geo_adj, windows, p, horizon)
+        return st
 
     st = jax.lax.while_loop(cond, body, state)
-    delay = jnp.maximum(st["live_f"] - st["f_curr"].astype(jnp.float32), 0.0)
+    ps = st["ps"]
+    delay = jnp.maximum(ps.live_f - ps.f_curr.astype(jnp.float32), 0.0)
     return st, delay
 
 
+@partial(jax.jit, static_argnames=("p", "horizon", "n_steps"))
+def _trace_jit(model: SpatioTemporalModel, gallery, feats, visit_ent,
+               visit_cam, visit_tout, q_vids, gt_vids, geo_adj, p: SearchPolicy,
+               horizon: int, n_steps: int):
+    """Fixed-length scan over the SAME step function, recording per-step
+    admission masks and phase transitions (the tracker↔engine parity hook)."""
+    C = gallery.shape[0]
+    q_ent = visit_ent[q_vids]
+    state = _init_state(feats, visit_cam, visit_tout, q_vids, gt_vids, C)
+    windows = phase_windows(model, p)
+
+    def step(st, _):
+        return _track_step(st, model, gallery, feats, visit_ent, q_ent,
+                           gt_vids, geo_adj, windows, p, horizon)
+
+    st, trace = jax.lax.scan(step, state, None, length=n_steps)
+    return st, trace
+
+
 def track_queries(model: SpatioTemporalModel, visits: Visits, gallery,
-                  feats, q_vids, gt_vids, p: TrackerParams,
+                  feats, q_vids, gt_vids, p: SearchPolicy,
                   geo_adj=None) -> TrackResult:
     C = visits.n_cams
     if geo_adj is None:
@@ -324,3 +245,32 @@ def track_queries(model: SpatioTemporalModel, visits: Visits, gallery,
         rescued=np.asarray(st["rescued"]),
         rescue_pairs=np.asarray(st["rescue_pairs"]),
     )
+
+
+def trace_queries(model: SpatioTemporalModel, visits: Visits, gallery,
+                  feats, q_vids, gt_vids, p: SearchPolicy, geo_adj=None,
+                  n_steps: int | None = None) -> dict:
+    """Run the tracker for a fixed number of steps, returning the per-step
+    trace: f_curr/phase/live (n_steps, Q), mask (n_steps, Q, C), matched and
+    match_cam (n_steps, Q).  Steps where ``live`` is False are padding past a
+    query's termination."""
+    C = visits.n_cams
+    if geo_adj is None:
+        geo_adj = np.ones((C, C), bool)
+    if n_steps is None:
+        n_steps = 4 * visits.horizon
+    _, trace = _trace_jit(
+        model,
+        jnp.asarray(gallery),
+        jnp.asarray(feats),
+        jnp.asarray(visits.ent, jnp.int32),
+        jnp.asarray(visits.cam, jnp.int32),
+        jnp.asarray(visits.t_out, jnp.int32),
+        jnp.asarray(q_vids, jnp.int32),
+        jnp.asarray(gt_vids, jnp.int32),
+        jnp.asarray(geo_adj),
+        p,
+        visits.horizon,
+        n_steps,
+    )
+    return {k: np.asarray(v) for k, v in trace.items()}

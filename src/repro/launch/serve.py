@@ -1,9 +1,11 @@
 """Serving driver: ReXCam-filtered cross-camera analytics on live streams.
 
-Replays a calibrated camera-network simulation through the ServingEngine:
-the spatio-temporal model decides which (camera, frame) pairs reach the
-inference plane; the engine batches them, embeds (feature oracle or a smoke
-backbone), ranks with the re-id kernel semantics, and tracks queries.
+Replays a calibrated camera-network simulation through the ServingEngine via
+the ``repro.api`` facade: one SearchPolicy decides which (camera, frame)
+pairs reach the inference plane; the engine vector-admits all queries at
+once, batches and embeds the deduplicated frames (feature oracle or a smoke
+backbone), ranks with the re-id kernel semantics, and replays the FrameStore
+ring buffer when a query escalates to phase 2.
 
   PYTHONPATH=src python -m repro.launch.serve --queries 8 --steps 600
 """
@@ -12,13 +14,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
-from repro.core import (build_gallery, build_model, duke_like_network,
-                        simulate_network)
+from repro import api as rexcam
+from repro.core import build_gallery, duke_like_network, simulate_network
 from repro.core.features import FeatureParams, make_features
-from repro.core.tracker import make_queries
-from repro.runtime import EngineConfig, ServingEngine
 
 
 def main():
@@ -27,19 +25,21 @@ def main():
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--s-thresh", type=float, default=0.05)
     ap.add_argument("--t-thresh", type=float, default=0.02)
+    ap.add_argument("--scheme", default="rexcam",
+                    choices=["rexcam", "all", "geo", "spatial_only"])
     args = ap.parse_args()
 
     net = duke_like_network()
     vis = simulate_network(net, 1500, 3000, seed=0)
     gal, _ = build_gallery(vis, 24)
-    model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, net.n_cams,
-                        time_limit=2000)
+    model = rexcam.profile(vis, time_limit=2000)
     feats, _ = make_features(vis, 1500, FeatureParams())
-    q_vids, _ = make_queries(vis, args.queries, seed=1)
+    q_vids, _ = rexcam.make_queries(vis, args.queries, seed=1)
 
-    eng = ServingEngine(model, embed_fn=lambda x: x,
-                        cfg=EngineConfig(s_thresh=args.s_thresh,
-                                         t_thresh=args.t_thresh))
+    policy = rexcam.SearchPolicy(scheme=args.scheme, s_thresh=args.s_thresh,
+                                 t_thresh=args.t_thresh)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
+                       geo_adj=net.geo_adjacent)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -60,16 +60,19 @@ def main():
     wall = time.time() - wall0
 
     naive = args.steps * net.n_cams
-    print(f"steps={args.steps} queries={args.queries}")
+    print(f"steps={args.steps} queries={args.queries} scheme={policy.scheme}")
     print(f"frames processed: {eng.frames_processed} "
           f"(naive all-camera: {naive}; savings {naive/max(eng.frames_processed,1):.1f}x)")
-    print(f"matches flagged: {matches}")
+    print(f"matches flagged: {matches} "
+          f"(replay rescues: {sum(q.rescued for q in eng.queries.values())}, "
+          f"replay misses past retention: {eng.replay_misses})")
     print(f"frame-store residency: {eng.store.memory_frames()} frames "
           f"(retention {eng.cfg.retention}s — paper §5.3 'last few minutes')")
     print(f"wall: {wall:.2f}s ({args.steps/max(wall,1e-9):.0f} steps/s)")
     for qid, q in eng.queries.items():
-        print(f"  query {qid}: {len(q.matches)} matches, "
-              f"{'done' if q.done else f'tracking (phase {q.phase})'}")
+        lag = max(eng.t - 1 - q.f_curr, 0)
+        state = "done" if q.done else f"tracking (phase {q.phase}, lag {lag}s)"
+        print(f"  query {qid}: {len(q.matches)} matches, {state}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.layers import Params, _dtype, _pdtype, dense_init
+from repro.parallel.compat import shard_map
 from repro.parallel.sharding import constrain, get_mesh_context
 
 MOE_CHUNK = 8192          # tokens per dispatch chunk (per device)
@@ -237,7 +238,7 @@ def moe_block(p: Params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax
         return y, aux, zl
 
     tokens = x.reshape(B * S, D)
-    y, aux, zl = jax.shard_map(
+    y, aux, zl = shard_map(
         body, mesh=mesh,
         in_specs=(tok_spec, P(), w_e_spec, w_e_spec, wo_spec),
         out_specs=(tok_spec, P(), P()),

@@ -1,0 +1,37 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the newest jax mesh/shard_map surface but must run on the
+baked-in toolchain (jax 0.4.x), where ``jax.sharding.AxisType`` and
+``jax.shard_map`` do not exist yet.  All mesh construction and shard_map
+entry points go through these helpers so the version split lives in exactly
+one module.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit axis types
+    _AXIS_TYPE = jax.sharding.AxisType
+except AttributeError:  # jax 0.4.x: meshes are implicitly Auto
+    _AXIS_TYPE = None
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        # check_vma was named check_rep before the API moved to jax.shard_map
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)

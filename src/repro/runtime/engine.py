@@ -1,16 +1,29 @@
 """The serving engine: ReXCam admission control over the inference plane.
 
-Per tick (one content step over all live camera streams):
+Per tick (one wall step over all live camera streams):
 
-  1. every active tracking query asks the spatio-temporal model which
-     (camera, frame) pairs to admit (``repro.core.tracker`` semantics),
-  2. admitted frames are deduplicated across queries (a frame is detected /
-     embedded once no matter how many queries want it — the fleet-scale
-     batching win),
-  3. the batch runs through the backbone embed function and the
-     ``reid_topk`` kernel against each query's representation,
-  4. matches update tracker states; misses escalate to replay, which reads
-     the ``FrameStore`` ring buffer.
+  1. ALL active queries are gathered into one batched
+     ``repro.core.policy.PhaseState`` and a single vectorized
+     ``policy.admit`` call (jit, policy static) produces the (Q, C)
+     admission mask — the same function, windows and phase machine the
+     batched offline tracker runs, so the two planes cannot drift,
+  2. admitted (camera, frame) pairs are deduplicated across queries (a
+     frame is detected / embedded once no matter how many queries want it —
+     the fleet-scale batching win),
+  3. the batch runs through the backbone embed function and each query
+     ranks its admitted galleries against its representation (argmin over
+     camera-major order, the ``reid_topk`` kernel semantics),
+  4. match outcomes feed ``policy.advance``: matches re-anchor to phase 1;
+     a query whose phase-1 windows exhaust REWINDS its cursor to f_q + 1
+     and replays retained frames out of the ``FrameStore`` ring buffer with
+     relaxed thresholds (§5.3) — frames evicted past the retention window
+     surface as ``replay_misses`` (the cold-storage fallback the paper
+     mentions).
+
+Replay pacing follows §5.3: a lagging query consumes
+``policy.replay_speed * policy.replay_skip`` content steps per wall tick
+(skip mode samples 1-in-k of them inside ``admit``), so fast-forward mode
+catches back up to the live frontier at k x throughput.
 
 The engine is deliberately backbone-agnostic: ``embed_fn(frames) ->
 (n, D)`` may be a smoke-scale transformer from ``repro.models`` or the
@@ -19,23 +32,29 @@ simulator's feature oracle (tests).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.correlation import SpatioTemporalModel
+from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
+                               phase_windows)
 from repro.runtime.stream_store import FrameStore
+
+# effectively "never": the live engine terminates queries via exit_t /
+# window exhaustion, not a simulation horizon
+_NO_HORIZON = 2 ** 30
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    s_thresh: float = 0.05
-    t_thresh: float = 0.02
-    match_thresh: float = 0.28
-    feat_alpha: float = 0.25
-    relax_factor: float = 10.0
-    self_window: int = 6
-    exit_t: int = 240
+    """Engine-plane settings.  All *search* semantics live in ``policy`` —
+    the same ``SearchPolicy`` the offline tracker takes."""
+
+    policy: SearchPolicy = SearchPolicy()
     max_batch: int = 256
     retention: int = 600
 
@@ -46,48 +65,96 @@ class QueryState:
     feat: np.ndarray
     c_q: int
     f_q: int
+    f_curr: int            # content frame the search cursor is on
     phase: int = 1
     done: bool = False
     matches: list = dataclasses.field(default_factory=list)
+    rescued: int = 0       # matches made during replay (phase >= 2)
+    replay_credit: float = 0.0  # fractional replay-round carry (ff pacing)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _admit_jit(model, policy: SearchPolicy, state: PhaseState, geo_adj=None):
+    return admit(model, policy, state, geo_adj)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _advance_jit(policy: SearchPolicy, windows, state: PhaseState,
+                 matched, match_cam):
+    return advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
 
 
 class ServingEngine:
     def __init__(self, model: SpatioTemporalModel, embed_fn: Callable,
-                 cfg: EngineConfig):
+                 cfg: EngineConfig, geo_adj=None):
         self.model = model
         self.embed_fn = embed_fn
         self.cfg = cfg
+        self.policy = cfg.policy
         self.C = model.n_cams
+        # the geo baseline's proximity mask; all-ones when not provided
+        # (same default as the tracker)
+        self._geo_adj = jnp.asarray(
+            geo_adj if geo_adj is not None else np.ones((self.C, self.C), bool))
         self.store = FrameStore(self.C, cfg.retention)
         self.queries: dict[int, QueryState] = {}
         self.t = 0
         self.frames_processed = 0
+        self.replay_misses = 0       # replay reads past the retention window
         self.ticks = 0
-        self._S = np.asarray(model.S)
-        self._cdf = np.asarray(model.cdf)
-        self._f0 = np.asarray(model.f0)
-        self._w_end1 = np.asarray(model.window_end(cfg.s_thresh, cfg.t_thresh))
-        self._w_end2 = np.asarray(model.window_end(
-            cfg.s_thresh / cfg.relax_factor, cfg.t_thresh / cfg.relax_factor))
+        self._windows = phase_windows(model, cfg.policy)
 
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
-        self.queries[qid] = QueryState(qid, feat / max(np.linalg.norm(feat), 1e-9),
-                                       cam, frame)
+        self.queries[qid] = QueryState(
+            qid, feat / max(np.linalg.norm(feat), 1e-9), cam, frame,
+            f_curr=frame + 1)
 
-    def _admitted(self, q: QueryState, t: int) -> np.ndarray:
-        cfg = self.cfg
-        elapsed = t - q.f_q
-        relax = cfg.relax_factor if q.phase >= 2 else 1.0
-        s_th = cfg.s_thresh / relax
-        t_th = cfg.t_thresh / relax
-        b = np.clip(elapsed // self.model.bin_width, 0, self.model.n_bins - 1)
-        arrived = self._cdf[q.c_q, :, max(b - 1, 0)] if b > 0 else 0.0
-        mask = (self._S[q.c_q] >= s_th) & (elapsed >= self._f0[q.c_q]) & \
-            (arrived <= 1.0 - t_th)
-        if elapsed <= cfg.self_window:
-            mask[q.c_q] = True
-        return mask
+    # -- batched state marshalling ---------------------------------------
+    def _gather(self, qs: list[QueryState]) -> PhaseState:
+        """Engine QueryStates -> one batched PhaseState.  The live frontier
+        is the engine wall clock: frames through ``self.t`` are ingested.
+
+        The batch is padded to the next power of two with ``done`` rows so
+        the jitted admit/advance compile for O(log Q) shapes instead of one
+        per live-query count (done rows admit nothing and never advance).
+        """
+        n = len(qs)
+        N = 1 << max(n - 1, 0).bit_length()
+        pad = N - n
+
+        def col(vals, fill, dtype):
+            return jnp.asarray(np.array(vals + [fill] * pad, dtype))
+
+        return PhaseState(
+            f_q=col([q.f_q for q in qs], 0, np.int32),
+            c_q=col([q.c_q for q in qs], 0, np.int32),
+            f_curr=col([q.f_curr for q in qs], 0, np.int32),
+            phase=col([q.phase for q in qs], 1, np.int32),
+            live_f=col([float(self.t)] * n, 0.0, np.float32),
+            done=col([False] * n, True, np.bool_),
+        )
+
+    def _scatter(self, qs: list[QueryState], ps: PhaseState,
+                 matched: np.ndarray, match_cam: np.ndarray, gals: list):
+        """Write the advanced PhaseState back into the QueryState objects."""
+        a = self.policy.feat_alpha
+        f_q = np.asarray(ps.f_q)
+        c_q = np.asarray(ps.c_q)
+        f_curr = np.asarray(ps.f_curr)
+        phase = np.asarray(ps.phase)
+        done = np.asarray(ps.done)
+        for i, q in enumerate(qs):
+            if matched[i]:
+                emb = gals[i][1]
+                q.feat = (1 - a) * q.feat + a * emb
+                q.feat /= max(np.linalg.norm(q.feat), 1e-9)
+                if q.phase >= 2:
+                    q.rescued += 1
+                q.matches.append((int(match_cam[i]), int(q.f_curr)))
+            q.f_q, q.c_q = int(f_q[i]), int(c_q[i])
+            q.f_curr, q.phase = int(f_curr[i]), int(phase[i])
+            q.done = bool(done[i])
 
     # -- per-tick ----------------------------------------------------------
     def ingest(self, frames_by_cam: dict[int, Any]):
@@ -95,62 +162,123 @@ class ServingEngine:
         for cam, frame in frames_by_cam.items():
             self.store.append(cam, self.t, frame)
 
-    def tick(self) -> dict:
-        """One admission+inference round over the live step. Returns stats."""
-        cfg = self.cfg
-        wanted: dict[tuple[int, int], list[int]] = {}
+    def tick(self, record_trace: list | None = None) -> dict:
+        """One admission+inference round over all live queries at once.
+
+        A caught-up query consumes one content step; a replaying query
+        consumes up to ``policy.replay_rate`` content steps (extra rounds),
+        which is how fast-forward mode catches up.  Returns stats; pass a
+        list as ``record_trace`` to collect (qid, f_curr, phase, mask) per
+        processed round (the parity-test hook).
+        """
+        stats = {"t": self.t, "admitted": 0, "batched": 0, "matches": 0,
+                 "replay_misses": 0}
+        # Replay pacing: a lagging query earns policy.replay_rate content
+        # rounds per wall tick, with the fractional remainder carried across
+        # ticks so e.g. replay_speed=1.5 really averages 1.5x, matching the
+        # tracker's continuous live_f model.  Caught-up queries get 1 round.
+        budget = {}
         for q in self.queries.values():
             if q.done:
                 continue
-            mask = self._admitted(q, self.t)
-            for cam in np.where(mask)[0]:
-                wanted.setdefault((int(cam), self.t), []).append(q.qid)
-
-        # dedup: each admitted frame embeds once (fleet batching win)
-        batch_keys = [k for k in wanted if self.store.get(*k) is not None]
-        stats = {"t": self.t, "admitted": len(wanted), "batched": len(batch_keys),
-                 "matches": 0}
-        for start in range(0, len(batch_keys), cfg.max_batch):
-            keys = batch_keys[start:start + cfg.max_batch]
-            crops, owners = [], []
-            for key in keys:
-                for crop in self.store.get(*key):
-                    crops.append(crop)
-                    owners.append(key)
-            if not crops:
-                continue
-            emb = self.embed_fn(np.stack(crops))           # (n, D)
-            emb = emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
-            self.frames_processed += len(keys)
-            for key, qids in ((k, wanted[k]) for k in keys):
-                idx = [i for i, o in enumerate(owners) if o == key]
-                if not idx:
-                    continue
-                gal = emb[idx]
-                for qid in qids:
-                    q = self.queries[qid]
-                    s = gal @ q.feat
-                    j = int(np.argmax(s))
-                    if 1.0 - s[j] < cfg.match_thresh:
-                        self._on_match(q, key[0], key[1], gal[j])
-                        stats["matches"] += 1
-
-        # escalation / termination
-        for q in self.queries.values():
-            if q.done:
-                continue
-            elapsed = self.t - q.f_q
-            if q.phase == 1 and elapsed > min(self._w_end1[q.c_q], cfg.exit_t):
-                q.phase = 2
-            elif q.phase >= 2 and elapsed > min(self._w_end2[q.c_q], cfg.exit_t):
-                q.done = True
+            if q.f_curr >= self.t:
+                q.replay_credit = 0.0
+                budget[q.qid] = 1
+            else:
+                q.replay_credit += self.policy.replay_rate
+                rounds = int(q.replay_credit)
+                q.replay_credit -= rounds
+                budget[q.qid] = rounds
+        while True:
+            qs = [q for q in self.queries.values()
+                  if not q.done and budget.get(q.qid, 0) > 0
+                  and q.f_curr <= self.t]
+            if not qs:
+                break
+            for q in qs:
+                # live queries only get 1 content step per wall tick
+                budget[q.qid] -= 1 if q.f_curr < self.t \
+                    else budget[q.qid]
+            self._round(qs, stats, record_trace)
         self.t += 1
         self.ticks += 1
         return stats
 
-    def _on_match(self, q: QueryState, cam: int, t: int, feat: np.ndarray):
-        a = self.cfg.feat_alpha
-        q.feat = (1 - a) * q.feat + a * feat
-        q.feat /= max(np.linalg.norm(q.feat), 1e-9)
-        q.c_q, q.f_q, q.phase = cam, t, 1
-        q.matches.append((cam, t))
+    def _round(self, qs: list[QueryState], stats: dict,
+               trace: list | None) -> None:
+        ps = self._gather(qs)
+        mask = np.asarray(
+            _admit_jit(self.model, self.policy, ps, self._geo_adj))  # (n, C)
+
+        # dedup: each admitted (cam, frame) pair embeds once (fleet batching)
+        wanted: dict[tuple[int, int], list[int]] = {}
+        for i, q in enumerate(qs):
+            for cam in np.flatnonzero(mask[i]):
+                wanted.setdefault((int(cam), q.f_curr), []).append(i)
+        stats["admitted"] += len(wanted)
+
+        batch_keys, frames = [], {}
+        for key in wanted:
+            try:
+                frame = self.store.get(*key)
+            except KeyError:            # evicted: cold-storage miss (§5.3)
+                self.replay_misses += 1
+                stats["replay_misses"] += 1
+                continue
+            if frame is not None:
+                batch_keys.append(key)
+                frames[key] = frame
+        stats["batched"] += len(batch_keys)
+
+        key_emb: dict[tuple[int, int], np.ndarray] = {}
+        for start in range(0, len(batch_keys), self.cfg.max_batch):
+            keys = batch_keys[start:start + self.cfg.max_batch]
+            crops, counts = [], []
+            for key in keys:
+                crops.extend(frames[key])
+                counts.append(len(frames[key]))
+            if not crops:
+                continue
+            emb = self.embed_fn(np.stack(crops))           # (n, D)
+            emb = emb / np.maximum(
+                np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+            self.frames_processed += len(keys)
+            pos = 0
+            for key, n in zip(keys, counts):
+                key_emb[key] = emb[pos:pos + n]
+                pos += n
+
+        # per-query ranking over its admitted galleries, camera-major order
+        # (identical tie-breaking to the tracker's flat argmin); arrays span
+        # the padded batch so advance sees matching shapes
+        matched = np.zeros(mask.shape[0], bool)
+        match_cam = np.zeros(mask.shape[0], np.int32)
+        gals: list = [None] * len(qs)
+        for i, q in enumerate(qs):
+            cams, blocks = [], []
+            for cam in np.flatnonzero(mask[i]):
+                emb = key_emb.get((int(cam), q.f_curr))
+                if emb is not None and len(emb):
+                    cams.append(int(cam))
+                    blocks.append(emb)
+            if not blocks:
+                continue
+            gal = np.concatenate(blocks)
+            d = 1.0 - gal @ q.feat
+            j = int(np.argmin(d))
+            if d[j] < self.policy.match_thresh:
+                matched[i] = True
+                sizes = np.cumsum([len(b) for b in blocks])
+                match_cam[i] = cams[int(np.searchsorted(sizes, j, "right"))]
+                gals[i] = (match_cam[i], gal[j])
+                stats["matches"] += 1
+
+        if trace is not None:
+            for i, q in enumerate(qs):
+                trace.append(dict(qid=q.qid, f_curr=q.f_curr, phase=q.phase,
+                                  mask=mask[i].copy(), matched=bool(matched[i]),
+                                  match_cam=int(match_cam[i])))
+
+        ps_next = _advance_jit(self.policy, self._windows, ps,
+                               jnp.asarray(matched), jnp.asarray(match_cam))
+        self._scatter(qs, ps_next, matched, match_cam, gals)

@@ -1,0 +1,83 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (not pip-installable here).
+
+Implements just the surface the test suite uses — ``given``, ``settings`` and
+the ``integers / lists / booleans / sampled_from / composite`` strategies —
+with a fixed-seed RNG so runs are reproducible.  When the real hypothesis is
+importable the test modules use it instead; this shim only keeps the property
+tests exercising many generated examples on minimal images.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+_DEFAULT_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq) -> Strategy:
+    items = list(seq)
+    return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return Strategy(sample)
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args) becomes a strategy factory."""
+    def factory(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+        return Strategy(sample)
+    return factory
+
+
+def given(*strategies: Strategy):
+    def deco(fn):
+        # NOT functools.wraps: the wrapper must expose a zero-arg signature or
+        # pytest tries to resolve the drawn parameters as fixtures.
+        def wrapper():
+            rng = random.Random(0xC0FFEE)
+            for _ in range(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)):
+                fn(*[s.sample(rng) for s in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        # pytest plugins (anyio) unwrap property tests via .hypothesis.inner_test
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+st = types.SimpleNamespace(
+    integers=integers, booleans=booleans, sampled_from=sampled_from,
+    lists=lists, composite=composite,
+)

@@ -1,7 +1,10 @@
 """Profiler + spatio-temporal model properties (unit + hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image: deterministic fallback shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.correlation import INF_TIME
 from repro.core.profiler import (build_model, profiling_cost, subsample_visits,

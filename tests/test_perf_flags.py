@@ -108,8 +108,8 @@ def test_serve_flags_decode_equivalence_on_mesh():
         tok = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, cfg.vocab_size)
         ref, _ = decode_step(params, state, tok, cfg)
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(4, 2)
         flags = PerfFlags(serve_params_replicated=True, serve_seq_sharded_kv=True)
         with perf_flags(flags), mesh_context(mesh, SINGLE_POD_RULES):
             step, _ = build_decode_step(cfg, mesh, SINGLE_POD_RULES,
@@ -135,8 +135,8 @@ def test_moe_tp_dispatch_flag_equivalence():
 
         cfg = dataclasses.replace(get_smoke_config("qwen3_moe_30b"),
                                   capacity_factor=8.0)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(4, 2)
         p, _ = init_moe(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
                               jnp.float32)

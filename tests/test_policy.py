@@ -1,0 +1,268 @@
+"""The shared control plane (repro.core.policy): unit behaviour, the
+tracker↔engine parity contract, and the engine's phase-2 replay rewind.
+
+The parity test is the one that keeps the control-plane fork from
+reopening: both consumers drive the SAME ``admit``/``advance`` and must
+produce identical admission masks and phase transitions step for step.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import api as rexcam
+from repro.core import build_gallery, build_model
+from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
+                               phase_windows)
+from repro.core.simulate import Visits
+from repro.core.tracker import make_queries, trace_queries
+from test_tracker import _toy_world
+
+
+# ---------------------------------------------------------------------------
+# unit behaviour
+# ---------------------------------------------------------------------------
+
+def _state(c_q, f_q, f_curr, phase, live_f=None):
+    n = len(c_q)
+    return PhaseState(
+        f_q=jnp.asarray(f_q, jnp.int32), c_q=jnp.asarray(c_q, jnp.int32),
+        f_curr=jnp.asarray(f_curr, jnp.int32),
+        phase=jnp.asarray(phase, jnp.int32),
+        live_f=jnp.asarray(live_f if live_f is not None else f_curr, jnp.float32),
+        done=jnp.zeros(n, jnp.bool_))
+
+
+def test_phase2_relaxation_admits_superset(duke_sim):
+    model = duke_sim["model"]
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02)
+    s1 = _state([0, 3], [100, 200], [110, 215], [1, 1])
+    s2 = _state([0, 3], [100, 200], [110, 215], [2, 2])
+    m1 = np.asarray(admit(model, p, s1))
+    m2 = np.asarray(admit(model, p, s2))
+    assert (m2 | m1 == m2).all(), "relaxed phase-2 mask must be a superset"
+    assert m2.sum() >= m1.sum()
+
+
+def test_done_queries_admit_nothing(duke_sim):
+    model = duke_sim["model"]
+    p = SearchPolicy()
+    s = _state([0], [100], [110], [1])
+    s = PhaseState(**{**{f.name: getattr(s, f.name) for f in
+                         type(s).__dataclass_fields__.values()},
+                      "done": jnp.ones(1, jnp.bool_)})
+    assert not np.asarray(admit(model, p, s)).any()
+
+
+def test_advance_rewinds_on_phase1_exhaustion(duke_sim):
+    """Alg. 1 line 21: exhausted phase-1 windows rewind to f_q + 1, relaxed."""
+    model = duke_sim["model"]
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=240)
+    w = phase_windows(model, p)
+    c = 0
+    f_q = 500
+    el = int(np.asarray(w.w_end1)[c])           # el_next = el + 1 > w_end1
+    s = _state([c], [f_q], [f_q + el], [1], live_f=[f_q + el])
+    nxt = advance(p, w, s, jnp.zeros(1, bool), jnp.zeros(1, jnp.int32),
+                  horizon=10 ** 6)
+    assert int(nxt.phase[0]) == 2
+    assert int(nxt.f_curr[0]) == f_q + 1        # the rewind
+    assert not bool(nxt.done[0])
+
+
+def test_advance_match_resets_to_phase1(duke_sim):
+    model = duke_sim["model"]
+    p = SearchPolicy()
+    w = phase_windows(model, p)
+    s = _state([2], [100], [140], [2], live_f=[160])
+    nxt = advance(p, w, s, jnp.ones(1, bool), jnp.asarray([5], jnp.int32),
+                  horizon=10 ** 6)
+    assert int(nxt.phase[0]) == 1
+    assert int(nxt.c_q[0]) == 5
+    assert int(nxt.f_q[0]) == 140
+    assert int(nxt.f_curr[0]) == 141
+
+
+# ---------------------------------------------------------------------------
+# tracker↔engine parity — the anti-fork contract
+# ---------------------------------------------------------------------------
+
+def _drive_engine(vis, gal, feats, model, q_vids, policy, extra_ticks=400,
+                  retention=10 ** 6):
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
+                       retention=retention)
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    trace = []
+    for t in range(vis.horizon + extra_ticks):
+        if t < vis.horizon:
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+        eng.tick(record_trace=trace)
+        if all(q.done for q in eng.queries.values()):
+            break
+    return eng, trace
+
+
+def test_tracker_engine_admission_parity():
+    """Same network, same queries: the batched tracker and the serving
+    engine must emit IDENTICAL admission masks and phase transitions."""
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 2, seed=0)
+    p = SearchPolicy(scheme="rexcam", s_thresh=0.3, t_thresh=0.02, exit_t=60)
+
+    tr = trace_queries(model, vis, gal, feats, q_vids, gt_vids, p,
+                       n_steps=2 * vis.horizon)
+    eng, etrace = _drive_engine(vis, gal, feats, model, q_vids, p)
+
+    for i in range(len(q_vids)):
+        live = tr["live"][:, i]
+        t_steps = [
+            (int(tr["f_curr"][s, i]), int(tr["phase"][s, i]),
+             tuple(tr["mask"][s, i]), bool(tr["matched"][s, i]),
+             int(tr["match_cam"][s, i]) if tr["matched"][s, i] else -1)
+            for s in np.flatnonzero(live)
+        ]
+        e_steps = [
+            (rec["f_curr"], rec["phase"], tuple(rec["mask"]), rec["matched"],
+             rec["match_cam"] if rec["matched"] else -1)
+            for rec in etrace if rec["qid"] == i
+        ]
+        assert len(t_steps) > 20, "trace unexpectedly short"
+        assert e_steps == t_steps, (
+            f"query {i}: engine and tracker control planes diverged at step "
+            f"{next(s for s, (a, b) in enumerate(zip(e_steps, t_steps)) if a != b)}")
+        assert eng.queries[i].done
+
+
+def test_tracker_engine_parity_all_scheme():
+    """The baseline scheme runs through the same shared plane too."""
+    vis, gal, feats, model = _toy_world()
+    q_vids, gt_vids = make_queries(vis, 1, seed=0)
+    p = SearchPolicy(scheme="all", exit_t=30)
+    tr = trace_queries(model, vis, gal, feats, q_vids, gt_vids, p,
+                       n_steps=2 * vis.horizon)
+    eng, etrace = _drive_engine(vis, gal, feats, model, q_vids, p)
+    live = tr["live"][:, 0]
+    t_phases = [(int(tr["f_curr"][s, 0]), tuple(tr["mask"][s, 0]))
+                for s in np.flatnonzero(live)]
+    e_phases = [(rec["f_curr"], tuple(rec["mask"])) for rec in etrace]
+    assert e_phases == t_phases
+
+
+# ---------------------------------------------------------------------------
+# engine phase-2 replay — the missed-detection rescue (§5.3)
+# ---------------------------------------------------------------------------
+
+def _rare_path_world(n_common=49, n_rare=1, travel=10, dwell=5):
+    """3 cameras: c0->c1 dominates history (S≈0.98); c0->c2 is rare
+    (S≈0.02 — below s_thresh=.05, above the relaxed .005).  The tracked
+    entity takes the rare path, so phase 1 prunes the true camera and only
+    the phase-2 replay can recover the sighting."""
+    ents, cams, tin, tout = [], [], [], []
+    t0 = 0
+    n = n_common + n_rare + 1                   # +1 = the tracked entity
+    for e in range(n):
+        t = t0 + e * 40
+        dst = 2 if (e >= n_common) else 1       # rare path for the last two
+        for c in (0, dst):
+            ents.append(e)
+            cams.append(c)
+            tin.append(t)
+            tout.append(t + dwell)
+            t += dwell + travel
+    horizon = max(tout) + 60
+    vis = Visits(np.array(ents), np.array(cams), np.array(tin),
+                 np.array(tout), horizon, 3)
+    feats = np.zeros((len(vis), 64), np.float32)
+    for v in range(len(vis)):
+        feats[v, vis.ent[v] % 64] = 1.0
+    gal = np.full((3, horizon, 4), -1, np.int32)
+    fill = np.zeros((3, horizon), np.int32)
+    for v in range(len(vis)):
+        for t in range(vis.t_in[v], vis.t_out[v] + 1):
+            gal[vis.cam[v], t, fill[vis.cam[v], t]] = v
+            fill[vis.cam[v], t] += 1
+    model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, 3,
+                        time_limit=(n - 1) * 40)
+    return vis, gal, feats, model
+
+
+def test_engine_replay_rescues_missed_detection():
+    vis, gal, feats, model = _rare_path_world()
+    S = np.asarray(model.S)
+    assert S[0, 2] < 0.05 and S[0, 2] >= 0.005, S[0]  # rare but not absent
+
+    q = len(vis) - 2                            # tracked entity's c0 visit
+    assert vis.ent[q] == vis.ent[q + 1] and vis.cam[q + 1] == 2
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120)
+
+    def run(policy):
+        eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy)
+        eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+        for t in range(vis.horizon):
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+            eng.tick()
+        return eng.queries[0]
+
+    missed = run(SearchPolicy(**{**p.__dict__, "use_replay": False}))
+    assert len(missed.matches) == 0, "phase-1 thresholds must prune c2"
+
+    rescued = run(p)
+    assert len(rescued.matches) > 0, "replay failed to recover the sighting"
+    assert rescued.rescued > 0, "the recovery must be attributed to replay"
+    assert rescued.matches[0][0] == 2            # found on the rare camera
+    # the match frame is HISTORICAL: strictly behind the live frontier when
+    # it was made (that is what 'replay from the FrameStore' means)
+    assert rescued.matches[0][1] >= vis.t_in[q + 1]
+
+
+def test_engine_replay_miss_past_retention():
+    """Rewinds past the ring buffer surface as replay_misses, not crashes."""
+    vis, gal, feats, model = _rare_path_world()
+    q = len(vis) - 2
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=p, retention=2)
+    eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    for t in range(vis.horizon):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick()
+    assert eng.replay_misses > 0
+    assert len(eng.queries[0].matches) == 0
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+def test_api_track_matches_direct_call(duke_sim):
+    from repro.core.tracker import track_queries
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02)
+    a = rexcam.track(duke_sim["model"], duke_sim["vis"], duke_sim["gal"],
+                     duke_sim["feats"], duke_sim["q_vids"],
+                     duke_sim["gt_vids"], p)
+    b = track_queries(duke_sim["model"], duke_sim["vis"], duke_sim["gal"],
+                      duke_sim["feats"], duke_sim["q_vids"],
+                      duke_sim["gt_vids"], p)
+    np.testing.assert_array_equal(a.cost, b.cost)
+    np.testing.assert_array_equal(a.n_match, b.n_match)
+
+
+def test_api_profile_equals_build_model(duke_sim):
+    vis = duke_sim["vis"]
+    m = rexcam.profile(vis, time_limit=1600)
+    np.testing.assert_allclose(np.asarray(m.S),
+                               np.asarray(duke_sim["model"].S))

@@ -33,8 +33,8 @@ def test_moe_ep_matches_local_dispatch():
 
         cfg = dataclasses.replace(get_smoke_config("qwen3_moe_30b"),
                                   capacity_factor=8.0)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(4, 2)
         key = jax.random.PRNGKey(0)
         p, _ = init_moe(key, cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
@@ -74,8 +74,8 @@ def test_tiny_mesh_train_step_executes():
         from repro.parallel.sharding import SINGLE_POD_RULES, mesh_context
 
         cfg = get_smoke_config("yi_6b")
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(4, 2)
         shape = ShapeSpec("t", "train", 64, 8)
         with mesh_context(mesh, SINGLE_POD_RULES):
             step, _ = build_train_step(cfg, mesh, SINGLE_POD_RULES, shape)
@@ -113,8 +113,8 @@ def test_sharded_equals_single_device():
                                                   (4, 32), 0, cfg.vocab_size)}
             ref, _ = forward(params, batch, cfg)
 
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh(4, 2)
             rules = SINGLE_POD_RULES
             def is_ax(x):
                 return isinstance(x, tuple) and all(
@@ -145,8 +145,8 @@ def test_dryrun_cell_tiny_mesh_multipod():
         from repro.parallel.sharding import MULTI_POD_RULES, mesh_context
 
         cfg = get_smoke_config("qwen2_vl_72b")
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 2, pod=2)
         with mesh_context(mesh, MULTI_POD_RULES):
             step, abstract = build_train_step(cfg, mesh, MULTI_POD_RULES,
                                               ShapeSpec("t", "train", 64, 8))
