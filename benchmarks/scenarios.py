@@ -110,3 +110,57 @@ def policy_sweep(scenarios=("duke", "porto130")):
                          f"precision={r.precision:.2f} "
                          f"rescued={int(r.rescued.sum())}"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# serving_sweep: the live engine's cost accounting, per scheme.
+# ---------------------------------------------------------------------------
+
+def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
+    """Engine-plane sweep: drive the live ``ServingEngine`` per scheme over
+    real ingest and report the two cost conventions separately —
+    ``admitted_steps`` (per-query camera-steps, directly comparable with the
+    tracker's cost and ``policy_sweep``'s savings multipliers) and
+    ``unique_frames`` (deduplicated inference load), plus the multipliers
+    the serving plane adds on top: cross-query dedup and the FrameStore
+    embedding-cache hit rate on replay re-reads."""
+    builders = {"duke": lambda: duke(60)}
+    rows = []
+    for sc_name in scenarios:
+        sc = builders[sc_name]()
+        vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
+        q_vids = sc["q_vids"][:n_queries]
+        base = None
+        for pname, policy in SWEEP_POLICIES:
+            t0c = time.perf_counter()
+            eng = rexcam.serve(sc["model"], embed_fn=lambda x: x,
+                               policy=policy, geo_adj=net.geo_adjacent)
+            t0 = int(vis.t_out[q_vids].min())
+            eng.t = t0
+            for i, q in enumerate(q_vids):
+                eng.submit_query(i, feats[q], int(vis.cam[q]),
+                                 int(vis.t_out[q]))
+            matches = 0
+            for t in range(t0, min(t0 + steps, vis.horizon)):
+                frames = {}
+                for c in range(net.n_cams):
+                    vids = gal[c, t][gal[c, t] >= 0]
+                    if len(vids):
+                        frames[c] = feats[vids]
+                eng.ingest(frames)
+                matches += eng.tick()["matches"]
+            us = (time.perf_counter() - t0c) * 1e6 / max(len(q_vids), 1)
+            if pname == "all":
+                base = eng.admitted_steps
+            savings = base / max(eng.admitted_steps, 1)
+            dedup = eng.admitted_steps / max(eng.unique_frames, 1)
+            # hit rate over replay re-reads only — live first-embeds can
+            # never be cache hits and would just dilute the number
+            hot = eng.cache_hits / max(eng.cache_hits + eng.replay_embeds, 1)
+            rows.append((f"serving_sweep/{sc['name']}/{pname}", us,
+                         f"savings={savings:.1f}x "
+                         f"admitted_steps={eng.admitted_steps} "
+                         f"unique_frames={eng.unique_frames} "
+                         f"dedup={dedup:.1f}x replay_cache_hot={hot:.2f} "
+                         f"matches={matches}"))
+    return rows

@@ -219,6 +219,16 @@ def phase_windows(model: "SpatioTemporalModel", policy: SearchPolicy) -> PhaseWi
 # admit — the one admission-mask construction.
 # ---------------------------------------------------------------------------
 
+def replay_sampled_out(policy: SearchPolicy, f_q, f_curr, behind):
+    """§5.3 skip mode: True where a replaying cursor's content frame is
+    sampled out by the 1-in-k gate (its admission mask is all-False by
+    construction).  Works batched (jnp arrays, inside ``admit``) and scalar
+    (python ints/bools, the engine's host-side short-circuit of sampled-out
+    replay rounds) — so the gate lives in exactly one place."""
+    if policy.replay_skip <= 1:
+        return behind & False          # shape/type-preserving all-False
+    return behind & ((f_curr - f_q) % policy.replay_skip != 0)
+
 def admit(model: "SpatioTemporalModel", policy: SearchPolicy, state: PhaseState,
           geo_adj=None) -> jnp.ndarray:
     """(Q, C) bool: which cameras each live query searches at its cursor.
@@ -253,9 +263,7 @@ def admit(model: "SpatioTemporalModel", policy: SearchPolicy, state: PhaseState,
 
     # lag-aware processing: behind the live frontier -> historical frames,
     # optionally sampled 1-in-k (skip mode)
-    process = jnp.where(state.behind & (policy.replay_skip > 1),
-                        (state.f_curr - state.f_q) % policy.replay_skip == 0,
-                        True)
+    process = ~replay_sampled_out(policy, state.f_q, state.f_curr, state.behind)
     return mask & process[:, None] & (~state.done)[:, None]
 
 

@@ -6,4 +6,5 @@ holds the jit'd public wrappers (auto-interpret off-TPU).
 """
 from repro.kernels.ops import (  # noqa: F401
     decode_attention, flash_attention, mamba_scan, reid_topk,
+    reid_topk_masked,
 )

@@ -17,6 +17,7 @@ from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.reid_topk import reid_topk as _reid
+from repro.kernels.reid_topk import reid_topk_masked as _reid_masked
 
 
 def _auto_interpret(interpret):
@@ -44,6 +45,17 @@ def reid_topk(queries, gallery, k: int, *, block_q: int = 128,
               block_g: int = 512, interpret: bool | None = None):
     return _reid(queries, gallery, k, block_q=block_q, block_g=block_g,
                  interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_g", "interpret"))
+def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
+                     k: int, *, block_q: int = 128, block_g: int = 512,
+                     interpret: bool | None = None):
+    """Segment-masked gallery ranking (the serving engine's match path):
+    query q only scores gallery rows whose camera it admits at its frame."""
+    return _reid_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
+                        k, block_q=block_q, block_g=block_g,
+                        interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))

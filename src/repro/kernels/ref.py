@@ -47,6 +47,19 @@ def reid_topk_ref(queries, gallery, k: int):
     return jax.lax.top_k(s, k)
 
 
+def reid_topk_masked_ref(queries, q_frame, admit, gallery, gal_cam,
+                         gal_frame, k: int):
+    """Oracle for the segment-masked engine variant: query q may only score
+    gallery row g when ``admit[q, gal_cam[g]]`` and ``gal_frame[g] ==
+    q_frame[q]``.  Fully-masked top-k slots come back as (NEG_INF, -1)."""
+    s = queries.astype(jnp.float32) @ gallery.astype(jnp.float32).T
+    gal_cam = jnp.asarray(gal_cam, jnp.int32)
+    valid = admit[:, gal_cam] & \
+        (jnp.asarray(gal_frame)[None, :] == jnp.asarray(q_frame)[:, None])
+    sv, si = jax.lax.top_k(jnp.where(valid, s, NEG_INF), k)
+    return sv, jnp.where(sv > NEG_INF / 2, si, -1)
+
+
 def mamba_scan_ref(u, dt, Bm, Cm, A, h0):
     """Sequential (step-by-step) selective scan oracle.
 

@@ -7,6 +7,17 @@ L2-normalized: d = 2 - 2*s), and the ranking keeps a (block_q, K) running
 top-k in VMEM merged tile-by-tile across gallery blocks — the full (Q, G)
 score matrix never reaches HBM.
 
+Ragged shapes: real gallery sizes are whatever the admission filter lets
+through, so both entry points pad Q/G up to block multiples internally and
+mask the padding to NEG_INF inside the kernel (padded indices come back as
+-1 in the returned top-k).
+
+``reid_topk_masked`` is the serving-engine variant: one deduplicated
+embedding batch per round, where query q may only score gallery row g when
+``admit[q, gal_cam[g]]`` is set and ``gal_frame[g] == q_frame[q]`` — the
+segment mask is enforced on-device (camera membership via a one-hot GEMM,
+MXU-friendly; no (Q, G) mask ever materializes in HBM).
+
 Grid (nq, ng): gallery axis innermost, top-k state carried in VMEM scratch.
 """
 from __future__ import annotations
@@ -21,8 +32,36 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_rows(a, n: int, fill):
+    pad = n - a.shape[0]
+    if pad <= 0:
+        return a
+    return jnp.concatenate(
+        [a, jnp.full((pad,) + a.shape[1:], fill, a.dtype)], axis=0)
+
+
+def _blocks(dim: int, block: int, align: int):
+    """Shrink ``block`` to the (aligned) extent of a small axis, then round
+    the axis up to a whole number of blocks."""
+    block = min(block, _round_up(dim, align))
+    return block, _round_up(dim, block)
+
+
+def _merge_topk(s, cols, val_scr, idx_scr, k: int):
+    """Fold one (block_q, block_g) score tile into the running VMEM top-k."""
+    merged_v = jnp.concatenate([val_scr[...], s], axis=1)
+    merged_i = jnp.concatenate([idx_scr[...], cols], axis=1)
+    top_v, pos = jax.lax.top_k(merged_v, k)
+    val_scr[...] = top_v
+    idx_scr[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+
 def _reid_kernel(q_ref, g_ref, sv_ref, si_ref, val_scr, idx_scr, *,
-                 k: int, block_g: int, ng: int):
+                 k: int, block_g: int, ng: int, g_real: int):
     gi = pl.program_id(1)
 
     @pl.when(gi == 0)
@@ -36,13 +75,8 @@ def _reid_kernel(q_ref, g_ref, sv_ref, si_ref, val_scr, idx_scr, *,
                             preferred_element_type=jnp.float32)  # (block_q, block_g)
     base = gi * block_g
     cols = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    # merge running top-k with this tile's scores
-    merged_v = jnp.concatenate([val_scr[...], s], axis=1)
-    merged_i = jnp.concatenate([idx_scr[...], cols], axis=1)
-    top_v, pos = jax.lax.top_k(merged_v, k)
-    top_i = jnp.take_along_axis(merged_i, pos, axis=1)
-    val_scr[...] = top_v
-    idx_scr[...] = top_i
+    s = jnp.where(cols < g_real, s, NEG_INF)              # gallery padding
+    _merge_topk(s, cols, val_scr, idx_scr, k)
 
     @pl.when(gi == ng - 1)
     def _finalize():
@@ -50,22 +84,35 @@ def _reid_kernel(q_ref, g_ref, sv_ref, si_ref, val_scr, idx_scr, *,
         si_ref[...] = idx_scr[...]
 
 
+def _mask_padded(sv, si):
+    """Padded / fully-masked slots surface as idx -1."""
+    return sv, jnp.where(sv > NEG_INF / 2, si, -1)
+
+
+def _empty(Q: int, k: int):
+    return (jnp.full((Q, k), NEG_INF, jnp.float32),
+            jnp.full((Q, k), -1, jnp.int32))
+
+
 def reid_topk(queries, gallery, k: int, *, block_q: int = 128,
               block_g: int = 512, interpret: bool = False):
     """queries: (Q, D); gallery: (G, D) -> (scores (Q, k), idx (Q, k)).
 
     Scores are inner products, descending (for unit features,
-    distance = 2 - 2*score).
+    distance = 2 - 2*score).  Q and G may be any size: inputs are padded to
+    block multiples internally and padded slots come back as (NEG_INF, -1).
     """
     Q, D = queries.shape
     G = gallery.shape[0]
-    block_q = min(block_q, Q)
-    block_g = min(block_g, G)
-    assert Q % block_q == 0 and G % block_g == 0
-    nq, ng = Q // block_q, G // block_g
+    if Q == 0 or G == 0:
+        return _empty(Q, k)
+    block_q, Qp = _blocks(Q, block_q, 8)
+    block_g, Gp = _blocks(G, block_g, 128)
+    nq, ng = Qp // block_q, Gp // block_g
 
-    kernel = functools.partial(_reid_kernel, k=k, block_g=block_g, ng=ng)
-    return pl.pallas_call(
+    kernel = functools.partial(_reid_kernel, k=k, block_g=block_g, ng=ng,
+                               g_real=G)
+    sv, si = pl.pallas_call(
         kernel,
         grid=(nq, ng),
         in_specs=[
@@ -77,12 +124,106 @@ def reid_topk(queries, gallery, k: int, *, block_q: int = 128,
             pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((Q, k), jnp.float32),
-            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, k), jnp.float32),
             pltpu.VMEM((block_q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, gallery)
+    )(_pad_rows(queries, Qp, 0), _pad_rows(gallery, Gp, 0))
+    return _mask_padded(sv[:Q], si[:Q])
+
+
+def _reid_masked_kernel(q_ref, qf_ref, adm_ref, g_ref, gf_ref, oh_ref,
+                        sv_ref, si_ref, val_scr, idx_scr, *,
+                        k: int, block_g: int, ng: int, g_real: int):
+    gi = pl.program_id(1)
+
+    @pl.when(gi == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, NEG_INF)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    q = q_ref[...].astype(jnp.float32)                    # (block_q, D)
+    g = g_ref[...].astype(jnp.float32)                    # (block_g, D)
+    s = jax.lax.dot_general(q, g, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (block_q, block_g)
+    # camera admission via one-hot GEMM: (block_q, C) @ (C, block_g) on the
+    # MXU — avoids a lane-axis gather of admit[:, gal_cam]
+    cam_ok = jax.lax.dot_general(
+        adm_ref[...].astype(jnp.float32), oh_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32) > 0.5
+    frame_ok = qf_ref[...] == gf_ref[...]                 # (block_q, block_g)
+    base = gi * block_g
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cam_ok & frame_ok & (cols < g_real), s, NEG_INF)
+    _merge_topk(s, cols, val_scr, idx_scr, k)
+
+    @pl.when(gi == ng - 1)
+    def _finalize():
+        sv_ref[...] = val_scr[...]
+        si_ref[...] = idx_scr[...]
+
+
+def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
+                     k: int, *, block_q: int = 128, block_g: int = 512,
+                     interpret: bool = False):
+    """Segment-masked gallery ranking over one deduplicated embedding batch.
+
+    queries (Q, D); q_frame (Q,) int32 — the content frame each query's
+    cursor is on; admit (Q, C) bool — the admission mask; gallery (G, D);
+    gal_cam / gal_frame (G,) int32 — which (camera, frame) each gallery row
+    came from.  Query q scores row g only when ``admit[q, gal_cam[g]]`` and
+    ``gal_frame[g] == q_frame[q]``; everything else is NEG_INF.  Returns
+    (scores (Q, k), idx (Q, k)) with fully-masked slots as (NEG_INF, -1).
+    """
+    Q, D = queries.shape
+    G = gallery.shape[0]
+    C = admit.shape[1]
+    if Q == 0 or G == 0:
+        return _empty(Q, k)
+    block_q, Qp = _blocks(Q, block_q, 8)
+    block_g, Gp = _blocks(G, block_g, 128)
+    Cp = _round_up(C, 8)
+    nq, ng = Qp // block_q, Gp // block_g
+
+    queries = _pad_rows(queries, Qp, 0)
+    q_frame = _pad_rows(jnp.asarray(q_frame, jnp.int32)[:, None], Qp, -1)
+    admit = _pad_rows(admit.astype(jnp.float32), Qp, 0.0)
+    admit = jnp.pad(admit, ((0, 0), (0, Cp - C)))
+    gallery = _pad_rows(gallery, Gp, 0)
+    gal_cam = _pad_rows(jnp.asarray(gal_cam, jnp.int32), Gp, -1)
+    gal_frame = _pad_rows(jnp.asarray(gal_frame, jnp.int32), Gp, -2)[None, :]
+    # (Cp, Gp) camera one-hot; padded rows (cam -1) match no camera
+    onehot = (gal_cam[None, :] == jnp.arange(Cp)[:, None]).astype(jnp.float32)
+
+    kernel = functools.partial(_reid_masked_kernel, k=k, block_g=block_g,
+                               ng=ng, g_real=G)
+    sv, si = pl.pallas_call(
+        kernel,
+        grid=(nq, ng),
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, 1), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, Cp), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_g, D), lambda qi, gi: (gi, 0)),
+            pl.BlockSpec((1, block_g), lambda qi, gi: (0, gi)),
+            pl.BlockSpec((Cp, block_g), lambda qi, gi: (0, gi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, q_frame, admit, gallery, gal_frame, onehot)
+    return _mask_padded(sv[:Q], si[:Q])

@@ -59,10 +59,20 @@ def main():
         matches += stats["matches"]
     wall = time.time() - wall0
 
-    naive = args.steps * net.n_cams
+    # two cost conventions (don't mix them): admitted_steps is per-query
+    # camera-steps (comparable with the tracker / policy_sweep); the frame
+    # counts are the serving plane's deduplicated inference load
+    naive_steps = args.steps * net.n_cams * len(q_vids)
+    naive_frames = args.steps * net.n_cams
     print(f"steps={args.steps} queries={args.queries} scheme={policy.scheme}")
-    print(f"frames processed: {eng.frames_processed} "
-          f"(naive all-camera: {naive}; savings {naive/max(eng.frames_processed,1):.1f}x)")
+    print(f"admission: {eng.admitted_steps} camera-steps "
+          f"(naive all-camera: {naive_steps}; "
+          f"savings {naive_steps/max(eng.admitted_steps,1):.1f}x)")
+    print(f"inference plane: {eng.unique_frames} unique frames "
+          f"({eng.frames_processed} embedded + {eng.cache_hits} cache-hot; "
+          f"dedup {eng.admitted_steps/max(eng.unique_frames,1):.1f}x; "
+          f"naive per-camera: {naive_frames}; "
+          f"savings {naive_frames/max(eng.frames_processed,1):.1f}x)")
     print(f"matches flagged: {matches} "
           f"(replay rescues: {sum(q.rescued for q in eng.queries.values())}, "
           f"replay misses past retention: {eng.replay_misses})")

@@ -9,10 +9,14 @@ Per tick (one wall step over all live camera streams):
      batched offline tracker runs, so the two planes cannot drift,
   2. admitted (camera, frame) pairs are deduplicated across queries (a
      frame is detected / embedded once no matter how many queries want it —
-     the fleet-scale batching win),
-  3. the batch runs through the backbone embed function and each query
-     ranks its admitted galleries against its representation (argmin over
-     camera-major order, the ``reid_topk`` kernel semantics),
+     the fleet-scale batching win), with replay re-reads served from the
+     ``FrameStore`` embedding cache so a still-retained frame is never
+     embedded twice,
+  3. the deduplicated embedding batch is ranked ON DEVICE: one
+     ``kernels.reid_topk_masked`` pass scores every query against exactly
+     its admitted galleries (camera-major order, so tie-breaking is
+     bit-identical to the tracker's flat argmin) and returns
+     matched / match_cam / match_emb for the whole round,
   4. match outcomes feed ``policy.advance``: matches re-anchor to phase 1;
      a query whose phase-1 windows exhaust REWINDS its cursor to f_q + 1
      and replays retained frames out of the ``FrameStore`` ring buffer with
@@ -22,8 +26,15 @@ Per tick (one wall step over all live camera streams):
 
 Replay pacing follows §5.3: a lagging query consumes
 ``policy.replay_speed * policy.replay_skip`` content steps per wall tick
-(skip mode samples 1-in-k of them inside ``admit``), so fast-forward mode
-catches back up to the live frontier at k x throughput.
+(skip mode samples 1-in-k of them inside ``admit``).  Sampled-out replay
+rounds are short-circuited on the host — the content step is still charged,
+but no admission/inference work is dispatched for a round whose mask is
+all-False by construction.
+
+Cost accounting reports BOTH conventions: ``admitted_steps`` counts
+per-query camera-steps (comparable with the tracker's / ``policy_sweep``'s
+cost), while ``unique_frames`` counts deduplicated (camera, frame) pairs
+(the serving plane's actual inference load).
 
 The engine is deliberately backbone-agnostic: ``embed_fn(frames) ->
 (n, D)`` may be a smoke-scale transformer from ``repro.models`` or the
@@ -41,7 +52,8 @@ import numpy as np
 
 from repro.core.correlation import SpatioTemporalModel
 from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
-                               phase_windows)
+                               phase_windows, replay_sampled_out)
+from repro.kernels import ops as kernel_ops
 from repro.runtime.stream_store import FrameStore
 
 # effectively "never": the live engine terminates queries via exit_t /
@@ -57,6 +69,8 @@ class EngineConfig:
     policy: SearchPolicy = SearchPolicy()
     max_batch: int = 256
     retention: int = 600
+    embed_cache: bool = True          # FrameStore embedding cache (§5.3)
+    short_circuit_skips: bool = True  # host fast path for sampled-out rounds
 
 
 @dataclasses.dataclass
@@ -84,6 +98,29 @@ def _advance_jit(policy: SearchPolicy, windows, state: PhaseState,
     return advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
 
 
+@partial(jax.jit, static_argnames=("match_thresh",))
+def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
+               match_thresh: float):
+    """One device pass over the round's deduplicated embedding batch.
+
+    ``reid_topk_masked`` (k=1) scores each query against exactly its
+    admitted galleries; the best score converts back to the cosine distance
+    the control plane thresholds on.  Returns (matched (Q,), match_cam (Q,),
+    match_emb (Q, D)) — unmatched rows carry cam 0 and an arbitrary row.
+    """
+    sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
+                                         gal_cam, gal_frame, 1)
+    dist = 1.0 - sv[:, 0]
+    matched = dist < match_thresh
+    idx = jnp.maximum(si[:, 0], 0)
+    match_cam = jnp.where(matched, gal_cam[idx], 0).astype(jnp.int32)
+    return matched, match_cam, gallery[idx]
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class ServingEngine:
     def __init__(self, model: SpatioTemporalModel, embed_fn: Callable,
                  cfg: EngineConfig, geo_adj=None):
@@ -99,10 +136,20 @@ class ServingEngine:
         self.store = FrameStore(self.C, cfg.retention)
         self.queries: dict[int, QueryState] = {}
         self.t = 0
-        self.frames_processed = 0
+        self.frames_processed = 0    # (cam, frame) batches actually embedded
+        self.cache_hits = 0          # embed calls avoided by the cache
+        self.replay_embeds = 0       # replay re-reads the cache missed
+        self.admitted_steps = 0      # per-query camera-steps (tracker scale)
+        self.unique_frames = 0       # deduplicated (cam, frame) pairs
+        self.content_steps = 0       # per-query content rounds charged
+        self.replay_steps = 0        # content rounds behind the frontier
+        self.skipped_steps = 0       # short-circuited sampled-out rounds
         self.replay_misses = 0       # replay reads past the retention window
         self.ticks = 0
         self._windows = phase_windows(model, cfg.policy)
+        # host copies of the exhaustion windows for the skip fast path
+        self._w1 = np.asarray(self._windows.w_end1)
+        self._w2 = np.asarray(self._windows.w_end2)
 
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
@@ -120,7 +167,7 @@ class ServingEngine:
         per live-query count (done rows admit nothing and never advance).
         """
         n = len(qs)
-        N = 1 << max(n - 1, 0).bit_length()
+        N = _pow2(n)
         pad = N - n
 
         def col(vals, fill, dtype):
@@ -136,7 +183,8 @@ class ServingEngine:
         )
 
     def _scatter(self, qs: list[QueryState], ps: PhaseState,
-                 matched: np.ndarray, match_cam: np.ndarray, gals: list):
+                 matched: np.ndarray, match_cam: np.ndarray,
+                 match_emb: np.ndarray | None):
         """Write the advanced PhaseState back into the QueryState objects."""
         a = self.policy.feat_alpha
         f_q = np.asarray(ps.f_q)
@@ -146,7 +194,7 @@ class ServingEngine:
         done = np.asarray(ps.done)
         for i, q in enumerate(qs):
             if matched[i]:
-                emb = gals[i][1]
+                emb = match_emb[i]
                 q.feat = (1 - a) * q.feat + a * emb
                 q.feat /= max(np.linalg.norm(q.feat), 1e-9)
                 if q.phase >= 2:
@@ -171,8 +219,10 @@ class ServingEngine:
         list as ``record_trace`` to collect (qid, f_curr, phase, mask) per
         processed round (the parity-test hook).
         """
-        stats = {"t": self.t, "admitted": 0, "batched": 0, "matches": 0,
-                 "replay_misses": 0}
+        stats = {"t": self.t, "admitted_steps": 0, "unique_frames": 0,
+                 "batched": 0, "embedded": 0, "cache_hits": 0,
+                 "replay_embeds": 0, "matches": 0, "replay_misses": 0,
+                 "content_steps": 0, "replay_steps": 0, "skipped_rounds": 0}
         # Replay pacing: a lagging query earns policy.replay_rate content
         # rounds per wall tick, with the fractional remainder carried across
         # ticks so e.g. replay_speed=1.5 really averages 1.5x, matching the
@@ -206,79 +256,178 @@ class ServingEngine:
 
     def _round(self, qs: list[QueryState], stats: dict,
                trace: list | None) -> None:
+        stats["content_steps"] += len(qs)
+        self.content_steps += len(qs)
+        replaying = sum(q.f_curr < self.t for q in qs)
+        stats["replay_steps"] += replaying
+        self.replay_steps += replaying
+
+        # §5.3 skip mode: a sampled-out replay cursor admits nothing by
+        # construction — advance it on the host instead of paying a full
+        # gather/admit/rank dispatch (the content step is already charged).
+        # Trace records are buffered per qid and emitted in the original
+        # round order so the fast path stays trace-identical to the slow one.
+        all_qs = qs
+        records: dict[int, dict] = {}
+        if self.cfg.short_circuit_skips and self.policy.replay_skip > 1:
+            gated = [q for q in qs
+                     if replay_sampled_out(self.policy, q.f_q, q.f_curr,
+                                           q.f_curr < self.t)]
+            if gated:
+                self._skip_round(gated, stats,
+                                 records if trace is not None else None)
+                gated_ids = {q.qid for q in gated}
+                qs = [q for q in qs if q.qid not in gated_ids]
+                if not qs:
+                    if trace is not None:
+                        trace.extend(records[q.qid] for q in all_qs)
+                    return
+
+        n = len(qs)
         ps = self._gather(qs)
         mask = np.asarray(
-            _admit_jit(self.model, self.policy, ps, self._geo_adj))  # (n, C)
+            _admit_jit(self.model, self.policy, ps, self._geo_adj))  # (N, C)
+        adm = int(mask[:n].sum())
+        stats["admitted_steps"] += adm
+        self.admitted_steps += adm
 
         # dedup: each admitted (cam, frame) pair embeds once (fleet batching)
-        wanted: dict[tuple[int, int], list[int]] = {}
+        wanted: set[tuple[int, int]] = set()
         for i, q in enumerate(qs):
             for cam in np.flatnonzero(mask[i]):
-                wanted.setdefault((int(cam), q.f_curr), []).append(i)
-        stats["admitted"] += len(wanted)
+                wanted.add((int(cam), q.f_curr))
+        stats["unique_frames"] += len(wanted)
+        self.unique_frames += len(wanted)
 
-        batch_keys, frames = [], {}
-        for key in wanted:
+        # camera-major key order: ascending gallery index reproduces the
+        # tracker's flat-argmin tie-break within every query's admitted set
+        batch_keys: list[tuple[int, int]] = []
+        frames: dict[tuple[int, int], Any] = {}
+        key_emb: dict[tuple[int, int], np.ndarray] = {}
+        for key in sorted(wanted):
+            if self.cfg.embed_cache:
+                emb = self.store.get_emb(*key)
+                if emb is not None:     # replay re-read: skip re-embedding
+                    key_emb[key] = emb
+                    batch_keys.append(key)
+                    stats["cache_hits"] += 1
+                    self.cache_hits += 1
+                    continue
             try:
                 frame = self.store.get(*key)
             except KeyError:            # evicted: cold-storage miss (§5.3)
                 self.replay_misses += 1
                 stats["replay_misses"] += 1
                 continue
-            if frame is not None:
+            if frame is not None and len(frame):
                 batch_keys.append(key)
                 frames[key] = frame
         stats["batched"] += len(batch_keys)
 
-        key_emb: dict[tuple[int, int], np.ndarray] = {}
-        for start in range(0, len(batch_keys), self.cfg.max_batch):
-            keys = batch_keys[start:start + self.cfg.max_batch]
-            crops, counts = [], []
-            for key in keys:
-                crops.extend(frames[key])
-                counts.append(len(frames[key]))
-            if not crops:
-                continue
+        to_embed = [k for k in batch_keys if k not in key_emb]
+        for start in range(0, len(to_embed), self.cfg.max_batch):
+            keys = to_embed[start:start + self.cfg.max_batch]
+            counts = [len(frames[key]) for key in keys]
+            crops = [c for key in keys for c in frames[key]]
             emb = self.embed_fn(np.stack(crops))           # (n, D)
             emb = emb / np.maximum(
                 np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
             self.frames_processed += len(keys)
+            stats["embedded"] += len(keys)
+            # keys behind the wall clock are replay re-reads the cache missed
+            replay_embeds = sum(key[1] < self.t for key in keys)
+            stats["replay_embeds"] += replay_embeds
+            self.replay_embeds += replay_embeds
             pos = 0
-            for key, n in zip(keys, counts):
-                key_emb[key] = emb[pos:pos + n]
-                pos += n
+            for key, cnt in zip(keys, counts):
+                key_emb[key] = emb[pos:pos + cnt]
+                if self.cfg.embed_cache:
+                    self.store.put_emb(*key, key_emb[key])
+                pos += cnt
 
-        # per-query ranking over its admitted galleries, camera-major order
-        # (identical tie-breaking to the tracker's flat argmin); arrays span
-        # the padded batch so advance sees matching shapes
-        matched = np.zeros(mask.shape[0], bool)
-        match_cam = np.zeros(mask.shape[0], np.int32)
-        gals: list = [None] * len(qs)
-        for i, q in enumerate(qs):
-            cams, blocks = [], []
-            for cam in np.flatnonzero(mask[i]):
-                emb = key_emb.get((int(cam), q.f_curr))
-                if emb is not None and len(emb):
-                    cams.append(int(cam))
-                    blocks.append(emb)
-            if not blocks:
-                continue
-            gal = np.concatenate(blocks)
-            d = 1.0 - gal @ q.feat
-            j = int(np.argmin(d))
-            if d[j] < self.policy.match_thresh:
-                matched[i] = True
-                sizes = np.cumsum([len(b) for b in blocks])
-                match_cam[i] = cams[int(np.searchsorted(sizes, j, "right"))]
-                gals[i] = (match_cam[i], gal[j])
-                stats["matches"] += 1
+        # one jitted rank pass over the whole round: every query scores
+        # exactly its admitted galleries via the segment-masked reid kernel
+        N = mask.shape[0]
+        matched = np.zeros(N, bool)
+        match_cam = np.zeros(N, np.int32)
+        match_emb = None
+        if batch_keys:
+            counts = [len(key_emb[k]) for k in batch_keys]
+            gal = np.concatenate(
+                [key_emb[k] for k in batch_keys]).astype(np.float32)
+            gal_cam = np.repeat([k[0] for k in batch_keys],
+                                counts).astype(np.int32)
+            gal_frame = np.repeat([k[1] for k in batch_keys],
+                                  counts).astype(np.int32)
+            G = gal.shape[0]
+            Gp = _pow2(G)               # pow2-pad: bounded jit recompiles
+            if Gp > G:
+                gal = np.concatenate(
+                    [gal, np.zeros((Gp - G, gal.shape[1]), np.float32)])
+                gal_cam = np.concatenate([gal_cam, np.full(Gp - G, -1, np.int32)])
+                gal_frame = np.concatenate(
+                    [gal_frame, np.full(Gp - G, -1, np.int32)])
+            q_feat = np.zeros((N, gal.shape[1]), np.float32)
+            q_frame = np.full(N, -1, np.int32)
+            for i, q in enumerate(qs):
+                q_feat[i] = q.feat
+                q_frame[i] = q.f_curr
+            m, mc, me = rank_round(
+                jnp.asarray(q_feat), jnp.asarray(q_frame), jnp.asarray(mask),
+                jnp.asarray(gal), jnp.asarray(gal_cam), jnp.asarray(gal_frame),
+                self.policy.match_thresh)
+            matched = np.asarray(m)
+            match_cam = np.asarray(mc)
+            match_emb = np.asarray(me)
+            stats["matches"] += int(matched[:n].sum())
 
         if trace is not None:
             for i, q in enumerate(qs):
-                trace.append(dict(qid=q.qid, f_curr=q.f_curr, phase=q.phase,
-                                  mask=mask[i].copy(), matched=bool(matched[i]),
-                                  match_cam=int(match_cam[i])))
+                records[q.qid] = dict(
+                    qid=q.qid, f_curr=q.f_curr, phase=q.phase,
+                    mask=mask[i].copy(), matched=bool(matched[i]),
+                    match_cam=int(match_cam[i]))
+            trace.extend(records[q.qid] for q in all_qs)
 
         ps_next = _advance_jit(self.policy, self._windows, ps,
                                jnp.asarray(matched), jnp.asarray(match_cam))
-        self._scatter(qs, ps_next, matched, match_cam, gals)
+        self._scatter(qs, ps_next, matched, match_cam, match_emb)
+
+    def _skip_round(self, qs: list[QueryState], stats: dict,
+                    records: dict | None) -> None:
+        """Host mirror of one no-match ``policy.advance`` step for
+        sampled-out replay rounds (their admission mask is all-False, so no
+        inference can happen; only the cursor/phase machine moves).  Must
+        stay transition-identical to ``advance`` with matched=False —
+        pinned by the fast-path equivalence regression test.
+        """
+        stats["skipped_rounds"] += len(qs)
+        self.skipped_steps += len(qs)
+        if records is not None:
+            for q in qs:
+                records[q.qid] = dict(qid=q.qid, f_curr=q.f_curr,
+                                      phase=q.phase,
+                                      mask=np.zeros(self.C, bool),
+                                      matched=False, match_cam=0)
+        p = self.policy
+        for q in qs:
+            f_next = q.f_curr + 1
+            el_next = f_next - q.f_q
+            if p.scheme in ("all", "geo") or not p.use_replay:
+                done = el_next > p.exit_t or f_next >= _NO_HORIZON
+                f_new, phase_new = f_next, q.phase
+            else:
+                nothing_relaxed = self._w2[q.c_q] <= p.self_window
+                exh1 = q.phase == 1 and el_next > self._w1[q.c_q]
+                exh2 = q.phase == 2 and el_next > self._w2[q.c_q]
+                exh3 = q.phase >= 3 and el_next > p.exit_t
+                if p.exhaustive_final:
+                    esc = exh1 or exh2
+                    done = exh3 or f_next >= _NO_HORIZON
+                else:
+                    esc = exh1 and not nothing_relaxed
+                    done = ((exh1 and nothing_relaxed) or exh2 or exh3
+                            or f_next >= _NO_HORIZON)
+                phase_new = q.phase + 1 if esc else q.phase
+                f_new = q.f_q + 1 if esc else f_next
+            q.f_curr, q.phase, q.done = f_new, phase_new, bool(done)

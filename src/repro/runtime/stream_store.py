@@ -5,10 +5,25 @@ the past.  However, this only needs to be for the last few minutes."  The
 store keeps a bounded window per camera; replay reads are range queries into
 it, and reads past the retention window raise (that replay would have to fall
 back to cold storage — surfaced to the caller as a miss).
+
+Alongside the raw frames the store keeps an *embedding cache*: the serving
+engine writes each (camera, frame) batch's backbone embeddings back via
+``put_emb`` after the first (live) pass, so a phase-2 replay re-read of a
+still-retained frame skips re-embedding entirely — the single largest
+avoidable cost in the replay path.  Embeddings are evicted together with
+their frames.
+
+Eviction is O(1) amortized: appended keys go on a per-camera monotonic
+deque, and each append pops only the keys that just crossed the retention
+horizon (the previous implementation rescanned every retained key per
+append — O(retention) per frame).  Appends are expected in nondecreasing
+``t`` order per camera (the engine's wall clock guarantees this); an
+out-of-order append stays correct — ``get`` re-checks the horizon — but its
+eviction may be deferred until the deque head reaches it.
 """
 from __future__ import annotations
 
-import dataclasses
+import collections
 from typing import Any
 
 import numpy as np
@@ -19,28 +34,55 @@ class FrameStore:
         self.n_cams = n_cams
         self.retention = retention
         self._buf: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
+        self._emb: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
+        self._keys: list[collections.deque] = [collections.deque()
+                                               for _ in range(n_cams)]
         self._latest = np.full(n_cams, -1, np.int64)
 
+    def _horizon(self, cam: int) -> int:
+        return int(self._latest[cam]) - self.retention
+
+    def _evict(self, cam: int) -> None:
+        horizon = self._horizon(cam)
+        keys, buf, emb = self._keys[cam], self._buf[cam], self._emb[cam]
+        while keys and keys[0] < horizon:
+            key = keys.popleft()
+            buf.pop(key, None)
+            emb.pop(key, None)
+
     def append(self, cam: int, t: int, frame: Any) -> None:
-        buf = self._buf[cam]
-        buf[t] = frame
-        self._latest[cam] = max(self._latest[cam], t)
-        # evict
-        horizon = self._latest[cam] - self.retention
-        for key in [k for k in buf if k < horizon]:
-            del buf[key]
+        if t not in self._buf[cam]:
+            self._keys[cam].append(t)
+        self._buf[cam][t] = frame
+        if t > self._latest[cam]:
+            self._latest[cam] = t
+        self._evict(cam)
 
     def get(self, cam: int, t: int) -> Any:
-        horizon = self._latest[cam] - self.retention
-        if t < horizon:
+        if t < self._horizon(cam):
             raise KeyError(f"frame ({cam}, {t}) evicted (retention {self.retention})")
         return self._buf[cam].get(t)
 
     def range(self, cam: int, t0: int, t1: int) -> list[tuple[int, Any]]:
         """Frames in [t0, t1] still retained (replay read)."""
-        horizon = self._latest[cam] - self.retention
+        horizon = self._horizon(cam)
         return [(t, self._buf[cam][t]) for t in range(max(t0, horizon), t1 + 1)
                 if t in self._buf[cam]]
 
+    # -- embedding cache ---------------------------------------------------
+    def put_emb(self, cam: int, t: int, emb: Any) -> None:
+        """Cache the backbone embeddings for a retained (cam, t) frame."""
+        if t >= self._horizon(cam) and t in self._buf[cam]:
+            self._emb[cam][t] = emb
+
+    def get_emb(self, cam: int, t: int) -> Any:
+        """Cached embeddings for (cam, t), or None (uncached / evicted)."""
+        if t < self._horizon(cam):
+            return None
+        return self._emb[cam].get(t)
+
     def memory_frames(self) -> int:
         return sum(len(b) for b in self._buf)
+
+    def cached_embeddings(self) -> int:
+        return sum(len(e) for e in self._emb)

@@ -58,6 +58,9 @@ def test_decode_attention_sweep(dtype, B, H, KV, T, hd, bk):
     (64, 512, 64, 8, 32, 128),
     (128, 1024, 32, 16, 128, 256),
     (32, 256, 128, 4, 32, 64),
+    (33, 517, 16, 5, 32, 128),      # ragged: internal padding both axes
+    (7, 70, 8, 3, 128, 512),        # smaller than one block on both axes
+    (1, 1, 64, 1, 128, 512),
 ])
 def test_reid_topk_sweep(Q, G, D, k, bq, bg):
     ks = jax.random.split(KEY, 2)
@@ -71,6 +74,100 @@ def test_reid_topk_sweep(Q, G, D, k, bq, bg):
     # gathered scores must match the claimed scores
     got = np.take_along_axis(np.asarray(q @ g.T), np.asarray(si), 1)
     np.testing.assert_allclose(got, sv, rtol=1e-5, atol=1e-5)
+
+
+def test_reid_topk_k_exceeds_gallery():
+    """k > G: real entries first, padding surfaces as (NEG_INF, -1)."""
+    ks = jax.random.split(KEY, 2)
+    q = jax.random.normal(ks[0], (5, 16))
+    g = jax.random.normal(ks[1], (3, 16))
+    sv, si = ops.reid_topk(q, g, 8)
+    rv, ri = ref.reid_topk_ref(q, g, 3)
+    np.testing.assert_allclose(sv[:, :3], rv, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(si)[:, 3:] == -1).all()
+    assert (np.asarray(sv)[:, 3:] < -1e29).all()
+
+
+def test_reid_topk_masked_matches_ref():
+    """Segment-masked variant == oracle on a mixed (cam, frame) batch."""
+    rng = np.random.default_rng(3)
+    Q, G, C, D, k = 11, 83, 6, 32, 4
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
+    q_frame = jnp.asarray(rng.integers(0, 4, Q), jnp.int32)
+    gal_cam = jnp.asarray(rng.integers(0, C, G), jnp.int32)
+    gal_frame = jnp.asarray(rng.integers(0, 4, G), jnp.int32)
+    adm = jnp.asarray(rng.random((Q, C)) < 0.5)
+    sv, si = ops.reid_topk_masked(q, q_frame, adm, g, gal_cam, gal_frame, k)
+    rv, ri = ref.reid_topk_masked_ref(q, q_frame, adm, g, gal_cam, gal_frame, k)
+    np.testing.assert_allclose(sv, rv, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(si, ri)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 70), st.integers(2, 5),
+       st.integers(1, 4), st.booleans())
+def test_reid_rank_parity_property(Q, G, C, k, ties):
+    """Property (ragged Q/G, ties, empty galleries): the Pallas kernel in
+    interpret mode, the ref.py oracle, and the engine's match outcome all
+    agree.  Tie cases use integer-valued features so float32 scores are
+    exact and index tie-breaking is comparable bit-for-bit."""
+    from repro.runtime.engine import rank_round
+
+    rng = np.random.default_rng(100_000 + Q * 1000 + G * 10 + C + k)
+    D = 8
+    draw = (lambda s: rng.integers(0, 2, s).astype(np.float32)) if ties \
+        else (lambda s: rng.normal(size=s).astype(np.float32))
+    qf, gf = draw((Q, D)), draw((G, D))
+
+    # -- plain kernel vs oracle ------------------------------------------
+    sv, si = ops.reid_topk(jnp.asarray(qf), jnp.asarray(gf), k)
+    if G == 0:
+        assert (np.asarray(si) == -1).all()
+        assert (np.asarray(sv) < -1e29).all()
+    else:
+        kk = min(k, G)
+        rv, ri = ref.reid_topk_ref(jnp.asarray(qf), jnp.asarray(gf), kk)
+        np.testing.assert_allclose(np.asarray(sv)[:, :kk], rv,
+                                   rtol=1e-5, atol=1e-5)
+        if ties:
+            np.testing.assert_array_equal(np.asarray(si)[:, :kk], ri)
+        assert (np.asarray(si)[:, kk:] == -1).all()
+
+    # -- masked kernel vs oracle vs the engine's match path --------------
+    q_frame = rng.integers(0, 3, Q).astype(np.int32)
+    gal_cam = rng.integers(0, C, G).astype(np.int32)
+    gal_frame = rng.integers(0, 3, G).astype(np.int32)
+    adm = rng.random((Q, C)) < 0.6
+    thresh = 0.6
+    if G > 0:
+        kk = min(k, G)
+        msv, msi = ops.reid_topk_masked(
+            jnp.asarray(qf), jnp.asarray(q_frame), jnp.asarray(adm),
+            jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), kk)
+        rmv, rmi = ref.reid_topk_masked_ref(
+            jnp.asarray(qf), jnp.asarray(q_frame), jnp.asarray(adm),
+            jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), kk)
+        np.testing.assert_allclose(msv, rmv, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(msi, rmi)
+
+    matched, match_cam, match_emb = (np.asarray(a) for a in rank_round(
+        jnp.asarray(qf), jnp.asarray(q_frame), jnp.asarray(adm),
+        jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), thresh))
+    # numpy mirror of the pre-device host ranking loop
+    for i in range(Q):
+        valid = adm[i, gal_cam] & (gal_frame == q_frame[i]) if G else \
+            np.zeros(0, bool)
+        d = np.where(valid, 1.0 - gf.astype(np.float32) @ qf[i], 1e30) if G \
+            else np.zeros(0)
+        if not valid.any():
+            assert not matched[i]
+            continue
+        j = int(np.argmin(d))
+        assert bool(matched[i]) == bool(d[j] < thresh)
+        if matched[i]:
+            assert int(match_cam[i]) == int(gal_cam[j])
+            np.testing.assert_allclose(match_emb[i], gf[j], rtol=1e-6)
 
 
 @pytest.mark.parametrize("B,L,D,N,chunk,bd", [

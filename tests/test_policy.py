@@ -225,6 +225,134 @@ def test_engine_replay_rescues_missed_detection():
     assert rescued.matches[0][1] >= vis.t_in[q + 1]
 
 
+def test_engine_embed_cache_never_reembeds():
+    """Replay re-reads of still-retained frames are served from the
+    FrameStore embedding cache: no (cam, t) pair ever reaches embed_fn
+    twice, even though phase-2 rewinds revisit frames embedded live."""
+    from collections import Counter
+
+    vis, gal, feats, model = _rare_path_world()
+    q = len(vis) - 2
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120)
+    H = vis.horizon
+    embedded = Counter()
+    ingested = {}
+
+    def embed_fn(x):
+        # crops carry a trailing (cam * H + t) tag column: count embeds per
+        # (cam, frame) pair, then strip the tag
+        for tag in x[:, -1]:
+            embedded[int(tag)] += 1
+        return x[:, :-1]
+
+    # a persistent distractor on camera 1 (feature dim unused by any entity,
+    # so it never matches): guarantees the live phase-1 pass embeds (c1, t)
+    # frames that the phase-2 replay then re-reads
+    distractor = np.zeros((1, feats.shape[1]), np.float32)
+    distractor[0, 63] = 1.0
+
+    eng = rexcam.serve(model, embed_fn=embed_fn, policy=p)
+    eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    for t in range(H):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            rows = [feats[vids]] if len(vids) else []
+            if c == 1:
+                rows.append(distractor)
+            if rows:
+                crops = np.concatenate(rows)
+                tag = np.full((len(crops), 1), c * H + t, np.float32)
+                frames[c] = np.concatenate([crops, tag], 1)
+                ingested[c * H + t] = len(crops)
+        eng.ingest(frames)
+        eng.tick()
+
+    assert eng.queries[0].rescued > 0        # replay really revisited history
+    assert eng.cache_hits > 0                # ...and those re-reads hit cache
+    for tag, n in embedded.items():
+        assert n == ingested[tag], \
+            f"frame {tag} embedded {n // ingested[tag]} times"
+
+
+def test_engine_skip_short_circuit_equivalence():
+    """The host fast path for sampled-out skip-mode rounds must be
+    transition-identical to running them through admit/advance: identical
+    traces, matches and terminal state with the short-circuit on and off."""
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    vis, gal, feats, model = _rare_path_world()
+    q = len(vis) - 2
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120,
+                     replay_skip=2)
+
+    def run(short_circuit):
+        cfg = EngineConfig(policy=p, short_circuit_skips=short_circuit)
+        eng = ServingEngine(model, embed_fn=lambda x: x, cfg=cfg)
+        eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+        # second query anchored one frame earlier: opposite skip parity, so
+        # replay rounds MIX gated and non-gated queries — the fast path must
+        # keep per-round trace order identical to the slow path
+        eng.submit_query(1, feats[q], int(vis.cam[q]), int(vis.t_out[q]) - 1)
+        trace = []
+        for t in range(vis.horizon):
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+            eng.tick(record_trace=trace)
+        return eng, trace
+
+    fast, tr_fast = run(True)
+    slow, tr_slow = run(False)
+
+    def steps(tr):
+        return [(r["qid"], r["f_curr"], r["phase"], tuple(r["mask"]),
+                 r["matched"], r["match_cam"] if r["matched"] else -1)
+                for r in tr]
+
+    assert steps(tr_fast) == steps(tr_slow)
+    assert fast.skipped_steps > 0 and slow.skipped_steps == 0
+    for qid in (0, 1):
+        assert fast.queries[qid].matches == slow.queries[qid].matches
+        assert (fast.queries[qid].done, fast.queries[qid].phase,
+                fast.queries[qid].f_curr) == \
+            (slow.queries[qid].done, slow.queries[qid].phase,
+             slow.queries[qid].f_curr)
+    # the whole point: gated rounds charge content steps but admit nothing
+    assert fast.content_steps == slow.content_steps
+    assert fast.admitted_steps == slow.admitted_steps
+
+
+def test_engine_skip_mode_frame_counts_match_cost_model():
+    """§5.3 skip-mode cost model: replay processes ~1-in-k content frames;
+    the other (k-1)/k are short-circuited yet still charged as content."""
+    vis, gal, feats, model = _rare_path_world()
+    q = len(vis) - 2
+    k = 3
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120,
+                     replay_skip=k)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=p)
+    eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    for t in range(vis.horizon):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick()
+    assert eng.replay_steps > 0 and eng.skipped_steps > 0
+    processed = eng.replay_steps - eng.skipped_steps
+    ratio = processed / eng.replay_steps
+    assert abs(ratio - 1 / k) < 0.15, \
+        f"skip-mode processed {ratio:.2f} of replay steps, expected ~{1/k:.2f}"
+    # every content step is charged: replay rounds = processed + skipped
+    assert eng.content_steps >= eng.replay_steps
+
+
 def test_engine_replay_miss_past_retention():
     """Rewinds past the ring buffer surface as replay_misses, not crashes."""
     vis, gal, feats, model = _rare_path_world()

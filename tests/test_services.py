@@ -176,6 +176,34 @@ def test_frame_store_retention_and_replay_range():
     assert rng[0][0] >= 14 and rng[-1][0] == 24
 
 
+def test_frame_store_embedding_cache_evicts_with_frames():
+    fs = FrameStore(n_cams=1, retention=10)
+    for t in range(5):
+        fs.append(0, t, f"f{t}")
+    fs.put_emb(0, 3, "e3")
+    assert fs.get_emb(0, 3) == "e3"
+    assert fs.get_emb(0, 4) is None          # frame retained, never embedded
+    assert fs.cached_embeddings() == 1
+    for t in range(5, 30):
+        fs.append(0, t, f"f{t}")
+    assert fs.get_emb(0, 3) is None          # evicted together with its frame
+    assert fs.cached_embeddings() == 0
+    fs.put_emb(0, 2, "stale")                # past retention: refused
+    assert fs.get_emb(0, 2) is None
+    fs.put_emb(0, 25, "e25")                 # retained: accepted
+    assert fs.get_emb(0, 25) == "e25"
+
+
+def test_frame_store_eviction_is_amortized_o1():
+    """Eviction pops only the keys that crossed the horizon — the total
+    number of popped keys over N appends is N, not N * retention."""
+    fs = FrameStore(n_cams=1, retention=50)
+    for t in range(500):
+        fs.append(0, t, t)
+    assert fs.memory_frames() == 51          # [latest - retention, latest]
+    assert len(fs._keys[0]) == 51            # deque tracks exactly the window
+
+
 def test_heartbeat_dead_and_straggler_detection():
     t = [0.0]
     mon = HeartbeatMonitor(["a", "b", "c"], timeout=5.0, clock=lambda: t[0])
