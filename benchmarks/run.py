@@ -12,6 +12,7 @@ from benchmarks import drift, kernels_bench, scenarios, tables
 ALL = {
     "policy_sweep": scenarios.policy_sweep,
     "serving_sweep": scenarios.serving_sweep,
+    "serving_shard_sweep": scenarios.serving_shard_sweep,
     "sec3_potential": tables.sec3_potential,
     "fig10_anoncampus": tables.fig10_anoncampus,
     "fig11_duke": tables.fig11_duke,

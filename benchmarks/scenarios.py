@@ -116,6 +116,32 @@ def policy_sweep(scenarios=("duke", "porto130")):
 # serving_sweep: the live engine's cost accounting, per scheme.
 # ---------------------------------------------------------------------------
 
+def _drive_serving(sc, policy, n_queries, steps, shards=None):
+    """The one engine-driving loop every serving benchmark shares: build the
+    engine (fleet when ``shards``), submit the scenario's queries, replay the
+    live stream tick by tick.  Returns (engine, matches, wall seconds
+    including engine construction and jit warmup)."""
+    vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
+    q_vids = sc["q_vids"][:n_queries]
+    wall0 = time.perf_counter()
+    eng = rexcam.serve(sc["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=net.geo_adjacent, shards=shards)
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    matches = 0
+    for t in range(t0, min(t0 + steps, vis.horizon)):
+        frames = {}
+        for c in range(net.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        matches += eng.tick()["matches"]
+    return eng, matches, time.perf_counter() - wall0
+
+
 def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
     """Engine-plane sweep: drive the live ``ServingEngine`` per scheme over
     real ingest and report the two cost conventions separately —
@@ -128,28 +154,11 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
     rows = []
     for sc_name in scenarios:
         sc = builders[sc_name]()
-        vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
-        q_vids = sc["q_vids"][:n_queries]
+        n_q = min(n_queries, len(sc["q_vids"]))
         base = None
         for pname, policy in SWEEP_POLICIES:
-            t0c = time.perf_counter()
-            eng = rexcam.serve(sc["model"], embed_fn=lambda x: x,
-                               policy=policy, geo_adj=net.geo_adjacent)
-            t0 = int(vis.t_out[q_vids].min())
-            eng.t = t0
-            for i, q in enumerate(q_vids):
-                eng.submit_query(i, feats[q], int(vis.cam[q]),
-                                 int(vis.t_out[q]))
-            matches = 0
-            for t in range(t0, min(t0 + steps, vis.horizon)):
-                frames = {}
-                for c in range(net.n_cams):
-                    vids = gal[c, t][gal[c, t] >= 0]
-                    if len(vids):
-                        frames[c] = feats[vids]
-                eng.ingest(frames)
-                matches += eng.tick()["matches"]
-            us = (time.perf_counter() - t0c) * 1e6 / max(len(q_vids), 1)
+            eng, matches, wall = _drive_serving(sc, policy, n_q, steps)
+            us = wall * 1e6 / max(n_q, 1)
             if pname == "all":
                 base = eng.admitted_steps
             savings = base / max(eng.admitted_steps, 1)
@@ -163,4 +172,55 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
                          f"unique_frames={eng.unique_frames} "
                          f"dedup={dedup:.1f}x replay_cache_hot={hot:.2f} "
                          f"matches={matches}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# serving_shard_sweep: the fleet vs one engine, per shard count.
+# ---------------------------------------------------------------------------
+
+def serving_shard_sweep(scenarios=("duke",), n_queries=16, steps=300,
+                        shard_counts=(1, 2, 4, 8)):
+    """Shard the live query axis over {1, 2, 4, 8} devices and report, per
+    shard count: wall-clock speedup vs the single-process engine, the fleet
+    totals (which must EQUAL the single engine's — the differential-harness
+    invariant, asserted here too), and the per-shard ``admitted_steps`` /
+    ``unique_frames`` split (each worker's shard-local demand).
+
+    Shard counts above the visible device count are reported as skipped —
+    run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (and
+    ``JAX_PLATFORMS=cpu``) to sweep the full fleet on one host."""
+    import jax
+
+    builders = {"duke": lambda: duke(60)}
+    rows = []
+    n_dev = len(jax.devices())
+    for sc_name in scenarios:
+        sc = builders[sc_name]()
+        n_q = min(n_queries, len(sc["q_vids"]))
+        policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
+                                     t_thresh=.02)
+        base_eng, _, base_wall = _drive_serving(sc, policy, n_q, steps)
+        for S in shard_counts:
+            if S > n_dev:
+                rows.append((f"serving_shard_sweep/{sc['name']}/shards{S}",
+                             0.0, f"skipped: {n_dev} devices visible "
+                             f"(set xla_force_host_platform_device_count)"))
+                continue
+            eng, _, wall = _drive_serving(sc, policy, n_q, steps, shards=S)
+            assert eng.admitted_steps == base_eng.admitted_steps, \
+                "fleet diverged from the single engine (admitted_steps)"
+            assert eng.unique_frames == base_eng.unique_frames, \
+                "fleet diverged from the single engine (unique_frames)"
+            rep = eng.shard_report()
+            per_adm = "/".join(str(r["admitted_steps"]) for r in rep)
+            per_uni = "/".join(str(r["unique_frames"]) for r in rep)
+            rows.append((f"serving_shard_sweep/{sc['name']}/shards{S}",
+                         wall * 1e6 / max(n_q, 1),
+                         f"speedup={base_wall / max(wall, 1e-9):.2f}x "
+                         f"wall={wall:.2f}s "
+                         f"admitted_steps={eng.admitted_steps} "
+                         f"unique_frames={eng.unique_frames} "
+                         f"per_shard_admitted={per_adm} "
+                         f"per_shard_unique={per_uni}"))
     return rows

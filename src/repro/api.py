@@ -26,6 +26,7 @@ from repro.core.simulate import Visits
 from repro.core.tracker import (TrackResult, make_queries, track_queries,  # noqa: F401
                                 trace_queries)
 from repro.runtime.engine import EngineConfig, ServingEngine
+from repro.runtime.fleet import ShardedServingEngine
 
 
 def profile(visits: Visits, *, time_limit: int | None = None,
@@ -49,7 +50,17 @@ def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
 
 def serve(model: SpatioTemporalModel, embed_fn: Callable,
           policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
-          retention: int = 600, geo_adj=None) -> ServingEngine:
-    """Live serving engine driving the same vectorized admission plane."""
+          retention: int = 600, geo_adj=None, shards: int | None = None,
+          devices=None) -> ServingEngine:
+    """Live serving engine driving the same vectorized admission plane.
+
+    ``shards=None`` returns the single-process engine; ``shards=k`` (or an
+    explicit ``devices`` list) returns a ``ShardedServingEngine`` whose
+    query axis is shard_map-partitioned over k devices of the local mesh —
+    trace-identical to the single engine, pinned by the differential
+    harness in tests/test_sharded_engine.py."""
     cfg = EngineConfig(policy=policy, max_batch=max_batch, retention=retention)
+    if shards is not None or devices is not None:
+        return ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
+                                    shards=shards, devices=devices)
     return ServingEngine(model, embed_fn, cfg, geo_adj=geo_adj)

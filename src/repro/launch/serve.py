@@ -8,6 +8,13 @@ backbone), ranks with the re-id kernel semantics, and replays the FrameStore
 ring buffer when a query escalates to phase 2.
 
   PYTHONPATH=src python -m repro.launch.serve --queries 8 --steps 600
+
+``--shards k`` runs the sharded fleet instead (shard_map over the query
+axis, trace-identical to the single engine) and prints per-shard cost.  On
+a CPU host, fake the devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+    PYTHONPATH=src python -m repro.launch.serve --queries 8 --shards 4
 """
 from __future__ import annotations
 
@@ -27,6 +34,9 @@ def main():
     ap.add_argument("--t-thresh", type=float, default=0.02)
     ap.add_argument("--scheme", default="rexcam",
                     choices=["rexcam", "all", "geo", "spatial_only"])
+    ap.add_argument("--shards", type=int, default=None,
+                    help="partition the query axis over this many devices "
+                         "(default: single-process engine)")
     args = ap.parse_args()
 
     net = duke_like_network()
@@ -39,7 +49,7 @@ def main():
     policy = rexcam.SearchPolicy(scheme=args.scheme, s_thresh=args.s_thresh,
                                  t_thresh=args.t_thresh)
     eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
-                       geo_adj=net.geo_adjacent)
+                       geo_adj=net.geo_adjacent, shards=args.shards)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -79,6 +89,17 @@ def main():
     print(f"frame-store residency: {eng.store.memory_frames()} frames "
           f"(retention {eng.cfg.retention}s — paper §5.3 'last few minutes')")
     print(f"wall: {wall:.2f}s ({args.steps/max(wall,1e-9):.0f} steps/s)")
+    if args.shards is not None:
+        # per-shard demand is shard-LOCAL dedup: a frame two shards both
+        # want counts once per shard here but once in the engine totals
+        print(f"fleet: {eng.n_shards} shards (data axis), "
+              f"{eng.rebalances} rebalances")
+        for row in eng.shard_report():
+            state = "live" if row["alive"] else "lost"
+            print(f"  {row['worker']} [{state}]: {row['queries']} queries, "
+                  f"admitted_steps={row['admitted_steps']} "
+                  f"unique_frames={row['unique_frames']} "
+                  f"query_rounds={row['query_rounds']}")
     for qid, q in eng.queries.items():
         lag = max(eng.t - 1 - q.f_curr, 0)
         state = "done" if q.done else f"tracking (phase {q.phase}, lag {lag}s)"

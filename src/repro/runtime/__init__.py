@@ -1,3 +1,4 @@
 from repro.runtime.engine import ServingEngine, EngineConfig, QueryState  # noqa: F401
+from repro.runtime.fleet import ShardedServingEngine  # noqa: F401
 from repro.runtime.stream_store import FrameStore  # noqa: F401
 from repro.runtime.cluster import HeartbeatMonitor, ElasticMesh  # noqa: F401

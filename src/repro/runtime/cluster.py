@@ -19,7 +19,9 @@ import numpy as np
 @dataclasses.dataclass
 class WorkerState:
     last_seen: float
-    latency_ewma: float = 0.0
+    # None = no latency sample yet; a real 0.0 first sample must NOT be
+    # treated as "unset" (it would re-seed the EWMA on the next report)
+    latency_ewma: float | None = None
     quarantined: bool = False
 
 
@@ -40,8 +42,11 @@ class HeartbeatMonitor:
         st = self.workers[worker]
         st.last_seen = self._clock()
         if tick_latency is not None:
-            st.latency_ewma = (self.ewma * tick_latency +
-                               (1 - self.ewma) * (st.latency_ewma or tick_latency))
+            if st.latency_ewma is None:     # explicit first-sample seed
+                st.latency_ewma = float(tick_latency)
+            else:
+                st.latency_ewma = (self.ewma * tick_latency +
+                                   (1 - self.ewma) * st.latency_ewma)
 
     def dead(self) -> list[str]:
         now = self._clock()
@@ -50,12 +55,13 @@ class HeartbeatMonitor:
 
     def stragglers(self) -> list[str]:
         lat = np.array([st.latency_ewma for st in self.workers.values()
-                        if st.latency_ewma > 0])
+                        if st.latency_ewma is not None])
         if len(lat) < 2:
             return []
         med = float(np.median(lat))
         return [w for w, st in self.workers.items()
-                if st.latency_ewma > self.straggler_factor * max(med, 1e-9)
+                if st.latency_ewma is not None
+                and st.latency_ewma > self.straggler_factor * max(med, 1e-9)
                 and not st.quarantined]
 
     def quarantine(self, worker: str):

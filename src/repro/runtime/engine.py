@@ -39,6 +39,14 @@ cost), while ``unique_frames`` counts deduplicated (camera, frame) pairs
 The engine is deliberately backbone-agnostic: ``embed_fn(frames) ->
 (n, D)`` may be a smoke-scale transformer from ``repro.models`` or the
 simulator's feature oracle (tests).
+
+The device-side step bodies (``rank_advance_round``, ``advance_round`` and
+``policy.admit``) are pure over the (Q,)-batched state, with batch-row
+assignment indirected through ``_layout``/``self._slots`` — that is what
+lets ``runtime.fleet.ShardedServingEngine`` run the SAME round code with
+the query axis shard_map-partitioned over a device mesh, trace-identically
+(padding rows are ``done`` and rank to (NEG_INF, -1) like the kernels'
+padded slots).
 """
 from __future__ import annotations
 
@@ -54,6 +62,7 @@ from repro.core.correlation import SpatioTemporalModel
 from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
                                phase_windows, replay_sampled_out)
 from repro.kernels import ops as kernel_ops
+from repro.kernels.reid_topk import NEG_INF
 from repro.runtime.stream_store import FrameStore
 
 # effectively "never": the live engine terminates queries via exit_t /
@@ -92,12 +101,6 @@ def _admit_jit(model, policy: SearchPolicy, state: PhaseState, geo_adj=None):
     return admit(model, policy, state, geo_adj)
 
 
-@partial(jax.jit, static_argnames=("policy",))
-def _advance_jit(policy: SearchPolicy, windows, state: PhaseState,
-                 matched, match_cam):
-    return advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
-
-
 @partial(jax.jit, static_argnames=("match_thresh",))
 def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
                match_thresh: float):
@@ -106,15 +109,57 @@ def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
     ``reid_topk_masked`` (k=1) scores each query against exactly its
     admitted galleries; the best score converts back to the cosine distance
     the control plane thresholds on.  Returns (matched (Q,), match_cam (Q,),
-    match_emb (Q, D)) — unmatched rows carry cam 0 and an arbitrary row.
+    match_emb (Q, D), best_val (Q,), best_idx (Q,)) — unmatched rows carry
+    cam 0 and an arbitrary embedding row; padded / fully-masked rows come
+    back as (NEG_INF, -1) in (best_val, best_idx), exactly like the kernels.
     """
     sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
                                          gal_cam, gal_frame, 1)
-    dist = 1.0 - sv[:, 0]
+    best_val, best_idx = sv[:, 0], si[:, 0]
+    dist = 1.0 - best_val
     matched = dist < match_thresh
-    idx = jnp.maximum(si[:, 0], 0)
+    idx = jnp.maximum(best_idx, 0)
     match_cam = jnp.where(matched, gal_cam[idx], 0).astype(jnp.int32)
-    return matched, match_cam, gallery[idx]
+    return matched, match_cam, gallery[idx], best_val, best_idx
+
+
+def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
+                       q_feat, mask, gallery, gal_cam, gal_frame):
+    """The ONE serving step body both the single-process engine and the
+    sharded fleet dispatch: rank the round's deduplicated gallery, then run
+    the shared phase machine.  Pure over (Q,)-batched inputs, so the fleet
+    can shard_map it over the query axis with the gallery replicated.
+
+    The query cursor frames come from ``state.f_curr``; padding rows (done,
+    all-False mask) therefore match nothing and surface (NEG_INF, -1) in
+    (best_val, best_idx) — the same convention the kernels use for their
+    own padded slots.
+    """
+    matched, match_cam, match_emb, best_val, best_idx = rank_round(
+        q_feat, state.f_curr, mask, gallery, gal_cam, gal_frame,
+        policy.match_thresh)
+    nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
+    return nxt, matched, match_cam, match_emb, best_val, best_idx
+
+
+def advance_round(policy: SearchPolicy, windows, state: PhaseState):
+    """The no-gallery variant of the step body (nothing admitted anywhere
+    this round): the phase machine alone, matched=False for every query."""
+    Q = state.f_q.shape[0]
+    return advance(policy, windows, state, jnp.zeros(Q, bool),
+                   jnp.zeros(Q, jnp.int32), _NO_HORIZON)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _rank_advance_jit(policy: SearchPolicy, windows, state: PhaseState,
+                      q_feat, mask, gallery, gal_cam, gal_frame):
+    return rank_advance_round(policy, windows, state, q_feat, mask,
+                              gallery, gal_cam, gal_frame)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _advance_round_jit(policy: SearchPolicy, windows, state: PhaseState):
+    return advance_round(policy, windows, state)
 
 
 def _pow2(n: int) -> int:
@@ -146,6 +191,11 @@ class ServingEngine:
         self.skipped_steps = 0       # short-circuited sampled-out rounds
         self.replay_misses = 0       # replay reads past the retention window
         self.ticks = 0
+        # (C, C) replay-rescue attribution (phase >= 2 matches, keyed by the
+        # anchor camera at match time) — the tracker's rescue_pairs, live:
+        # the §6 drift-detection signal profiler.drift_score consumes
+        self.rescue_pairs = np.zeros((self.C, self.C), np.int64)
+        self._slots = np.zeros(0, np.int64)  # qs-index -> batch-row mapping
         self._windows = phase_windows(model, cfg.policy)
         # host copies of the exhaustion windows for the skip fast path
         self._w1 = np.asarray(self._windows.w_end1)
@@ -158,28 +208,39 @@ class ServingEngine:
             f_curr=frame + 1)
 
     # -- batched state marshalling ---------------------------------------
+    def _layout(self, qs: list[QueryState]) -> tuple[int, np.ndarray]:
+        """(batch size N, slots): which padded-batch row each query in ``qs``
+        occupies.  The single-process engine packs queries densely and pads
+        to the next power of two (O(log Q) jit shapes); the sharded fleet
+        overrides this to group rows by worker placement, each shard block
+        padded to a shard-uniform power of two."""
+        n = len(qs)
+        return _pow2(n), np.arange(n)
+
     def _gather(self, qs: list[QueryState]) -> PhaseState:
         """Engine QueryStates -> one batched PhaseState.  The live frontier
         is the engine wall clock: frames through ``self.t`` are ingested.
 
-        The batch is padded to the next power of two with ``done`` rows so
-        the jitted admit/advance compile for O(log Q) shapes instead of one
-        per live-query count (done rows admit nothing and never advance).
+        Row assignment comes from ``_layout`` (stored in ``self._slots`` for
+        the rest of the round); every non-query row is padding — ``done``,
+        so it admits nothing, never advances, and ranks to (NEG_INF, -1)
+        exactly like the kernels' own padded slots.
         """
-        n = len(qs)
-        N = _pow2(n)
-        pad = N - n
+        N, slots = self._layout(qs)
+        self._slots = slots
 
         def col(vals, fill, dtype):
-            return jnp.asarray(np.array(vals + [fill] * pad, dtype))
+            a = np.full(N, fill, dtype)
+            a[slots] = vals
+            return jnp.asarray(a)
 
         return PhaseState(
             f_q=col([q.f_q for q in qs], 0, np.int32),
             c_q=col([q.c_q for q in qs], 0, np.int32),
             f_curr=col([q.f_curr for q in qs], 0, np.int32),
             phase=col([q.phase for q in qs], 1, np.int32),
-            live_f=col([float(self.t)] * n, 0.0, np.float32),
-            done=col([False] * n, True, np.bool_),
+            live_f=col([float(self.t)] * len(qs), 0.0, np.float32),
+            done=col([False] * len(qs), True, np.bool_),
         )
 
     def _scatter(self, qs: list[QueryState], ps: PhaseState,
@@ -187,22 +248,44 @@ class ServingEngine:
                  match_emb: np.ndarray | None):
         """Write the advanced PhaseState back into the QueryState objects."""
         a = self.policy.feat_alpha
+        sl = self._slots
         f_q = np.asarray(ps.f_q)
         c_q = np.asarray(ps.c_q)
         f_curr = np.asarray(ps.f_curr)
         phase = np.asarray(ps.phase)
         done = np.asarray(ps.done)
         for i, q in enumerate(qs):
-            if matched[i]:
-                emb = match_emb[i]
+            j = sl[i]
+            if matched[j]:
+                emb = match_emb[j]
                 q.feat = (1 - a) * q.feat + a * emb
                 q.feat /= max(np.linalg.norm(q.feat), 1e-9)
                 if q.phase >= 2:
                     q.rescued += 1
-                q.matches.append((int(match_cam[i]), int(q.f_curr)))
-            q.f_q, q.c_q = int(f_q[i]), int(c_q[i])
-            q.f_curr, q.phase = int(f_curr[i]), int(phase[i])
-            q.done = bool(done[i])
+                    self.rescue_pairs[q.c_q, int(match_cam[j])] += 1
+                q.matches.append((int(match_cam[j]), int(q.f_curr)))
+            q.f_q, q.c_q = int(f_q[j]), int(c_q[j])
+            q.f_curr, q.phase = int(f_curr[j]), int(phase[j])
+            q.done = bool(done[j])
+
+    # -- device dispatch ---------------------------------------------------
+    # The fleet overrides these three to run the SAME step bodies under
+    # shard_map over the query axis (model/windows/gallery replicated).
+    def _dispatch_admit(self, ps: PhaseState):
+        return _admit_jit(self.model, self.policy, ps, self._geo_adj)
+
+    def _dispatch_rank_advance(self, ps: PhaseState, q_feat, mask, gallery,
+                               gal_cam, gal_frame):
+        return _rank_advance_jit(self.policy, self._windows, ps, q_feat,
+                                 mask, gallery, gal_cam, gal_frame)
+
+    def _dispatch_advance(self, ps: PhaseState):
+        return _advance_round_jit(self.policy, self._windows, ps)
+
+    def _account_round(self, qs: list[QueryState],
+                       cams_by_q: list[np.ndarray]) -> None:
+        """Per-round accounting hook — ``cams_by_q[i]`` is the camera set
+        query i admitted (the fleet adds per-shard cost here)."""
 
     # -- per-tick ----------------------------------------------------------
     def ingest(self, frames_by_cam: dict[int, Any]):
@@ -283,19 +366,20 @@ class ServingEngine:
                         trace.extend(records[q.qid] for q in all_qs)
                     return
 
-        n = len(qs)
         ps = self._gather(qs)
-        mask = np.asarray(
-            _admit_jit(self.model, self.policy, ps, self._geo_adj))  # (N, C)
-        adm = int(mask[:n].sum())
+        sl = self._slots
+        mask = np.asarray(self._dispatch_admit(ps))                  # (N, C)
+        adm = int(mask[sl].sum())
         stats["admitted_steps"] += adm
         self.admitted_steps += adm
 
         # dedup: each admitted (cam, frame) pair embeds once (fleet batching)
+        cams_by_q = [np.flatnonzero(mask[sl[i]]) for i in range(len(qs))]
         wanted: set[tuple[int, int]] = set()
         for i, q in enumerate(qs):
-            for cam in np.flatnonzero(mask[i]):
+            for cam in cams_by_q[i]:
                 wanted.add((int(cam), q.f_curr))
+        self._account_round(qs, cams_by_q)
         stats["unique_frames"] += len(wanted)
         self.unique_frames += len(wanted)
 
@@ -345,11 +429,16 @@ class ServingEngine:
                     self.store.put_emb(*key, key_emb[key])
                 pos += cnt
 
-        # one jitted rank pass over the whole round: every query scores
-        # exactly its admitted galleries via the segment-masked reid kernel
+        # one rank+advance pass over the whole round, through the step body
+        # both engines share: every query scores exactly its admitted
+        # galleries via the segment-masked reid kernel, then the phase
+        # machine advances — matched/best_val/best_idx come back per row
+        # with padding rows as (False, NEG_INF, -1)
         N = mask.shape[0]
         matched = np.zeros(N, bool)
         match_cam = np.zeros(N, np.int32)
+        best_val = np.full(N, NEG_INF, np.float32)
+        best_idx = np.full(N, -1, np.int32)
         match_emb = None
         if batch_keys:
             counts = [len(key_emb[k]) for k in batch_keys]
@@ -368,29 +457,30 @@ class ServingEngine:
                 gal_frame = np.concatenate(
                     [gal_frame, np.full(Gp - G, -1, np.int32)])
             q_feat = np.zeros((N, gal.shape[1]), np.float32)
-            q_frame = np.full(N, -1, np.int32)
             for i, q in enumerate(qs):
-                q_feat[i] = q.feat
-                q_frame[i] = q.f_curr
-            m, mc, me = rank_round(
-                jnp.asarray(q_feat), jnp.asarray(q_frame), jnp.asarray(mask),
-                jnp.asarray(gal), jnp.asarray(gal_cam), jnp.asarray(gal_frame),
-                self.policy.match_thresh)
+                q_feat[sl[i]] = q.feat
+            ps_next, m, mc, me, bv, bi = self._dispatch_rank_advance(
+                ps, jnp.asarray(q_feat), jnp.asarray(mask), jnp.asarray(gal),
+                jnp.asarray(gal_cam), jnp.asarray(gal_frame))
             matched = np.asarray(m)
             match_cam = np.asarray(mc)
             match_emb = np.asarray(me)
-            stats["matches"] += int(matched[:n].sum())
+            best_val = np.asarray(bv)
+            best_idx = np.asarray(bi)
+            stats["matches"] += int(matched[sl].sum())
+        else:
+            ps_next = self._dispatch_advance(ps)
 
         if trace is not None:
             for i, q in enumerate(qs):
+                j = sl[i]
                 records[q.qid] = dict(
                     qid=q.qid, f_curr=q.f_curr, phase=q.phase,
-                    mask=mask[i].copy(), matched=bool(matched[i]),
-                    match_cam=int(match_cam[i]))
+                    mask=mask[j].copy(), matched=bool(matched[j]),
+                    match_cam=int(match_cam[j]),
+                    match_val=float(best_val[j]), match_idx=int(best_idx[j]))
             trace.extend(records[q.qid] for q in all_qs)
 
-        ps_next = _advance_jit(self.policy, self._windows, ps,
-                               jnp.asarray(matched), jnp.asarray(match_cam))
         self._scatter(qs, ps_next, matched, match_cam, match_emb)
 
     def _skip_round(self, qs: list[QueryState], stats: dict,
@@ -408,7 +498,8 @@ class ServingEngine:
                 records[q.qid] = dict(qid=q.qid, f_curr=q.f_curr,
                                       phase=q.phase,
                                       mask=np.zeros(self.C, bool),
-                                      matched=False, match_cam=0)
+                                      matched=False, match_cam=0,
+                                      match_val=float(NEG_INF), match_idx=-1)
         p = self.policy
         for q in qs:
             f_next = q.f_curr + 1

@@ -1,0 +1,246 @@
+"""Sharded serving fleet: ``shard_map`` over the live query axis.
+
+The scaling companion paper's deployment shape (and this repo's ROADMAP
+"sharded serving" item): cross-camera inference spreads across a worker
+fleet while the tiny correlation model M stays replicated on every worker.
+``ShardedServingEngine`` realizes that split on a jax device mesh:
+
+  * the batched ``PhaseState`` (the per-query search state) is SHARDED over
+    the mesh's data axis — each worker owns a contiguous block of query
+    rows, padded per shard to a uniform power of two,
+  * M, the phase windows, the geo adjacency and the per-round deduplicated
+    gallery are REPLICATED (a few small dense arrays — the paper's §7 point
+    that the control plane's only persistent state is tiny),
+  * every device round runs the SAME step bodies as the single-process
+    ``ServingEngine`` (``policy.admit``, ``engine.rank_advance_round``)
+    wrapped in ``parallel.compat.shard_map`` — so the fleet is
+    trace-identical to one engine by construction, which the differential
+    harness in ``tests/test_sharded_engine.py`` pins down.
+
+Host-side placement is the control plane's job: queries are placed on the
+least-loaded worker at submit time, and ``lose_worker`` shrinks the data
+axis via ``runtime.cluster.ElasticMesh`` (largest surviving grid, shardings
+rebuilt) and re-scatters ONLY the orphaned queries — an elastic scale-down,
+not a restart.  An optional ``HeartbeatMonitor`` drives the same path from
+liveness/straggler signals via ``poll_health``.
+
+Because admission, ranking and the phase machine are pure per-query maps
+(the gallery is replicated), placement never changes results — worker loss
+mid-run keeps the trace bit-identical.  What sharding buys is capacity:
+each worker ranks only its block of queries against the round's gallery.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.policy import admit
+from repro.parallel.compat import shard_map
+from repro.runtime.cluster import ElasticMesh, HeartbeatMonitor
+from repro.runtime.engine import (EngineConfig, QueryState, ServingEngine,
+                                  _pow2, advance_round, rank_advance_round)
+
+
+class ShardedServingEngine(ServingEngine):
+    """A serving fleet: one controller, ``n_shards`` workers, one trace."""
+
+    def __init__(self, model, embed_fn, cfg: EngineConfig, geo_adj=None, *,
+                 shards: int | None = None, devices: Iterable | None = None,
+                 monitor: HeartbeatMonitor | None = None,
+                 cluster: ElasticMesh | None = None):
+        super().__init__(model, embed_fn, cfg, geo_adj=geo_adj)
+        devs = list(devices if devices is not None else jax.devices())
+        if shards is not None:
+            if shards < 1 or shards > len(devs):
+                raise ValueError(
+                    f"shards={shards} infeasible: {len(devs)} devices visible")
+            devs = devs[:shards]
+        self.cluster = cluster or ElasticMesh(model_parallel=1)
+        if monitor is not None:
+            # fail loudly at construction, not as a silent poll_health no-op:
+            # every fleet worker id must be a name the monitor tracks
+            missing = [f"w{i}" for i in range(len(devs))
+                       if f"w{i}" not in monitor.workers]
+            if missing:
+                raise ValueError(
+                    f"HeartbeatMonitor does not track fleet workers "
+                    f"{missing} — fleet worker ids are 'w0'..'w{len(devs)-1}'")
+        self.monitor = monitor
+        # stable worker identities: position in the ORIGINAL device list
+        self._device_of = {f"w{i}": d for i, d in enumerate(devs)}
+        self._all_workers = list(self._device_of)
+        self._workers = list(self._all_workers)        # live, data-axis order
+        self._placement: dict[int, str] = {}           # qid -> worker
+        # query_rounds = per-query rounds DISPATCHED for this worker's
+        # queries (not engine ticks; skip-mode rounds short-circuited on
+        # the host are charged to content_steps but never reach a worker,
+        # so sum(query_rounds) == content_steps - skipped_steps)
+        self._shard_stats = {w: dict(admitted_steps=0, unique_frames=0,
+                                     query_rounds=0)
+                             for w in self._all_workers}
+        self.rebalances = 0
+        self._refresh_mesh()
+
+    # -- fleet topology ----------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self._workers)
+
+    def _refresh_mesh(self) -> None:
+        """(Re)build the mesh over the surviving workers: the data axis
+        shrinks to the live count (``ElasticMesh.grid_for``), and the cached
+        shard_map callables are invalidated so the next round lowers onto
+        the new grid."""
+        if not self._workers:
+            raise RuntimeError("serving fleet has no surviving workers")
+        self.mesh = self.cluster.make_mesh(
+            [self._device_of[w] for w in self._workers])
+        self._shard_of = {w: i for i, w in enumerate(self._workers)}
+        self._sharded_fns = None
+
+    def _load(self, worker: str) -> int:
+        return sum(1 for qid, w in self._placement.items()
+                   if w == worker and qid in self.queries
+                   and not self.queries[qid].done)
+
+    def _least_loaded(self) -> str:
+        return min(self._workers, key=lambda w: (self._load(w),
+                                                 self._shard_of[w]))
+
+    def submit_query(self, qid: int, feat, cam: int, frame: int):
+        super().submit_query(qid, feat, cam, frame)
+        self._placement[qid] = self._least_loaded()
+
+    def lose_worker(self, worker: str | int) -> list[int]:
+        """Elastic scale-down: drop one worker, shrink the data axis, and
+        re-scatter its orphaned queries over the survivors (least-loaded
+        first, round-robin via ``ElasticMesh.rebalance_streams``).  Returns
+        the re-placed qids."""
+        w = f"w{worker}" if isinstance(worker, int) else worker
+        if w not in self._workers:
+            raise KeyError(f"{w!r} is not a live worker (live: {self._workers})")
+        if len(self._workers) == 1:
+            raise RuntimeError("cannot lose the last worker of the fleet")
+        self._workers.remove(w)
+        self._refresh_mesh()
+        orphans = sorted(qid for qid, pw in self._placement.items() if pw == w)
+        targets = sorted(self._workers,
+                         key=lambda t: (self._load(t), self._shard_of[t]))
+        for tw, group in zip(targets,
+                             self.cluster.rebalance_streams(orphans,
+                                                            len(targets))):
+            for qid in group:
+                self._placement[qid] = tw
+        self.rebalances += 1
+        return orphans
+
+    def poll_health(self) -> list[str]:
+        """Drive elastic scale-down from the HeartbeatMonitor: dead workers
+        and (quarantined) stragglers leave the fleet, their queries
+        re-scatter.  No-op without a monitor."""
+        if self.monitor is None:
+            return []
+        removed = []
+        for w in self.monitor.stragglers():
+            # quarantine only workers this fleet actually removes — the
+            # monitor may track a superset, and the last worker stays
+            if w in self._workers and len(self._workers) > 1:
+                self.monitor.quarantine(w)
+                self.lose_worker(w)
+                removed.append(w)
+        for w in self.monitor.dead():
+            if w in self._workers and len(self._workers) > 1:
+                self.lose_worker(w)
+                removed.append(w)
+        return removed
+
+    # -- sharded layout + dispatch ----------------------------------------
+    def _layout(self, qs: list[QueryState]) -> tuple[int, np.ndarray]:
+        """Group batch rows by worker placement: shard s owns rows
+        [s*block, (s+1)*block) with block a fleet-uniform power of two, so
+        ``shard_map`` splits the padded batch into exactly the host-side
+        placement.  Padding rows are ``done`` (admit nothing, rank to
+        (NEG_INF, -1)) just like the single engine's."""
+        groups: list[list[int]] = [[] for _ in self._workers]
+        for i, q in enumerate(qs):
+            groups[self._shard_of[self._placement[q.qid]]].append(i)
+        block = _pow2(max(max((len(g) for g in groups), default=0), 1))
+        slots = np.zeros(len(qs), np.int64)
+        for s, g in enumerate(groups):
+            slots[g] = s * block + np.arange(len(g))
+        return len(self._workers) * block, slots
+
+    def _fns(self):
+        """shard_map-wrapped step bodies for the CURRENT mesh (lazily built;
+        invalidated on every elastic re-mesh).  State rows shard over the
+        data axis; model/windows/geo/gallery ride along replicated."""
+        if self._sharded_fns is None:
+            mesh, policy = self.mesh, self.policy
+            Pd, Pr = P("data"), P()
+
+            def _admit(model, state, geo_adj):
+                return admit(model, policy, state, geo_adj)
+
+            def _rank_advance(windows, state, q_feat, mask, gal, gal_cam,
+                              gal_frame):
+                return rank_advance_round(policy, windows, state, q_feat,
+                                          mask, gal, gal_cam, gal_frame)
+
+            def _advance(windows, state):
+                return advance_round(policy, windows, state)
+
+            self._sharded_fns = (
+                jax.jit(shard_map(_admit, mesh=mesh,
+                                  in_specs=(Pr, Pd, Pr), out_specs=Pd,
+                                  check_vma=False)),
+                jax.jit(shard_map(_rank_advance, mesh=mesh,
+                                  in_specs=(Pr, Pd, Pd, Pd, Pr, Pr, Pr),
+                                  out_specs=(Pd, Pd, Pd, Pd, Pd, Pd),
+                                  check_vma=False)),
+                jax.jit(shard_map(_advance, mesh=mesh,
+                                  in_specs=(Pr, Pd), out_specs=Pd,
+                                  check_vma=False)),
+            )
+        return self._sharded_fns
+
+    def _dispatch_admit(self, ps):
+        return self._fns()[0](self.model, ps, self._geo_adj)
+
+    def _dispatch_rank_advance(self, ps, q_feat, mask, gallery, gal_cam,
+                               gal_frame):
+        return self._fns()[1](self._windows, ps, q_feat, mask, gallery,
+                              gal_cam, gal_frame)
+
+    def _dispatch_advance(self, ps):
+        return self._fns()[2](self._windows, ps)
+
+    # -- per-shard cost accounting ----------------------------------------
+    def _account_round(self, qs: list[QueryState],
+                       cams_by_q: list[np.ndarray]) -> None:
+        """Per-worker view of the round: admitted camera-steps and the
+        shard-LOCAL deduplicated (cam, frame) demand.  The controller still
+        embeds the fleet-global dedup set once (``unique_frames``); the
+        per-shard numbers are each worker's inference demand if galleries
+        were not shared — the off-host-gallery follow-on closes that gap."""
+        by_worker: dict[str, list[int]] = {}
+        for i, q in enumerate(qs):
+            by_worker.setdefault(self._placement[q.qid], []).append(i)
+        for w, idxs in by_worker.items():
+            st = self._shard_stats[w]
+            st["query_rounds"] += len(idxs)
+            st["admitted_steps"] += sum(len(cams_by_q[i]) for i in idxs)
+            pairs = {(int(cam), qs[i].f_curr)
+                     for i in idxs for cam in cams_by_q[i]}
+            st["unique_frames"] += len(pairs)
+
+    def shard_report(self) -> list[dict]:
+        """One row per worker (including lost ones, stats frozen): placement
+        load and both cost conventions, shard-local."""
+        live = set(self._workers)
+        return [dict(worker=w, alive=w in live,
+                     queries=self._load(w) if w in live else 0,
+                     **self._shard_stats[w])
+                for w in self._all_workers]

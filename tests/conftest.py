@@ -1,3 +1,5 @@
+import collections
+import functools
 import os
 import sys
 
@@ -7,6 +9,206 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+
+# ---------------------------------------------------------------------------
+# Fleet differential harness (tests/test_sharded_engine.py + its subprocess
+# re-entry).  Everything below is import-safe — jax/repro imports stay inside
+# the functions so collecting this conftest never initializes a jax backend.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_serving_world(n_entities=100, horizon=360, seed=0, n_queries=4):
+    """Small duke-like world for engine differential tests (process-cached).
+
+    Returns plain arrays (model, visits, gallery, features, query vids) —
+    the same scenario shape the benchmarks use, sized for tick-by-tick
+    double (single + fleet) runs."""
+    from repro.core import (build_gallery, build_model, duke_like_network,
+                            simulate_network)
+    from repro.core.features import FeatureParams, make_features
+    from repro.core.tracker import make_queries
+
+    net = duke_like_network()
+    vis = simulate_network(net, n_entities, horizon, seed=seed)
+    gal, _ = build_gallery(vis, 16)
+    model = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, net.n_cams,
+                        time_limit=int(horizon * 0.7))
+    feats, _ = make_features(vis, n_entities, FeatureParams(seed=seed))
+    q_vids, gt_vids = make_queries(vis, n_queries, seed=seed + 1)
+    return dict(net=net, vis=vis, gal=gal, model=model, feats=feats,
+                q_vids=q_vids, gt_vids=gt_vids)
+
+
+def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
+                        lose_worker=0, extra_ticks=500):
+    """Run one engine (single-process when ``shards`` is None, else the
+    sharded fleet) over the world's live stream and return (engine, trace,
+    summary).  ``lose_at`` kills one worker that many ticks into the run —
+    the fleet rebalances; the single engine ignores it."""
+    from repro import api as rexcam
+
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    q_vids = world["q_vids"]
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=world["net"].geo_adjacent, shards=shards)
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    trace = []
+    for step, t in enumerate(range(t0, vis.horizon + extra_ticks)):
+        if lose_at is not None and step == lose_at and shards is not None:
+            eng.lose_worker(lose_worker)
+        if t < vis.horizon:
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+        eng.tick(record_trace=trace)
+        if all(q.done for q in eng.queries.values()):
+            break
+    summary = dict(
+        admitted_steps=eng.admitted_steps, unique_frames=eng.unique_frames,
+        content_steps=eng.content_steps, replay_steps=eng.replay_steps,
+        rescue_pairs=eng.rescue_pairs.copy(),
+        per_query=[(q.matches, q.rescued, q.done, q.phase, q.f_curr)
+                   for q in eng.queries.values()])
+    return eng, trace, summary
+
+
+def trace_key(trace):
+    """Canonical per-round tuple stream: admissions (mask), the match
+    decision, tie-break (gallery row index) and raw kernel score."""
+    return [(r["qid"], r["f_curr"], r["phase"],
+             tuple(bool(x) for x in r["mask"]), bool(r["matched"]),
+             int(r["match_cam"]), float(r["match_val"]), int(r["match_idx"]))
+            for r in trace]
+
+
+def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
+                                 lose_worker=0, single=None):
+    """THE differential assertion: the sharded fleet's rounds are
+    bit-identical to the single-process engine's — admissions, match
+    indices/values (tie-breaks included), rescue attribution, and both
+    cost conventions.  Returns (fleet engine, single (trace, summary)) so
+    callers can layer fleet-specific asserts on top; pass ``single`` (a
+    prior return) to reuse the reference run across shard counts."""
+    if single is None:
+        _, ref_trace, ref_sum = drive_serving_trace(world, policy)
+        single = (ref_trace, ref_sum)
+    ref_trace, ref_sum = single
+    eng, fl_trace, fl_sum = drive_serving_trace(
+        world, policy, shards=shards, lose_at=lose_at,
+        lose_worker=lose_worker)
+    assert trace_key(fl_trace) == trace_key(ref_trace), \
+        f"fleet (shards={shards}) trace diverged from the single engine"
+    assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
+    assert fl_sum["unique_frames"] == ref_sum["unique_frames"]
+    assert fl_sum["content_steps"] == ref_sum["content_steps"]
+    assert fl_sum["replay_steps"] == ref_sum["replay_steps"]
+    np.testing.assert_array_equal(fl_sum["rescue_pairs"],
+                                  ref_sum["rescue_pairs"])
+    assert fl_sum["per_query"] == ref_sum["per_query"]
+    # per-shard accounting must tile the fleet totals (admitted) / at least
+    # cover them (unique frames are shard-local dedup, so >= the global)
+    rep = eng.shard_report()
+    assert sum(r["admitted_steps"] for r in rep) == eng.admitted_steps
+    assert sum(r["unique_frames"] for r in rep) >= eng.unique_frames
+    return eng, single
+
+
+def _require_devices(n):
+    import jax
+    assert len(jax.devices()) >= n, (
+        f"need {n} devices, have {len(jax.devices())} — set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu")
+
+
+def fleet_case_shard_counts(shard_counts=(1, 2, 4, 8), n_queries=5, seed=0):
+    """Differential case: every shard count in ``shard_counts`` is
+    trace-identical to the single engine — with a query count NOT divisible
+    by any shard count > 1 (5 % {2,4,8} != 0, so shard blocks carry ragged
+    padding), then once more with an exactly-divisible count."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(max(shard_counts))
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    single = None
+    for shards in shard_counts:
+        eng, single = assert_fleet_trace_identical(world, policy, shards,
+                                                   single=single)
+        # submit-time placement is least-loaded: never more than one query
+        # of imbalance between live workers (counted over the placement map,
+        # which survives query completion — shard_report loads go to 0)
+        counts = collections.Counter(eng._placement.values())
+        loads = [counts.get(r["worker"], 0)
+                 for r in eng.shard_report() if r["alive"]]
+        assert max(loads) - min(loads) <= 1, loads
+    divisible = make_serving_world(seed=seed + 10, n_queries=4)
+    assert_fleet_trace_identical(world=divisible, policy=policy, shards=4)
+
+
+def fleet_case_worker_loss(shards=4, lose_worker=1, lose_at=50,
+                           n_queries=7, seed=1):
+    """Differential case: killing a worker mid-run shrinks the data axis to
+    ``shards - 1`` and re-scatters its queries — and the trace stays
+    bit-identical to the single engine (placement never changes results)."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    eng, _ = assert_fleet_trace_identical(world, policy, shards,
+                                          lose_at=lose_at,
+                                          lose_worker=lose_worker)
+    assert eng.n_shards == shards - 1
+    assert eng.rebalances == 1
+    rep = {r["worker"]: r for r in eng.shard_report()}
+    lost = f"w{lose_worker}"
+    assert not rep[lost]["alive"]
+    assert rep[lost]["admitted_steps"] > 0, \
+        "the lost worker never served a round — lose_at fired too early"
+    live = {w for w, r in rep.items() if r["alive"]}
+    assert set(eng._placement.values()) <= live, "orphans not re-scattered"
+
+
+def fleet_property_suite(max_examples=6):
+    """Satellite property test, shared between the in-process (8-device CI
+    step) and subprocess entry: random scheme/seed/shard-count/replay-skip
+    draws must keep the fleet bit-identical to one engine.  Uses real
+    hypothesis when importable, else the deterministic fallback shim."""
+    sys.path.insert(0, os.path.dirname(__file__))
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+    from repro.core.policy import SearchPolicy
+
+    singles: dict[tuple, tuple] = {}   # (seed, policy) -> reference run
+
+    @settings(max_examples=max_examples, deadline=None)
+    @given(st.sampled_from(["rexcam", "all", "spatial_only", "geo"]),
+           st.integers(0, 2),                  # world seed stream
+           st.sampled_from([1, 2, 4, 8]),      # shard counts
+           st.sampled_from([1, 2]))            # §5.3 skip mode on/off
+    def prop(scheme, seed, shards, replay_skip):
+        world = make_serving_world(n_entities=80, horizon=300, seed=seed,
+                                   n_queries=3)
+        policy = SearchPolicy(scheme=scheme, s_thresh=.05, t_thresh=.02,
+                              exit_t=60, replay_skip=replay_skip)
+        key = (seed, policy)
+        _, singles[key] = assert_fleet_trace_identical(
+            world, policy, shards, single=singles.get(key))
+
+    prop()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,125 @@
+"""runtime.cluster: heartbeat liveness, EWMA seeding, straggler quarantine,
+and ElasticMesh scale-down — the fleet's host-side control plane."""
+import numpy as np
+import pytest
+
+from repro.runtime.cluster import ElasticMesh, HeartbeatMonitor
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_ewma_zero_latency_is_a_real_sample():
+    """Regression: a legitimate 0.0 first sample must seed the EWMA — the
+    old ``st.latency_ewma or tick_latency`` treated it as 'unset' and
+    re-seeded on the next report (10.0 instead of 0.3 * 10)."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0"], ewma=0.3, clock=clk)
+    mon.heartbeat("w0", tick_latency=0.0)
+    assert mon.workers["w0"].latency_ewma == 0.0
+    mon.heartbeat("w0", tick_latency=10.0)
+    assert mon.workers["w0"].latency_ewma == pytest.approx(3.0)
+
+
+def test_ewma_first_sample_seeds_then_smooths():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0"], ewma=0.5, clock=clk)
+    assert mon.workers["w0"].latency_ewma is None     # no sample yet
+    mon.heartbeat("w0")                               # liveness-only beat
+    assert mon.workers["w0"].latency_ewma is None
+    mon.heartbeat("w0", tick_latency=4.0)
+    assert mon.workers["w0"].latency_ewma == 4.0      # explicit seed
+    mon.heartbeat("w0", tick_latency=8.0)
+    assert mon.workers["w0"].latency_ewma == pytest.approx(6.0)
+
+
+def test_dead_worker_detection_fake_clock():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], timeout=10.0, clock=clk)
+    clk.now = 8.0
+    mon.heartbeat("w0")
+    mon.heartbeat("w1")
+    clk.now = 15.0                     # w2's last beat was at t=0
+    assert mon.dead() == ["w2"]
+    assert sorted(mon.active()) == ["w0", "w1"]
+    clk.now = 30.0                     # now everyone is silent too long
+    assert sorted(mon.dead()) == ["w0", "w1", "w2"]
+    assert mon.active() == []
+
+
+def test_straggler_flagged_at_k_times_median():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2", "w3"], straggler_factor=3.0,
+                           ewma=1.0, clock=clk)
+    for w in ("w0", "w1", "w2"):
+        mon.heartbeat(w, tick_latency=1.0)
+    mon.heartbeat("w3", tick_latency=10.0)
+    assert mon.stragglers() == ["w3"]
+
+
+def test_quarantine_not_reflagged():
+    """A quarantined worker leaves ``stragglers()`` and ``active()`` — it
+    must not be re-flagged on the next poll."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], straggler_factor=3.0,
+                           ewma=1.0, clock=clk)
+    for w in ("w0", "w1"):
+        mon.heartbeat(w, tick_latency=1.0)
+    mon.heartbeat("w2", tick_latency=9.0)
+    assert mon.stragglers() == ["w2"]
+    mon.quarantine("w2")
+    assert mon.stragglers() == []                     # no double-fire
+    assert sorted(mon.active()) == ["w0", "w1"]
+    mon.heartbeat("w2", tick_latency=9.0)             # still beating, still out
+    assert mon.stragglers() == []
+
+
+def test_zero_latency_fleet_has_no_stragglers():
+    """All-zero EWMAs are valid samples and nobody stands out."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], ewma=1.0, clock=clk)
+    for w in ("w0", "w1", "w2"):
+        mon.heartbeat(w, tick_latency=0.0)
+    assert mon.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# ElasticMesh
+# ---------------------------------------------------------------------------
+
+def test_grid_shrinks_data_axis_on_worker_loss():
+    em = ElasticMesh(model_parallel=2)
+    assert em.grid_for(8) == (4, 2)
+    assert em.grid_for(6) == (3, 2)    # lost 2 workers: data axis 4 -> 3
+    assert em.grid_for(2) == (1, 2)
+    with pytest.raises(RuntimeError):
+        em.grid_for(1)                 # cannot host the model axis
+
+
+def test_make_mesh_uses_largest_feasible_grid():
+    import jax
+
+    em = ElasticMesh(model_parallel=1)
+    mesh = em.make_mesh(jax.devices())
+    assert mesh.shape["data"] == len(jax.devices())
+    assert mesh.shape["model"] == 1
+
+
+def test_rebalance_streams_round_robin():
+    em = ElasticMesh(model_parallel=1)
+    out = em.rebalance_streams(list(range(7)), 3)
+    assert out == [[0, 3, 6], [1, 4], [2, 5]]
+    assert sorted(s for grp in out for s in grp) == list(range(7))
+    # scale-down: the same streams re-pack densely onto fewer shards
+    out2 = em.rebalance_streams([s for grp in out for s in grp], 2)
+    assert sum(len(g) for g in out2) == 7
+    assert abs(len(out2[0]) - len(out2[1])) <= 1

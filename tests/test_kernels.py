@@ -151,7 +151,8 @@ def test_reid_rank_parity_property(Q, G, C, k, ties):
         np.testing.assert_allclose(msv, rmv, rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(msi, rmi)
 
-    matched, match_cam, match_emb = (np.asarray(a) for a in rank_round(
+    matched, match_cam, match_emb, best_val, best_idx = (
+        np.asarray(a) for a in rank_round(
         jnp.asarray(qf), jnp.asarray(q_frame), jnp.asarray(adm),
         jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), thresh))
     # numpy mirror of the pre-device host ranking loop
@@ -162,6 +163,8 @@ def test_reid_rank_parity_property(Q, G, C, k, ties):
             else np.zeros(0)
         if not valid.any():
             assert not matched[i]
+            # fully-masked rows surface the kernels' padding convention
+            assert best_idx[i] == -1 and best_val[i] < -1e29
             continue
         j = int(np.argmin(d))
         assert bool(matched[i]) == bool(d[j] < thresh)

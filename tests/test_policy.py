@@ -372,6 +372,60 @@ def test_engine_replay_miss_past_retention():
     assert len(eng.queries[0].matches) == 0
 
 
+def _drive_world(eng, vis, gal, feats):
+    for t in range(vis.horizon):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick()
+
+
+def test_engine_rescue_pairs_feed_drift_score():
+    """§6 drift detection on the SERVING plane: the engine attributes every
+    phase-2 rescue to its (anchor, match) camera pair, and
+    ``profiler.drift_score`` over that live matrix spikes on exactly the
+    drifted transition — entities taking a path the profile barely saw."""
+    from repro.core.profiler import drift_score
+
+    vis, gal, feats, model = _rare_path_world()
+    q = len(vis) - 2                   # tracked entity takes the rare c0->c2
+    p = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02, exit_t=120)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=p)
+    eng.submit_query(0, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    _drive_world(eng, vis, gal, feats)
+
+    assert eng.queries[0].rescued > 0
+    # attribution: anchored at c0, recovered at c2 — nothing else
+    assert eng.rescue_pairs[0, 2] == eng.queries[0].rescued
+    assert eng.rescue_pairs.sum() == eng.queries[0].rescued
+    score = np.asarray(drift_score(model, eng.rescue_pairs))
+    assert score[0, 2] == score.max() > 0, "drifted pair must dominate"
+    off = score.copy()
+    off[0, 2] = 0.0
+    assert (off == 0).all()
+
+
+def test_engine_matched_stream_keeps_drift_score_flat():
+    """The control: a stream the profile explains (phase 1 finds every
+    sighting) produces no rescues, so the recalibration signal stays zero."""
+    from repro.core.profiler import drift_score
+
+    vis, gal, feats, model = _toy_world()
+    q_vids, _ = make_queries(vis, 2, seed=0)
+    p = SearchPolicy(scheme="rexcam", s_thresh=0.3, t_thresh=0.02, exit_t=60)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=p)
+    for i, v in enumerate(q_vids):
+        eng.submit_query(i, feats[v], int(vis.cam[v]), int(vis.t_out[v]))
+    _drive_world(eng, vis, gal, feats)
+
+    assert sum(len(q.matches) for q in eng.queries.values()) > 0
+    assert eng.rescue_pairs.sum() == 0
+    assert (np.asarray(drift_score(model, eng.rescue_pairs)) == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # facade
 # ---------------------------------------------------------------------------

@@ -1,0 +1,169 @@
+"""The fleet-vs-single-engine differential harness (the sharding contract).
+
+``ShardedServingEngine`` must be TRACE-IDENTICAL to the single-process
+``ServingEngine``: same admissions, same match indices/values (tie-breaks
+included), same rescue attribution, same totals under both cost conventions
+— for shard counts {1, 2, 4, 8}, query counts that don't divide the shard
+count, and mid-run worker loss.  The case bodies live in ``tests/conftest.py``
+so two entry points share them:
+
+  * the CI ``fleet`` step runs this file directly under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu``
+    — the cases then run IN-PROCESS on the 8 fake CPU devices;
+  * under plain tier-1 (1 device; the flag must not leak into the other
+    tests' jax runtime) each case re-enters the same conftest function in a
+    subprocess that sets the flag.
+"""
+import os
+import subprocess
+import sys
+
+TESTS = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.abspath(os.path.join(TESTS, "..", "src"))
+
+
+def _fleet_case(fn_name: str, timeout=900, **kwargs):
+    """Run ``conftest.<fn_name>(**kwargs)`` on >= 8 devices: in-process when
+    this runtime already has them, else in a flag-setting subprocess."""
+    import jax
+
+    if jax.local_device_count() >= 8:
+        import conftest
+        getattr(conftest, fn_name)(**kwargs)
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, TESTS] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    code = f"import conftest; conftest.{fn_name}(**{kwargs!r})"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, \
+        f"{fn_name}{kwargs}:\nstdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+# ---------------------------------------------------------------------------
+# the differential contract on 8 fake devices
+# ---------------------------------------------------------------------------
+
+def test_fleet_trace_identical_across_shard_counts():
+    """Shard counts {1, 2, 4, 8}, 5 queries (not divisible by any of them),
+    plus an exactly-divisible 4-query/4-shard pass."""
+    _fleet_case("fleet_case_shard_counts")
+
+
+def test_fleet_worker_loss_rebalances_without_divergence():
+    """Mid-run worker loss: the data axis shrinks 4 -> 3, orphaned queries
+    re-scatter over the survivors, the trace never diverges."""
+    _fleet_case("fleet_case_worker_loss")
+
+
+def test_fleet_random_streams_property():
+    """Satellite property test: random scheme/seed/shard-count/skip draws
+    stay bit-identical (deterministic via tests/_hypothesis_fallback.py
+    when real hypothesis is absent)."""
+    _fleet_case("fleet_property_suite", max_examples=6)
+
+
+# ---------------------------------------------------------------------------
+# fleet machinery that needs no fake-device mesh (tier-1, in-process)
+# ---------------------------------------------------------------------------
+
+def test_fleet_single_shard_matches_engine_inprocess():
+    """shards=1 exercises the whole fleet path (mesh build, shard_map
+    dispatch, placement, per-shard accounting) on any device count."""
+    from conftest import (assert_fleet_trace_identical, make_serving_world)
+    from repro.core.policy import SearchPolicy
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    eng, _ = assert_fleet_trace_identical(world, policy, shards=1)
+    assert eng.n_shards == 1
+    rep = eng.shard_report()
+    assert len(rep) == 1 and rep[0]["alive"]
+    assert rep[0]["admitted_steps"] == eng.admitted_steps
+    # one shard sees the globally-deduplicated demand exactly
+    assert rep[0]["unique_frames"] == eng.unique_frames
+
+
+def test_api_serve_shards_knob():
+    """The facade routes shards=None to the single engine and shards=k to
+    the fleet; an infeasible shard count fails loudly."""
+    import jax
+    import pytest
+    from repro import api as rexcam
+    from repro.runtime.engine import ServingEngine
+    from repro.runtime.fleet import ShardedServingEngine
+    from conftest import make_serving_world
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    single = rexcam.serve(world["model"], embed_fn=lambda x: x)
+    assert type(single) is ServingEngine
+    fleet = rexcam.serve(world["model"], embed_fn=lambda x: x, shards=1)
+    assert isinstance(fleet, ShardedServingEngine)
+    with pytest.raises(ValueError):
+        rexcam.serve(world["model"], embed_fn=lambda x: x,
+                     shards=len(jax.devices()) + 1)
+
+
+def test_fleet_placement_and_loss_bookkeeping():
+    """Host-side control plane alone (no ticks): least-loaded placement,
+    orphan re-scatter on loss, and the last worker being irremovable."""
+    import pytest
+    from repro import api as rexcam
+    from conftest import make_serving_world
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    vis, feats = world["vis"], world["feats"]
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, shards=1)
+    for i, q in enumerate(world["q_vids"][:2]):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    assert set(eng._placement) == {0, 1}
+    assert set(eng._placement.values()) == {"w0"}
+    with pytest.raises(RuntimeError):
+        eng.lose_worker("w0")          # never drop the whole fleet
+    with pytest.raises(KeyError):
+        eng.lose_worker("w7")
+
+
+def test_fleet_heartbeat_drives_scale_down():
+    """poll_health: a dead worker (fake clock) leaves the fleet and its
+    queries re-scatter — the HeartbeatMonitor wiring, no mesh math."""
+    import jax
+    import pytest
+    from repro import api as rexcam
+    from repro.runtime.cluster import HeartbeatMonitor
+    from repro.runtime.fleet import ShardedServingEngine
+    from repro.runtime.engine import EngineConfig
+    from conftest import make_serving_world
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (covered by the CI fleet step)")
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    # a monitor that doesn't track the fleet's worker ids is a construction
+    # error, not a silent poll_health no-op
+    with pytest.raises(ValueError):
+        ShardedServingEngine(world["model"], lambda x: x, EngineConfig(),
+                             shards=2,
+                             monitor=HeartbeatMonitor(["hostA", "hostB"]))
+    now = [0.0]
+    mon = HeartbeatMonitor(["w0", "w1"], timeout=10.0, clock=lambda: now[0])
+    eng = ShardedServingEngine(world["model"], lambda x: x, EngineConfig(),
+                               shards=2, monitor=mon)
+    vis, feats = world["vis"], world["feats"]
+    for i, q in enumerate(world["q_vids"][:2]):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    assert set(eng._placement.values()) == {"w0", "w1"}
+    now[0] = 5.0
+    mon.heartbeat("w0")
+    now[0] = 15.0                      # w1 silent past the timeout
+    assert eng.poll_health() == ["w1"]
+    assert eng.n_shards == 1
+    assert set(eng._placement.values()) == {"w0"}
+    assert eng.poll_health() == []     # already removed: no double-fire
