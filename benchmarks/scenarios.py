@@ -116,7 +116,8 @@ def policy_sweep(scenarios=("duke", "porto130")):
 # serving_sweep: the live engine's cost accounting, per scheme.
 # ---------------------------------------------------------------------------
 
-def _drive_serving(sc, policy, n_queries, steps, shards=None):
+def _drive_serving(sc, policy, n_queries, steps, shards=None,
+                   gallery="auto"):
     """The one engine-driving loop every serving benchmark shares: build the
     engine (fleet when ``shards``), submit the scenario's queries, replay the
     live stream tick by tick.  Returns (engine, matches, wall seconds
@@ -125,7 +126,8 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None):
     q_vids = sc["q_vids"][:n_queries]
     wall0 = time.perf_counter()
     eng = rexcam.serve(sc["model"], embed_fn=lambda x: x, policy=policy,
-                       geo_adj=net.geo_adjacent, shards=shards)
+                       geo_adj=net.geo_adjacent, shards=shards,
+                       gallery=gallery)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -223,4 +225,68 @@ def serving_shard_sweep(scenarios=("duke",), n_queries=16, steps=300,
                          f"unique_frames={eng.unique_frames} "
                          f"per_shard_admitted={per_adm} "
                          f"per_shard_unique={per_uni}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# gallery_sweep: one fleet-wide embedding plane vs the replicated baseline.
+# ---------------------------------------------------------------------------
+
+def gallery_sweep(scenarios=("duke",), n_queries=16, steps=300, shards=4):
+    """The gallery plane's win, quantified: drive the fleet with the
+    fleet-shared ``ShardedGalleryStore`` and with the replicated-baseline
+    ``LocalGalleryStore`` and report, per mode:
+
+    * embed-call reduction — fleet-global embed calls (``frames_processed``)
+      vs what a replicated per-worker cache would embed (the sum of each
+      shard's shard-LOCAL deduplicated demand, ``unique_frames`` in
+      ``shard_report()``),
+    * per-worker cache memory — each owner's resident blocks/bytes under
+      the sharded store vs the whole cache replicated onto every worker.
+
+    Both modes must stay trace-identical to the single engine (asserted via
+    the fleet totals).  Needs ``shards`` visible devices — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on a CPU host."""
+    import jax
+
+    builders = {"duke": lambda: duke(60)}
+    rows = []
+    n_dev = len(jax.devices())
+    for sc_name in scenarios:
+        if shards > n_dev:
+            rows.append((f"gallery_sweep/{sc_name}", 0.0,
+                         f"skipped: {n_dev} devices visible "
+                         f"(set xla_force_host_platform_device_count)"))
+            continue
+        sc = builders[sc_name]()
+        n_q = min(n_queries, len(sc["q_vids"]))
+        policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
+                                     t_thresh=.02)
+        single, _, _ = _drive_serving(sc, policy, n_q, steps)
+        for mode in ("local", "sharded"):
+            eng, _, wall = _drive_serving(sc, policy, n_q, steps,
+                                          shards=shards, gallery=mode)
+            assert eng.unique_frames == single.unique_frames, \
+                f"gallery={mode} fleet diverged from the single engine"
+            assert eng.frames_processed == single.frames_processed, \
+                f"gallery={mode} fleet re-embedded (no longer one plane)"
+            rep = eng.shard_report()
+            replicated_embeds = sum(r["unique_frames"] for r in rep)
+            reduction = replicated_embeds / max(eng.frames_processed, 1)
+            g = eng.gallery_report()
+            if mode == "sharded":
+                per_w = g["per_worker"]
+                mem = "/".join(f"{per_w[r['worker']]['bytes']}" for r in rep)
+                peak = max(v["bytes"] for v in per_w.values())
+            else:
+                # replicated baseline: every worker would hold the full cache
+                mem = "/".join(str(g["bytes"]) for _ in rep)
+                peak = g["bytes"]
+            rows.append((f"gallery_sweep/{sc['name']}/{mode}",
+                         wall * 1e6 / max(n_q, 1),
+                         f"embed_calls={eng.frames_processed} "
+                         f"replicated_demand={replicated_embeds} "
+                         f"embed_reduction={reduction:.1f}x "
+                         f"cache_hits={eng.cache_hits} "
+                         f"per_worker_bytes={mem} peak_worker_bytes={peak}"))
     return rows

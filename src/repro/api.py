@@ -51,15 +51,27 @@ def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
 def serve(model: SpatioTemporalModel, embed_fn: Callable,
           policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
           retention: int = 600, geo_adj=None, shards: int | None = None,
-          devices=None) -> ServingEngine:
+          devices=None, gallery: str = "auto",
+          topk: int = 1) -> ServingEngine:
     """Live serving engine driving the same vectorized admission plane.
 
     ``shards=None`` returns the single-process engine; ``shards=k`` (or an
     explicit ``devices`` list) returns a ``ShardedServingEngine`` whose
     query axis is shard_map-partitioned over k devices of the local mesh —
     trace-identical to the single engine, pinned by the differential
-    harness in tests/test_sharded_engine.py."""
-    cfg = EngineConfig(policy=policy, max_batch=max_batch, retention=retention)
+    harness in tests/test_sharded_engine.py.
+
+    ``gallery`` selects the embedding plane behind the engine(s):
+    ``"auto"`` (a per-engine ``LocalGalleryStore`` for the single engine,
+    the fleet-shared ``ShardedGalleryStore`` for the fleet), ``"local"``
+    (force the replicated-baseline host cache) or ``"sharded"`` (fleet
+    only: camera-hash owner shards over the data axis).
+
+    ``topk`` surfaces the k best (value, camera, frame) candidate bands per
+    query round in the trace records (§5.2 confidence bands); the argmax
+    match path is band 0 and is unchanged by k > 1."""
+    cfg = EngineConfig(policy=policy, max_batch=max_batch,
+                       retention=retention, gallery=gallery, topk=topk)
     if shards is not None or devices is not None:
         return ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
                                     shards=shards, devices=devices)

@@ -37,6 +37,15 @@ def main():
     ap.add_argument("--shards", type=int, default=None,
                     help="partition the query axis over this many devices "
                          "(default: single-process engine)")
+    ap.add_argument("--gallery", default="auto",
+                    choices=["auto", "local", "sharded"],
+                    help="embedding plane: auto (local for one engine, "
+                         "fleet-shared sharded store for --shards), local "
+                         "(replicated baseline) or sharded (fleet only)")
+    ap.add_argument("--topk", type=int, default=1,
+                    help="surface the k best (value, cam, frame) candidate "
+                         "bands per round in trace records (argmax path "
+                         "unchanged)")
     args = ap.parse_args()
 
     net = duke_like_network()
@@ -49,7 +58,8 @@ def main():
     policy = rexcam.SearchPolicy(scheme=args.scheme, s_thresh=args.s_thresh,
                                  t_thresh=args.t_thresh)
     eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
-                       geo_adj=net.geo_adjacent, shards=args.shards)
+                       geo_adj=net.geo_adjacent, shards=args.shards,
+                       gallery=args.gallery, topk=args.topk)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -88,18 +98,29 @@ def main():
           f"replay misses past retention: {eng.replay_misses})")
     print(f"frame-store residency: {eng.store.memory_frames()} frames "
           f"(retention {eng.cfg.retention}s — paper §5.3 'last few minutes')")
+    g = eng.gallery_report()
+    print(f"gallery plane [{g['kind']}]: {g['cached']} blocks resident "
+          f"({g['bytes']} bytes), {g['hits']} hits / {g['misses']} misses, "
+          f"{g['evictions']} evictions")
     print(f"wall: {wall:.2f}s ({args.steps/max(wall,1e-9):.0f} steps/s)")
     if args.shards is not None:
         # per-shard demand is shard-LOCAL dedup: a frame two shards both
-        # want counts once per shard here but once in the engine totals
+        # want counts once per shard here but once in the engine totals;
+        # owned_frames is each worker's slice of the fleet-global dedup
+        # (sums to the engine total when the gallery is sharded)
         print(f"fleet: {eng.n_shards} shards (data axis), "
               f"{eng.rebalances} rebalances")
+        per_worker = g.get("per_worker", {})
         for row in eng.shard_report():
             state = "live" if row["alive"] else "lost"
+            gw = per_worker.get(row["worker"])
+            gal = (f" gallery={gw['blocks']} blocks/{gw['bytes']}B "
+                   f"({gw['cameras']} cams)" if gw else "")
             print(f"  {row['worker']} [{state}]: {row['queries']} queries, "
                   f"admitted_steps={row['admitted_steps']} "
                   f"unique_frames={row['unique_frames']} "
-                  f"query_rounds={row['query_rounds']}")
+                  f"owned_frames={row['owned_frames']} "
+                  f"query_rounds={row['query_rounds']}{gal}")
     for qid, q in eng.queries.items():
         lag = max(eng.t - 1 - q.f_curr, 0)
         state = "done" if q.done else f"tracking (phase {q.phase}, lag {lag}s)"

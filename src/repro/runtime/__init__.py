@@ -1,4 +1,6 @@
 from repro.runtime.engine import ServingEngine, EngineConfig, QueryState  # noqa: F401
 from repro.runtime.fleet import ShardedServingEngine  # noqa: F401
+from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,  # noqa: F401
+                                   ShardedGalleryStore)
 from repro.runtime.stream_store import FrameStore  # noqa: F401
 from repro.runtime.cluster import HeartbeatMonitor, ElasticMesh  # noqa: F401

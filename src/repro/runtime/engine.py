@@ -63,6 +63,8 @@ from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
                                phase_windows, replay_sampled_out)
 from repro.kernels import ops as kernel_ops
 from repro.kernels.reid_topk import NEG_INF
+from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
+                                   assemble_round_gallery, pow2)
 from repro.runtime.stream_store import FrameStore
 
 # effectively "never": the live engine terminates queries via exit_t /
@@ -78,8 +80,16 @@ class EngineConfig:
     policy: SearchPolicy = SearchPolicy()
     max_batch: int = 256
     retention: int = 600
-    embed_cache: bool = True          # FrameStore embedding cache (§5.3)
+    embed_cache: bool = True          # gallery-plane embedding cache (§5.3)
     short_circuit_skips: bool = True  # host fast path for sampled-out rounds
+    # which GalleryStore backs the embedding plane: "auto" (local for the
+    # single engine, the fleet-shared sharded store for the fleet),
+    # "local" (replicated per-engine) or "sharded" (fleet only)
+    gallery: str = "auto"
+    # top-k candidate bands surfaced per query round in the trace records
+    # (§5.2 confidence bands / re-ranking); the argmax match path is always
+    # band 0, so topk=1 is exactly the classic engine
+    topk: int = 1
 
 
 @dataclasses.dataclass
@@ -101,30 +111,36 @@ def _admit_jit(model, policy: SearchPolicy, state: PhaseState, geo_adj=None):
     return admit(model, policy, state, geo_adj)
 
 
-@partial(jax.jit, static_argnames=("match_thresh",))
+@partial(jax.jit, static_argnames=("match_thresh", "k"))
 def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
-               match_thresh: float):
+               match_thresh: float, k: int = 1):
     """One device pass over the round's deduplicated embedding batch.
 
-    ``reid_topk_masked`` (k=1) scores each query against exactly its
-    admitted galleries; the best score converts back to the cosine distance
-    the control plane thresholds on.  Returns (matched (Q,), match_cam (Q,),
-    match_emb (Q, D), best_val (Q,), best_idx (Q,)) — unmatched rows carry
-    cam 0 and an arbitrary embedding row; padded / fully-masked rows come
-    back as (NEG_INF, -1) in (best_val, best_idx), exactly like the kernels.
+    ``reid_topk_masked`` scores each query against exactly its admitted
+    galleries; the best (band-0) score converts back to the cosine distance
+    the control plane thresholds on — the argmax match path is unchanged by
+    k > 1, the extra bands only surface candidates.  Returns (matched (Q,),
+    match_cam (Q,), match_emb (Q, D), topk_val (Q, k), topk_idx (Q, k),
+    topk_cam (Q, k), topk_frame (Q, k)) — unmatched rows carry cam 0 and an
+    arbitrary embedding row; padded / fully-masked slots come back as
+    (NEG_INF, -1, -1, -1) in the bands, exactly like the kernels.
     """
     sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
-                                         gal_cam, gal_frame, 1)
+                                         gal_cam, gal_frame, k)
     best_val, best_idx = sv[:, 0], si[:, 0]
     dist = 1.0 - best_val
     matched = dist < match_thresh
-    idx = jnp.maximum(best_idx, 0)
-    match_cam = jnp.where(matched, gal_cam[idx], 0).astype(jnp.int32)
-    return matched, match_cam, gallery[idx], best_val, best_idx
+    idx0 = jnp.maximum(best_idx, 0)
+    match_cam = jnp.where(matched, gal_cam[idx0], 0).astype(jnp.int32)
+    valid = si >= 0
+    idx = jnp.maximum(si, 0)
+    topk_cam = jnp.where(valid, gal_cam[idx], -1).astype(jnp.int32)
+    topk_frame = jnp.where(valid, gal_frame[idx], -1).astype(jnp.int32)
+    return matched, match_cam, gallery[idx0], sv, si, topk_cam, topk_frame
 
 
 def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
-                       q_feat, mask, gallery, gal_cam, gal_frame):
+                       q_feat, mask, gallery, gal_cam, gal_frame, k: int = 1):
     """The ONE serving step body both the single-process engine and the
     sharded fleet dispatch: rank the round's deduplicated gallery, then run
     the shared phase machine.  Pure over (Q,)-batched inputs, so the fleet
@@ -132,14 +148,15 @@ def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
 
     The query cursor frames come from ``state.f_curr``; padding rows (done,
     all-False mask) therefore match nothing and surface (NEG_INF, -1) in
-    (best_val, best_idx) — the same convention the kernels use for their
-    own padded slots.
+    the top-k bands — the same convention the kernels use for their own
+    padded slots.
     """
-    matched, match_cam, match_emb, best_val, best_idx = rank_round(
-        q_feat, state.f_curr, mask, gallery, gal_cam, gal_frame,
-        policy.match_thresh)
+    (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
+     topk_frame) = rank_round(q_feat, state.f_curr, mask, gallery, gal_cam,
+                              gal_frame, policy.match_thresh, k)
     nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
-    return nxt, matched, match_cam, match_emb, best_val, best_idx
+    return (nxt, matched, match_cam, match_emb, topk_val, topk_idx,
+            topk_cam, topk_frame)
 
 
 def advance_round(policy: SearchPolicy, windows, state: PhaseState):
@@ -150,11 +167,11 @@ def advance_round(policy: SearchPolicy, windows, state: PhaseState):
                    jnp.zeros(Q, jnp.int32), _NO_HORIZON)
 
 
-@partial(jax.jit, static_argnames=("policy",))
+@partial(jax.jit, static_argnames=("policy", "k"))
 def _rank_advance_jit(policy: SearchPolicy, windows, state: PhaseState,
-                      q_feat, mask, gallery, gal_cam, gal_frame):
+                      q_feat, mask, gallery, gal_cam, gal_frame, k=1):
     return rank_advance_round(policy, windows, state, q_feat, mask,
-                              gallery, gal_cam, gal_frame)
+                              gallery, gal_cam, gal_frame, k)
 
 
 @partial(jax.jit, static_argnames=("policy",))
@@ -162,13 +179,15 @@ def _advance_round_jit(policy: SearchPolicy, windows, state: PhaseState):
     return advance_round(policy, windows, state)
 
 
-def _pow2(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length()
+_pow2 = pow2   # shared with runtime.gallery: one padding rule everywhere
 
 
 class ServingEngine:
     def __init__(self, model: SpatioTemporalModel, embed_fn: Callable,
                  cfg: EngineConfig, geo_adj=None):
+        if cfg.topk < 1:
+            raise ValueError(f"topk={cfg.topk} must be >= 1 (band 0 is the "
+                             f"argmax match path)")
         self.model = model
         self.embed_fn = embed_fn
         self.cfg = cfg
@@ -178,7 +197,8 @@ class ServingEngine:
         # (same default as the tracker)
         self._geo_adj = jnp.asarray(
             geo_adj if geo_adj is not None else np.ones((self.C, self.C), bool))
-        self.store = FrameStore(self.C, cfg.retention)
+        self.gallery = self._make_gallery()
+        self.store = FrameStore(self.C, cfg.retention, gallery=self.gallery)
         self.queries: dict[int, QueryState] = {}
         self.t = 0
         self.frames_processed = 0    # (cam, frame) batches actually embedded
@@ -201,11 +221,34 @@ class ServingEngine:
         self._w1 = np.asarray(self._windows.w_end1)
         self._w2 = np.asarray(self._windows.w_end2)
 
+    # -- the gallery plane -------------------------------------------------
+    def _make_gallery(self) -> GalleryStore:
+        """Which GalleryStore backs the embedding plane.  The fleet
+        overrides this to inject the shared ``ShardedGalleryStore``."""
+        if self.cfg.gallery in ("auto", "local"):
+            return LocalGalleryStore(self.C, self.cfg.retention)
+        if self.cfg.gallery == "sharded":
+            raise ValueError(
+                "gallery='sharded' requires the sharded fleet "
+                "(serve(..., shards=k)); the single engine is local-only")
+        raise ValueError(f"unknown gallery mode {self.cfg.gallery!r} "
+                         f"(expected 'auto', 'local' or 'sharded')")
+
+    def gallery_report(self) -> dict:
+        """The embedding plane's own accounting: backend kind plus
+        hit/miss/eviction/put counters and resident memory."""
+        return dict(kind=self.gallery.kind, **self.gallery.counters())
+
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
         self.queries[qid] = QueryState(
             qid, feat / max(np.linalg.norm(feat), 1e-9), cam, frame,
             f_curr=frame + 1)
+
+    def _on_query_done(self, q: QueryState) -> None:
+        """Fired exactly once per query, on its not-done -> done transition
+        (both the device round and the host skip fast path).  The fleet
+        keeps its O(1) per-worker live-load counters here."""
 
     # -- batched state marshalling ---------------------------------------
     def _layout(self, qs: list[QueryState]) -> tuple[int, np.ndarray]:
@@ -267,6 +310,8 @@ class ServingEngine:
             q.f_q, q.c_q = int(f_q[j]), int(c_q[j])
             q.f_curr, q.phase = int(f_curr[j]), int(phase[j])
             q.done = bool(done[j])
+            if q.done:          # qs never contains done queries: a transition
+                self._on_query_done(q)
 
     # -- device dispatch ---------------------------------------------------
     # The fleet overrides these three to run the SAME step bodies under
@@ -277,15 +322,18 @@ class ServingEngine:
     def _dispatch_rank_advance(self, ps: PhaseState, q_feat, mask, gallery,
                                gal_cam, gal_frame):
         return _rank_advance_jit(self.policy, self._windows, ps, q_feat,
-                                 mask, gallery, gal_cam, gal_frame)
+                                 mask, gallery, gal_cam, gal_frame,
+                                 k=self.cfg.topk)
 
     def _dispatch_advance(self, ps: PhaseState):
         return _advance_round_jit(self.policy, self._windows, ps)
 
     def _account_round(self, qs: list[QueryState],
-                       cams_by_q: list[np.ndarray]) -> None:
+                       cams_by_q: list[np.ndarray],
+                       wanted: set[tuple[int, int]]) -> None:
         """Per-round accounting hook — ``cams_by_q[i]`` is the camera set
-        query i admitted (the fleet adds per-shard cost here)."""
+        query i admitted, ``wanted`` the round's globally-deduplicated
+        (cam, frame) demand (the fleet adds per-shard cost here)."""
 
     # -- per-tick ----------------------------------------------------------
     def ingest(self, frames_by_cam: dict[int, Any]):
@@ -379,7 +427,7 @@ class ServingEngine:
         for i, q in enumerate(qs):
             for cam in cams_by_q[i]:
                 wanted.add((int(cam), q.f_curr))
-        self._account_round(qs, cams_by_q)
+        self._account_round(qs, cams_by_q, wanted)
         stats["unique_frames"] += len(wanted)
         self.unique_frames += len(wanted)
 
@@ -426,47 +474,46 @@ class ServingEngine:
             for key, cnt in zip(keys, counts):
                 key_emb[key] = emb[pos:pos + cnt]
                 if self.cfg.embed_cache:
-                    self.store.put_emb(*key, key_emb[key])
+                    # the frame was just read out of the store, so it IS
+                    # retained — a refused write here is a bookkeeping bug
+                    # (raise, not assert: must survive python -O)
+                    if not self.store.put_emb(*key, key_emb[key]):
+                        raise RuntimeError(
+                            f"engine tried to cache un-retained frame {key}")
                 pos += cnt
 
         # one rank+advance pass over the whole round, through the step body
         # both engines share: every query scores exactly its admitted
         # galleries via the segment-masked reid kernel, then the phase
-        # machine advances — matched/best_val/best_idx come back per row
-        # with padding rows as (False, NEG_INF, -1)
+        # machine advances — matched plus the (N, k) top-k bands come back
+        # per row with padding rows as (False, NEG_INF, -1)
         N = mask.shape[0]
+        K = self.cfg.topk
         matched = np.zeros(N, bool)
         match_cam = np.zeros(N, np.int32)
-        best_val = np.full(N, NEG_INF, np.float32)
-        best_idx = np.full(N, -1, np.int32)
+        topk_val = np.full((N, K), NEG_INF, np.float32)
+        topk_idx = np.full((N, K), -1, np.int32)
+        topk_cam = np.full((N, K), -1, np.int32)
+        topk_frame = np.full((N, K), -1, np.int32)
         match_emb = None
         if batch_keys:
-            counts = [len(key_emb[k]) for k in batch_keys]
-            gal = np.concatenate(
-                [key_emb[k] for k in batch_keys]).astype(np.float32)
-            gal_cam = np.repeat([k[0] for k in batch_keys],
-                                counts).astype(np.int32)
-            gal_frame = np.repeat([k[1] for k in batch_keys],
-                                  counts).astype(np.int32)
-            G = gal.shape[0]
-            Gp = _pow2(G)               # pow2-pad: bounded jit recompiles
-            if Gp > G:
-                gal = np.concatenate(
-                    [gal, np.zeros((Gp - G, gal.shape[1]), np.float32)])
-                gal_cam = np.concatenate([gal_cam, np.full(Gp - G, -1, np.int32)])
-                gal_frame = np.concatenate(
-                    [gal_frame, np.full(Gp - G, -1, np.int32)])
+            # camera-major key order was fixed above; assembly + pow2 pad
+            # live in the gallery plane so both engines share one rule
+            gal, gal_cam, gal_frame = assemble_round_gallery(batch_keys,
+                                                             key_emb)
             q_feat = np.zeros((N, gal.shape[1]), np.float32)
             for i, q in enumerate(qs):
                 q_feat[sl[i]] = q.feat
-            ps_next, m, mc, me, bv, bi = self._dispatch_rank_advance(
+            ps_next, m, mc, me, tv, ti, tc, tf = self._dispatch_rank_advance(
                 ps, jnp.asarray(q_feat), jnp.asarray(mask), jnp.asarray(gal),
                 jnp.asarray(gal_cam), jnp.asarray(gal_frame))
             matched = np.asarray(m)
             match_cam = np.asarray(mc)
             match_emb = np.asarray(me)
-            best_val = np.asarray(bv)
-            best_idx = np.asarray(bi)
+            topk_val = np.asarray(tv)
+            topk_idx = np.asarray(ti)
+            topk_cam = np.asarray(tc)
+            topk_frame = np.asarray(tf)
             stats["matches"] += int(matched[sl].sum())
         else:
             ps_next = self._dispatch_advance(ps)
@@ -478,7 +525,10 @@ class ServingEngine:
                     qid=q.qid, f_curr=q.f_curr, phase=q.phase,
                     mask=mask[j].copy(), matched=bool(matched[j]),
                     match_cam=int(match_cam[j]),
-                    match_val=float(best_val[j]), match_idx=int(best_idx[j]))
+                    match_val=float(topk_val[j, 0]),
+                    match_idx=int(topk_idx[j, 0]),
+                    topk=tuple((float(topk_val[j, b]), int(topk_cam[j, b]),
+                                int(topk_frame[j, b])) for b in range(K)))
             trace.extend(records[q.qid] for q in all_qs)
 
         self._scatter(qs, ps_next, matched, match_cam, match_emb)
@@ -494,12 +544,14 @@ class ServingEngine:
         stats["skipped_rounds"] += len(qs)
         self.skipped_steps += len(qs)
         if records is not None:
+            empty_topk = ((float(NEG_INF), -1, -1),) * self.cfg.topk
             for q in qs:
                 records[q.qid] = dict(qid=q.qid, f_curr=q.f_curr,
                                       phase=q.phase,
                                       mask=np.zeros(self.C, bool),
                                       matched=False, match_cam=0,
-                                      match_val=float(NEG_INF), match_idx=-1)
+                                      match_val=float(NEG_INF), match_idx=-1,
+                                      topk=empty_topk)
         p = self.policy
         for q in qs:
             f_next = q.f_curr + 1
@@ -522,3 +574,5 @@ class ServingEngine:
                 phase_new = q.phase + 1 if esc else q.phase
                 f_new = q.f_q + 1 if esc else f_next
             q.f_curr, q.phase, q.done = f_new, phase_new, bool(done)
+            if q.done:
+                self._on_query_done(q)

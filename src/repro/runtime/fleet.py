@@ -11,6 +11,13 @@ fleet while the tiny correlation model M stays replicated on every worker.
   * M, the phase windows, the geo adjacency and the per-round deduplicated
     gallery are REPLICATED (a few small dense arrays — the paper's §7 point
     that the control plane's only persistent state is tiny),
+  * the EMBEDDING plane is fleet-shared: by default the fleet injects a
+    ``runtime.gallery.ShardedGalleryStore`` behind its ``FrameStore``, so
+    the (camera, frame) embedding cache is partitioned over the same data
+    axis (camera-hash owner shards, blocks resident on the owner's device)
+    instead of replicated per process — one gallery for the whole fleet,
+    and fleet-global embed calls match the single engine's exactly (no
+    per-shard re-embedding),
   * every device round runs the SAME step bodies as the single-process
     ``ServingEngine`` (``policy.admit``, ``engine.rank_advance_round``)
     wrapped in ``parallel.compat.shard_map`` — so the fleet is
@@ -18,16 +25,20 @@ fleet while the tiny correlation model M stays replicated on every worker.
     harness in ``tests/test_sharded_engine.py`` pins down.
 
 Host-side placement is the control plane's job: queries are placed on the
-least-loaded worker at submit time, and ``lose_worker`` shrinks the data
-axis via ``runtime.cluster.ElasticMesh`` (largest surviving grid, shardings
-rebuilt) and re-scatters ONLY the orphaned queries — an elastic scale-down,
-not a restart.  An optional ``HeartbeatMonitor`` drives the same path from
+least-loaded worker at submit time (O(1): per-worker live-query counters
+are maintained on submit / completion / rebalance, not recounted by
+scanning the placement map), and ``lose_worker`` shrinks the data axis via
+``runtime.cluster.ElasticMesh`` (largest surviving grid, shardings rebuilt),
+re-scatters ONLY the orphaned queries AND re-homes the lost worker's
+gallery shards onto the survivors — an elastic scale-down, not a restart.
+An optional ``HeartbeatMonitor`` drives the same path from
 liveness/straggler signals via ``poll_health``.
 
 Because admission, ranking and the phase machine are pure per-query maps
-(the gallery is replicated), placement never changes results — worker loss
-mid-run keeps the trace bit-identical.  What sharding buys is capacity:
-each worker ranks only its block of queries against the round's gallery.
+(the gallery is shared, not recomputed), placement never changes results —
+worker loss mid-run keeps the trace bit-identical.  What sharding buys is
+capacity: each worker ranks only its block of queries against the round's
+gallery, and holds only its cameras' slice of the embedding cache.
 """
 from __future__ import annotations
 
@@ -42,6 +53,8 @@ from repro.parallel.compat import shard_map
 from repro.runtime.cluster import ElasticMesh, HeartbeatMonitor
 from repro.runtime.engine import (EngineConfig, QueryState, ServingEngine,
                                   _pow2, advance_round, rank_advance_round)
+from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
+                                   ShardedGalleryStore)
 
 
 class ShardedServingEngine(ServingEngine):
@@ -51,14 +64,12 @@ class ShardedServingEngine(ServingEngine):
                  shards: int | None = None, devices: Iterable | None = None,
                  monitor: HeartbeatMonitor | None = None,
                  cluster: ElasticMesh | None = None):
-        super().__init__(model, embed_fn, cfg, geo_adj=geo_adj)
         devs = list(devices if devices is not None else jax.devices())
         if shards is not None:
             if shards < 1 or shards > len(devs):
                 raise ValueError(
                     f"shards={shards} infeasible: {len(devs)} devices visible")
             devs = devs[:shards]
-        self.cluster = cluster or ElasticMesh(model_parallel=1)
         if monitor is not None:
             # fail loudly at construction, not as a silent poll_health no-op:
             # every fleet worker id must be a name the monitor tracks
@@ -68,21 +79,54 @@ class ShardedServingEngine(ServingEngine):
                 raise ValueError(
                     f"HeartbeatMonitor does not track fleet workers "
                     f"{missing} — fleet worker ids are 'w0'..'w{len(devs)-1}'")
-        self.monitor = monitor
-        # stable worker identities: position in the ORIGINAL device list
+        # stable worker identities: position in the ORIGINAL device list.
+        # Topology must exist before super().__init__ — the base constructor
+        # calls _make_gallery(), and the fleet's gallery shards over it.
         self._device_of = {f"w{i}": d for i, d in enumerate(devs)}
         self._all_workers = list(self._device_of)
         self._workers = list(self._all_workers)        # live, data-axis order
+        super().__init__(model, embed_fn, cfg, geo_adj=geo_adj)
+        self.cluster = cluster or ElasticMesh(model_parallel=1)
+        self.monitor = monitor
         self._placement: dict[int, str] = {}           # qid -> worker
+        # O(1) placement: live (not-done) query count per worker, maintained
+        # on submit_query / _on_query_done / lose_worker — never recounted
+        # by scanning the placement map
+        self._live_load = {w: 0 for w in self._all_workers}
         # query_rounds = per-query rounds DISPATCHED for this worker's
         # queries (not engine ticks; skip-mode rounds short-circuited on
         # the host are charged to content_steps but never reach a worker,
-        # so sum(query_rounds) == content_steps - skipped_steps)
+        # so sum(query_rounds) == content_steps - skipped_steps).
+        # unique_frames is the worker's shard-LOCAL deduplicated demand;
+        # owned_frames is its slice of the fleet-GLOBAL dedup set (which
+        # camera-owner would serve each deduplicated frame) — the two cost
+        # views the gallery plane distinguishes.
         self._shard_stats = {w: dict(admitted_steps=0, unique_frames=0,
-                                     query_rounds=0)
+                                     owned_frames=0, query_rounds=0)
                              for w in self._all_workers}
         self.rebalances = 0
         self._refresh_mesh()
+
+    # -- the gallery plane -------------------------------------------------
+    def _make_gallery(self) -> GalleryStore:
+        """gallery="auto"/"sharded": ONE fleet-wide embedding plane,
+        partitioned over the data axis (camera-hash owner shards, blocks on
+        the owner's device).  gallery="local" keeps the replicated-baseline
+        semantics (a private host-side cache, as if each engine re-embedded
+        for itself) — what ``gallery_sweep`` compares against."""
+        if self.cfg.gallery in ("auto", "sharded"):
+            return ShardedGalleryStore(self.C, self.cfg.retention,
+                                       self._all_workers, self._device_of)
+        if self.cfg.gallery == "local":
+            return LocalGalleryStore(self.C, self.cfg.retention)
+        raise ValueError(f"unknown gallery mode {self.cfg.gallery!r} "
+                         f"(expected 'auto', 'local' or 'sharded')")
+
+    def gallery_report(self) -> dict:
+        rep = super().gallery_report()
+        if isinstance(self.gallery, ShardedGalleryStore):
+            rep["per_worker"] = self.gallery.per_worker_report()
+        return rep
 
     # -- fleet topology ----------------------------------------------------
     @property
@@ -102,22 +146,35 @@ class ShardedServingEngine(ServingEngine):
         self._sharded_fns = None
 
     def _load(self, worker: str) -> int:
-        return sum(1 for qid, w in self._placement.items()
-                   if w == worker and qid in self.queries
-                   and not self.queries[qid].done)
+        """Live (not-done) queries placed on ``worker`` — O(1), from the
+        maintained counters (equal to scanning the placement map, which the
+        load-accounting test pins)."""
+        return self._live_load.get(worker, 0)
 
     def _least_loaded(self) -> str:
         return min(self._workers, key=lambda w: (self._load(w),
                                                  self._shard_of[w]))
 
     def submit_query(self, qid: int, feat, cam: int, frame: int):
+        if qid in self._placement:     # resubmission: retire the old count
+            old = self._placement[qid]
+            q_old = self.queries.get(qid)
+            if q_old is not None and not q_old.done:
+                self._live_load[old] -= 1
         super().submit_query(qid, feat, cam, frame)
-        self._placement[qid] = self._least_loaded()
+        w = self._least_loaded()
+        self._placement[qid] = w
+        self._live_load[w] += 1
+
+    def _on_query_done(self, q: QueryState) -> None:
+        self._live_load[self._placement[q.qid]] -= 1
 
     def lose_worker(self, worker: str | int) -> list[int]:
-        """Elastic scale-down: drop one worker, shrink the data axis, and
+        """Elastic scale-down: drop one worker, shrink the data axis,
         re-scatter its orphaned queries over the survivors (least-loaded
-        first, round-robin via ``ElasticMesh.rebalance_streams``).  Returns
+        first, round-robin via ``ElasticMesh.rebalance_streams``) and
+        re-home its gallery shards (camera ownership + device-resident
+        blocks migrate; the shared cache survives the worker).  Returns
         the re-placed qids."""
         w = f"w{worker}" if isinstance(worker, int) else worker
         if w not in self._workers:
@@ -126,7 +183,10 @@ class ShardedServingEngine(ServingEngine):
             raise RuntimeError("cannot lose the last worker of the fleet")
         self._workers.remove(w)
         self._refresh_mesh()
+        if isinstance(self.gallery, ShardedGalleryStore):
+            self.gallery.rehome(w, list(self._workers))
         orphans = sorted(qid for qid, pw in self._placement.items() if pw == w)
+        self._live_load[w] = 0
         targets = sorted(self._workers,
                          key=lambda t: (self._load(t), self._shard_of[t]))
         for tw, group in zip(targets,
@@ -134,6 +194,9 @@ class ShardedServingEngine(ServingEngine):
                                                             len(targets))):
             for qid in group:
                 self._placement[qid] = tw
+                q = self.queries.get(qid)
+                if q is not None and not q.done:
+                    self._live_load[tw] += 1
         self.rebalances += 1
         return orphans
 
@@ -178,7 +241,7 @@ class ShardedServingEngine(ServingEngine):
         invalidated on every elastic re-mesh).  State rows shard over the
         data axis; model/windows/geo/gallery ride along replicated."""
         if self._sharded_fns is None:
-            mesh, policy = self.mesh, self.policy
+            mesh, policy, topk = self.mesh, self.policy, self.cfg.topk
             Pd, Pr = P("data"), P()
 
             def _admit(model, state, geo_adj):
@@ -187,7 +250,8 @@ class ShardedServingEngine(ServingEngine):
             def _rank_advance(windows, state, q_feat, mask, gal, gal_cam,
                               gal_frame):
                 return rank_advance_round(policy, windows, state, q_feat,
-                                          mask, gal, gal_cam, gal_frame)
+                                          mask, gal, gal_cam, gal_frame,
+                                          topk)
 
             def _advance(windows, state):
                 return advance_round(policy, windows, state)
@@ -198,7 +262,7 @@ class ShardedServingEngine(ServingEngine):
                                   check_vma=False)),
                 jax.jit(shard_map(_rank_advance, mesh=mesh,
                                   in_specs=(Pr, Pd, Pd, Pd, Pr, Pr, Pr),
-                                  out_specs=(Pd, Pd, Pd, Pd, Pd, Pd),
+                                  out_specs=(Pd,) * 8,
                                   check_vma=False)),
                 jax.jit(shard_map(_advance, mesh=mesh,
                                   in_specs=(Pr, Pd), out_specs=Pd,
@@ -219,12 +283,15 @@ class ShardedServingEngine(ServingEngine):
 
     # -- per-shard cost accounting ----------------------------------------
     def _account_round(self, qs: list[QueryState],
-                       cams_by_q: list[np.ndarray]) -> None:
-        """Per-worker view of the round: admitted camera-steps and the
-        shard-LOCAL deduplicated (cam, frame) demand.  The controller still
-        embeds the fleet-global dedup set once (``unique_frames``); the
-        per-shard numbers are each worker's inference demand if galleries
-        were not shared — the off-host-gallery follow-on closes that gap."""
+                       cams_by_q: list[np.ndarray],
+                       wanted: set[tuple[int, int]]) -> None:
+        """Per-worker view of the round, in BOTH cost conventions the
+        gallery plane distinguishes: ``unique_frames`` is the worker's
+        shard-LOCAL deduplicated (cam, frame) demand — what it would embed
+        if every worker kept a private replicated cache; ``owned_frames``
+        is the worker's slice of ``wanted``, the round's fleet-GLOBAL
+        dedup set (the frames whose camera it owns in the sharded
+        gallery), which tiles the engine's ``unique_frames`` exactly."""
         by_worker: dict[str, list[int]] = {}
         for i, q in enumerate(qs):
             by_worker.setdefault(self._placement[q.qid], []).append(i)
@@ -235,10 +302,18 @@ class ShardedServingEngine(ServingEngine):
             pairs = {(int(cam), qs[i].f_curr)
                      for i in idxs for cam in cams_by_q[i]}
             st["unique_frames"] += len(pairs)
+        if isinstance(self.gallery, ShardedGalleryStore):
+            for cam, _f in wanted:
+                owner = self.gallery.owner_of(cam)
+                self._shard_stats[owner]["owned_frames"] += 1
 
     def shard_report(self) -> list[dict]:
         """One row per worker (including lost ones, stats frozen): placement
-        load and both cost conventions, shard-local."""
+        load and the cost conventions — ``admitted_steps`` (tiles the engine
+        total), ``unique_frames`` (shard-local demand: what a replicated
+        per-worker cache would embed) and ``owned_frames`` (the worker's
+        slice of the fleet-global dedup set; sums to the engine's
+        ``unique_frames`` when the gallery is sharded)."""
         live = set(self._workers)
         return [dict(worker=w, alive=w in live,
                      queries=self._load(w) if w in live else 0,

@@ -1,0 +1,310 @@
+"""The gallery/embedding plane: one feature store behind the engines.
+
+The paper keeps "the last few minutes" of video hot (§5.3); its scaling
+companion (Jain et al., *Scaling Video Analytics Systems to Large Camera
+Deployments*) argues cross-camera workloads should SHARE inference state
+across workers instead of recomputing it per process.  This module is that
+shared state: the (camera, frame) -> embedding-block cache the serving
+engines consult before calling ``embed_fn``, extracted out of ``FrameStore``
+so one fleet can put a single gallery plane behind every engine.
+
+Two implementations of one ``GalleryStore`` contract:
+
+* ``LocalGalleryStore`` — host-resident per-camera dicts, exactly the
+  per-engine semantics ``FrameStore`` used to hard-code.  The single-process
+  engine's default, and the fleet's "replicated baseline" mode.
+* ``ShardedGalleryStore`` — the (camera, frame) key space partitioned over
+  the fleet's data axis: each camera hashes to one OWNER worker, and that
+  camera's embedding blocks live on the owner's device (``jax.device_put``),
+  row-padded to a power of two like the engines' round galleries so device
+  buffer shapes stay bounded.  Hit/miss/eviction counters are fleet-wide —
+  the whole fleet shares one gallery, so a frame embedded for a query on
+  shard 0 is cache-hot for a query on shard 3.
+
+Both share the base class's retention bookkeeping, which mirrors
+``FrameStore``: a per-camera monotonic key deque gives O(1) amortized
+retention-horizon eviction on ``put``; an out-of-order ``put`` stays correct
+(``get`` re-checks the horizon) but its eviction may be deferred until the
+deque head catches up to it.  ``FrameStore`` additionally calls ``drop`` for
+every frame key it evicts, so embeddings never outlive their frames.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import numpy as np
+
+
+def pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1) — the shared padding rule for jit
+    shapes and device-resident gallery blocks."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _cam_hash(cam: int) -> int:
+    """Stable camera hash (Knuth multiplicative) for owner-shard choice —
+    spreads consecutive camera ids instead of striping them."""
+    return ((cam + 1) * 2654435761) & 0xFFFFFFFF
+
+
+class GalleryStore:
+    """The embedding-plane contract both engines program to.
+
+    ``put(cam, t, emb) -> bool`` caches one (camera, frame) embedding block
+    (False = rejected: already behind the retention horizon), ``get`` returns
+    the cached block or None (miss / evicted), ``drop`` removes one key (the
+    frame-eviction driven path).  Subclasses implement the storage backend
+    (``_store`` / ``_fetch`` / ``_drop``); retention bookkeeping and the
+    hit/miss/eviction/put/rejected counters live here so every backend
+    behaves identically.
+    """
+
+    kind = "base"
+
+    def __init__(self, n_cams: int, retention: int):
+        self.n_cams = n_cams
+        self.retention = retention
+        self._keys: list[collections.deque] = [collections.deque()
+                                               for _ in range(n_cams)]
+        self._latest = np.full(n_cams, -1, np.int64)
+        self.hits = 0        # get() served from the store
+        self.misses = 0      # get() found nothing (uncached or evicted)
+        self.evictions = 0   # cached blocks dropped (horizon or frame-evict)
+        self.puts = 0        # blocks accepted
+        self.rejected = 0    # puts refused (behind the retention horizon)
+
+    # -- retention bookkeeping (FrameStore-identical) ----------------------
+    def _horizon(self, cam: int) -> int:
+        return int(self._latest[cam]) - self.retention
+
+    def _evict_horizon(self, cam: int) -> None:
+        horizon = self._horizon(cam)
+        keys = self._keys[cam]
+        while keys and keys[0] < horizon:
+            key = keys.popleft()
+            if self._drop(cam, key):
+                self.evictions += 1
+
+    # -- the contract ------------------------------------------------------
+    def put(self, cam: int, t: int, emb: Any) -> bool:
+        """Cache one embedding block; False when t is already behind the
+        retention horizon (the write would be dead on arrival)."""
+        if t > self._latest[cam]:
+            self._latest[cam] = t
+        if t < self._horizon(cam):
+            self.rejected += 1
+            return False
+        if not self._has(cam, t):
+            self._keys[cam].append(t)
+        self._store(cam, t, emb)
+        self.puts += 1
+        self._evict_horizon(cam)
+        return True
+
+    def get(self, cam: int, t: int) -> Any:
+        """Cached block for (cam, t), or None.  Re-checks the horizon so an
+        out-of-order put whose eviction is deferred never serves stale data."""
+        if t < self._horizon(cam):
+            self.misses += 1
+            return None
+        emb = self._fetch(cam, t)
+        if emb is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return emb
+
+    def drop(self, cam: int, t: int) -> bool:
+        """Remove one key (frame-eviction driven: ``FrameStore`` calls this
+        for every frame it evicts so embeddings never outlive frames).  The
+        deque entry stays; popping it later is a no-op."""
+        removed = self._drop(cam, t)
+        if removed:
+            self.evictions += 1
+        return removed
+
+    # -- backend hooks -----------------------------------------------------
+    def _store(self, cam: int, t: int, emb: Any) -> None:
+        raise NotImplementedError
+
+    def _fetch(self, cam: int, t: int) -> Any:
+        raise NotImplementedError
+
+    def _drop(self, cam: int, t: int) -> bool:
+        raise NotImplementedError
+
+    def _has(self, cam: int, t: int) -> bool:
+        raise NotImplementedError
+
+    # -- accounting --------------------------------------------------------
+    def cached_embeddings(self) -> int:
+        raise NotImplementedError
+
+    def memory_bytes(self) -> int:
+        raise NotImplementedError
+
+    def counters(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, puts=self.puts,
+                    rejected=self.rejected, cached=self.cached_embeddings(),
+                    bytes=self.memory_bytes())
+
+
+class LocalGalleryStore(GalleryStore):
+    """Host-resident per-camera dicts — today's per-engine semantics."""
+
+    kind = "local"
+
+    def __init__(self, n_cams: int, retention: int):
+        super().__init__(n_cams, retention)
+        self._emb: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
+
+    def _store(self, cam, t, emb):
+        self._emb[cam][t] = emb
+
+    def _fetch(self, cam, t):
+        return self._emb[cam].get(t)
+
+    def _drop(self, cam, t):
+        return self._emb[cam].pop(t, None) is not None
+
+    def _has(self, cam, t):
+        return t in self._emb[cam]
+
+    def cached_embeddings(self):
+        return sum(len(e) for e in self._emb)
+
+    def memory_bytes(self):
+        return sum(getattr(e, "nbytes", 0)
+                   for d in self._emb for e in d.values())
+
+
+class ShardedGalleryStore(GalleryStore):
+    """One fleet-wide gallery: camera-hash owner shards over the data axis.
+
+    Every camera maps to one owner worker (``_cam_hash(cam) % live``) and
+    that camera's blocks are ``jax.device_put`` onto the owner's device,
+    rows padded to a power of two (bounded device buffer shapes — the same
+    rule the engines use for round galleries).  ``rehome`` migrates a lost
+    worker's cameras (and their resident blocks) onto the survivors, the
+    gallery-plane counterpart of the fleet's orphan-query re-scatter;
+    surviving owners keep their cameras, so only the lost shard moves.
+
+    Blocks must be numpy arrays (the engines' (n, D) float32 embedding
+    batches); values round-trip the device bit-exactly, which is what keeps
+    the sharded-gallery fleet trace-identical to the single engine.
+    """
+
+    kind = "sharded"
+
+    def __init__(self, n_cams: int, retention: int, workers: list[str],
+                 device_of: dict[str, Any]):
+        super().__init__(n_cams, retention)
+        if not workers:
+            raise ValueError("sharded gallery needs at least one worker")
+        missing = [w for w in workers if w not in device_of]
+        if missing:
+            raise ValueError(f"workers {missing} have no device mapping")
+        self._device_of = dict(device_of)
+        self._owner = {cam: workers[_cam_hash(cam) % len(workers)]
+                       for cam in range(n_cams)}
+        # (cam, t) -> (device-resident padded block, valid row count)
+        self._blocks: dict[tuple[int, int], tuple[Any, int]] = {}
+        self.rehomed_blocks = 0
+
+    def owner_of(self, cam: int) -> str:
+        return self._owner[cam]
+
+    def _store(self, cam, t, emb):
+        import jax
+
+        emb = np.asarray(emb)
+        n = emb.shape[0]
+        rows = pow2(n)
+        if rows > n:
+            emb = np.concatenate(
+                [emb, np.zeros((rows - n,) + emb.shape[1:], emb.dtype)])
+        self._blocks[(cam, t)] = (
+            jax.device_put(emb, self._device_of[self._owner[cam]]), n)
+
+    def _fetch(self, cam, t):
+        blk = self._blocks.get((cam, t))
+        if blk is None:
+            return None
+        arr, n = blk
+        return np.asarray(arr)[:n]
+
+    def _drop(self, cam, t):
+        return self._blocks.pop((cam, t), None) is not None
+
+    def _has(self, cam, t):
+        return (cam, t) in self._blocks
+
+    def rehome(self, lost: str, survivors: list[str]) -> int:
+        """Re-home the lost worker's cameras onto the survivors (camera-hash
+        over the surviving list) and migrate their resident blocks.  Returns
+        the number of blocks moved."""
+        import jax
+
+        if not survivors:
+            raise RuntimeError("cannot re-home the gallery: no survivors")
+        remap = {cam: survivors[_cam_hash(cam) % len(survivors)]
+                 for cam, w in self._owner.items() if w == lost}
+        self._owner.update(remap)
+        moved = 0
+        for key, (arr, n) in list(self._blocks.items()):
+            if key[0] in remap:
+                self._blocks[key] = (
+                    jax.device_put(np.asarray(arr),
+                                   self._device_of[remap[key[0]]]), n)
+                moved += 1
+        self.rehomed_blocks += moved
+        return moved
+
+    def cached_embeddings(self):
+        return len(self._blocks)
+
+    def memory_bytes(self):
+        return sum(arr.nbytes for arr, _ in self._blocks.values())
+
+    def counters(self):
+        return dict(super().counters(), rehomed_blocks=self.rehomed_blocks)
+
+    def per_worker_report(self) -> dict[str, dict]:
+        """Owner-resident cache memory, per worker: cameras owned, resident
+        blocks/rows/bytes.  Lost workers report zeros after ``rehome``."""
+        rep = {w: dict(cameras=0, blocks=0, rows=0, bytes=0)
+               for w in self._device_of}
+        for w in self._owner.values():
+            rep[w]["cameras"] += 1
+        for (cam, _t), (arr, n) in self._blocks.items():
+            r = rep[self._owner[cam]]
+            r["blocks"] += 1
+            r["rows"] += n
+            r["bytes"] += arr.nbytes
+        return rep
+
+
+def assemble_round_gallery(batch_keys: list[tuple[int, int]],
+                           key_emb: dict[tuple[int, int], np.ndarray]):
+    """One round's deduplicated gallery, engine-ready: concatenate the
+    per-key embedding blocks IN ``batch_keys`` ORDER (the engines pass
+    camera-major sorted keys, which is what keeps the kernel's flat-argmin
+    tie-breaking bit-identical to the tracker), tag every row with its
+    (camera, frame), and pad rows to a power of two so jit shapes stay
+    bounded — padded rows carry cam/frame -1 and rank to (NEG_INF, -1)
+    inside the kernels.  Returns (gallery (Gp, D), gal_cam (Gp,),
+    gal_frame (Gp,))."""
+    counts = [len(key_emb[k]) for k in batch_keys]
+    gal = np.concatenate([key_emb[k] for k in batch_keys]).astype(np.float32)
+    gal_cam = np.repeat([k[0] for k in batch_keys], counts).astype(np.int32)
+    gal_frame = np.repeat([k[1] for k in batch_keys], counts).astype(np.int32)
+    G = gal.shape[0]
+    Gp = pow2(G)
+    if Gp > G:
+        gal = np.concatenate(
+            [gal, np.zeros((Gp - G, gal.shape[1]), np.float32)])
+        gal_cam = np.concatenate([gal_cam, np.full(Gp - G, -1, np.int32)])
+        gal_frame = np.concatenate([gal_frame, np.full(Gp - G, -1, np.int32)])
+    return gal, gal_cam, gal_frame

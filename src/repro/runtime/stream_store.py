@@ -6,12 +6,17 @@ store keeps a bounded window per camera; replay reads are range queries into
 it, and reads past the retention window raise (that replay would have to fall
 back to cold storage — surfaced to the caller as a miss).
 
-Alongside the raw frames the store keeps an *embedding cache*: the serving
-engine writes each (camera, frame) batch's backbone embeddings back via
-``put_emb`` after the first (live) pass, so a phase-2 replay re-read of a
-still-retained frame skips re-embedding entirely — the single largest
-avoidable cost in the replay path.  Embeddings are evicted together with
-their frames.
+The *embedding plane* is delegated: alongside the raw frames the store
+fronts a ``runtime.gallery.GalleryStore`` (injected; a per-engine
+``LocalGalleryStore`` by default, the fleet injects the shared
+``ShardedGalleryStore``).  The serving engine writes each (camera, frame)
+batch's backbone embeddings back via ``put_emb`` after the first (live)
+pass, so a phase-2 replay re-read of a still-retained frame skips
+re-embedding entirely — the single largest avoidable cost in the replay
+path.  ``put_emb`` returns whether the write was actually cached: a frame
+never appended (or already evicted) is refused, not silently dropped.
+Embeddings are evicted together with their frames (``gallery.drop`` on
+every frame eviction).
 
 Eviction is O(1) amortized: appended keys go on a per-camera monotonic
 deque, and each append pops only the keys that just crossed the retention
@@ -28,13 +33,17 @@ from typing import Any
 
 import numpy as np
 
+from repro.runtime.gallery import GalleryStore, LocalGalleryStore
+
 
 class FrameStore:
-    def __init__(self, n_cams: int, retention: int):
+    def __init__(self, n_cams: int, retention: int,
+                 gallery: GalleryStore | None = None):
         self.n_cams = n_cams
         self.retention = retention
+        self.gallery = gallery if gallery is not None \
+            else LocalGalleryStore(n_cams, retention)
         self._buf: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
-        self._emb: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
         self._keys: list[collections.deque] = [collections.deque()
                                                for _ in range(n_cams)]
         self._latest = np.full(n_cams, -1, np.int64)
@@ -44,11 +53,11 @@ class FrameStore:
 
     def _evict(self, cam: int) -> None:
         horizon = self._horizon(cam)
-        keys, buf, emb = self._keys[cam], self._buf[cam], self._emb[cam]
+        keys, buf = self._keys[cam], self._buf[cam]
         while keys and keys[0] < horizon:
             key = keys.popleft()
             buf.pop(key, None)
-            emb.pop(key, None)
+            self.gallery.drop(cam, key)   # embeddings never outlive frames
 
     def append(self, cam: int, t: int, frame: Any) -> None:
         if t not in self._buf[cam]:
@@ -69,20 +78,27 @@ class FrameStore:
         return [(t, self._buf[cam][t]) for t in range(max(t0, horizon), t1 + 1)
                 if t in self._buf[cam]]
 
-    # -- embedding cache ---------------------------------------------------
-    def put_emb(self, cam: int, t: int, emb: Any) -> None:
-        """Cache the backbone embeddings for a retained (cam, t) frame."""
-        if t >= self._horizon(cam) and t in self._buf[cam]:
-            self._emb[cam][t] = emb
+    # -- embedding plane (delegated to the gallery store) ------------------
+    def put_emb(self, cam: int, t: int, emb: Any) -> bool:
+        """Cache the backbone embeddings for a retained (cam, t) frame.
+        Returns False (write refused, NOT silently dropped) when the frame
+        was never appended or is already behind the retention horizon."""
+        if t < self._horizon(cam) or t not in self._buf[cam]:
+            self.gallery.rejected += 1   # refusals stay visible fleet-wide
+            return False
+        return self.gallery.put(cam, t, emb)
 
     def get_emb(self, cam: int, t: int) -> Any:
-        """Cached embeddings for (cam, t), or None (uncached / evicted)."""
+        """Cached embeddings for (cam, t), or None (uncached / evicted).
+        The frame horizon is re-checked here too: an out-of-order append
+        whose eviction is deferred never serves a stale embedding."""
         if t < self._horizon(cam):
+            self.gallery.misses += 1     # a lookup that found nothing
             return None
-        return self._emb[cam].get(t)
+        return self.gallery.get(cam, t)
 
     def memory_frames(self) -> int:
         return sum(len(b) for b in self._buf)
 
     def cached_embeddings(self) -> int:
-        return sum(len(e) for e in self._emb)
+        return self.gallery.cached_embeddings()

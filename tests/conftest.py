@@ -41,17 +41,24 @@ def make_serving_world(n_entities=100, horizon=360, seed=0, n_queries=4):
 
 
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
-                        lose_worker=0, extra_ticks=500):
+                        lose_worker=0, extra_ticks=500, gallery="auto",
+                        topk=1, embed_fn=None):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
-    the fleet rebalances; the single engine ignores it."""
+    the fleet rebalances; the single engine ignores it.  ``gallery`` picks
+    the embedding plane ("auto": local for one engine, fleet-shared sharded
+    store for the fleet)."""
     from repro import api as rexcam
 
     vis, gal, feats = world["vis"], world["gal"], world["feats"]
     q_vids = world["q_vids"]
-    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=policy,
-                       geo_adj=world["net"].geo_adjacent, shards=shards)
+    eng = rexcam.serve(world["model"],
+                       embed_fn=embed_fn if embed_fn is not None
+                       else lambda x: x,
+                       policy=policy,
+                       geo_adj=world["net"].geo_adjacent, shards=shards,
+                       gallery=gallery, topk=topk)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -81,28 +88,32 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
 
 def trace_key(trace):
     """Canonical per-round tuple stream: admissions (mask), the match
-    decision, tie-break (gallery row index) and raw kernel score."""
+    decision, tie-break (gallery row index), raw kernel score and the
+    top-k (value, cam, frame) candidate bands."""
     return [(r["qid"], r["f_curr"], r["phase"],
              tuple(bool(x) for x in r["mask"]), bool(r["matched"]),
-             int(r["match_cam"]), float(r["match_val"]), int(r["match_idx"]))
+             int(r["match_cam"]), float(r["match_val"]), int(r["match_idx"]),
+             tuple(r["topk"]))
             for r in trace]
 
 
 def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
-                                 lose_worker=0, single=None):
+                                 lose_worker=0, single=None, gallery="auto"):
     """THE differential assertion: the sharded fleet's rounds are
     bit-identical to the single-process engine's — admissions, match
     indices/values (tie-breaks included), rescue attribution, and both
     cost conventions.  Returns (fleet engine, single (trace, summary)) so
     callers can layer fleet-specific asserts on top; pass ``single`` (a
     prior return) to reuse the reference run across shard counts."""
+    from repro.runtime.gallery import ShardedGalleryStore
+
     if single is None:
         _, ref_trace, ref_sum = drive_serving_trace(world, policy)
         single = (ref_trace, ref_sum)
     ref_trace, ref_sum = single
     eng, fl_trace, fl_sum = drive_serving_trace(
         world, policy, shards=shards, lose_at=lose_at,
-        lose_worker=lose_worker)
+        lose_worker=lose_worker, gallery=gallery)
     assert trace_key(fl_trace) == trace_key(ref_trace), \
         f"fleet (shards={shards}) trace diverged from the single engine"
     assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
@@ -113,10 +124,13 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
                                   ref_sum["rescue_pairs"])
     assert fl_sum["per_query"] == ref_sum["per_query"]
     # per-shard accounting must tile the fleet totals (admitted) / at least
-    # cover them (unique frames are shard-local dedup, so >= the global)
+    # cover them (unique frames are shard-local dedup, so >= the global);
+    # owner attribution tiles the fleet-GLOBAL dedup set exactly
     rep = eng.shard_report()
     assert sum(r["admitted_steps"] for r in rep) == eng.admitted_steps
     assert sum(r["unique_frames"] for r in rep) >= eng.unique_frames
+    if isinstance(eng.gallery, ShardedGalleryStore):
+        assert sum(r["owned_frames"] for r in rep) == eng.unique_frames
     return eng, single
 
 
@@ -176,6 +190,199 @@ def fleet_case_worker_loss(shards=4, lose_worker=1, lose_at=50,
         "the lost worker never served a round — lose_at fired too early"
     live = {w for w, r in rep.items() if r["alive"]}
     assert set(eng._placement.values()) <= live, "orphans not re-scattered"
+    # the gallery plane re-homed alongside the query re-scatter: the lost
+    # worker owns no cameras anymore (fleet default gallery is sharded)
+    assert eng.gallery.kind == "sharded"
+    assert lost not in set(eng.gallery._owner.values())
+
+
+def _drive_counting(world, policy, *, shards=None, gallery="auto",
+                    extra_ticks=500):
+    """Like ``drive_serving_trace`` but every ingested (cam, t) frame batch
+    carries a tag column and ``embed_fn`` counts embed EVENTS per tag —
+    the instrument for "no (cam, frame) pair is ever embedded twice" and
+    "fleet-global embed calls == the single engine's".  Returns
+    (engine, trace, Counter{tag: embed events})."""
+    from repro import api as rexcam
+
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    q_vids = world["q_vids"]
+    H = vis.horizon + 1
+    embedded = collections.Counter()
+
+    def embed_fn(x):
+        for tag in sorted(set(x[:, -1].tolist())):
+            embedded[int(tag)] += 1
+        return x[:, :-1]
+
+    eng = rexcam.serve(world["model"], embed_fn=embed_fn, policy=policy,
+                       geo_adj=world["net"].geo_adjacent, shards=shards,
+                       gallery=gallery)
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    trace = []
+    for t in range(t0, vis.horizon + extra_ticks):
+        if t < vis.horizon:
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    crops = feats[vids]
+                    tag = np.full((len(crops), 1), c * H + t, np.float32)
+                    frames[c] = np.concatenate([crops, tag], 1)
+            eng.ingest(frames)
+        eng.tick(record_trace=trace)
+        if all(q.done for q in eng.queries.values()):
+            break
+    return eng, trace, embedded
+
+
+def fleet_case_gallery_modes(shards=4, n_queries=5, seed=0):
+    """The gallery-plane differential (the PR-4 tentpole contract): with the
+    fleet-shared ``ShardedGalleryStore`` AND with the replicated-baseline
+    ``LocalGalleryStore``, the fleet is trace-identical to the single
+    engine, no (cam, frame) pair ever reaches ``embed_fn`` twice fleet-wide,
+    and fleet-global embed calls EQUAL the single engine's (one embedding
+    plane — no per-shard re-embedding of the deduplicated demand)."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    single, s_trace, s_counter = _drive_counting(world, policy)
+    assert single.frames_processed > 0
+    assert s_counter and max(s_counter.values()) == 1, \
+        "single engine re-embedded a (cam, frame) pair"
+    for mode in ("sharded", "local"):
+        eng, f_trace, f_counter = _drive_counting(world, policy,
+                                                  shards=shards, gallery=mode)
+        assert eng.gallery.kind == mode
+        assert trace_key(f_trace) == trace_key(s_trace), \
+            f"gallery={mode} fleet trace diverged from the single engine"
+        assert max(f_counter.values()) == 1, \
+            f"gallery={mode} fleet re-embedded a (cam, frame) pair"
+        assert f_counter == s_counter, \
+            f"gallery={mode} fleet embed calls differ from the single engine"
+        assert eng.frames_processed == single.frames_processed
+        assert eng.unique_frames == single.unique_frames
+        assert eng.cache_hits == single.cache_hits
+        rep = eng.shard_report()
+        if mode == "sharded":
+            # owner attribution tiles the fleet-global dedup set exactly,
+            # and the resident blocks live where their camera's owner is
+            assert sum(r["owned_frames"] for r in rep) == eng.unique_frames
+            per_w = eng.gallery.per_worker_report()
+            assert sum(v["blocks"] for v in per_w.values()) == \
+                eng.store.cached_embeddings()
+            assert sum(v["cameras"] for v in per_w.values()) == eng.C
+        else:
+            assert all(r["owned_frames"] == 0 for r in rep)
+
+
+def fleet_case_gallery_rehome(shards=4, lose_worker=1, warmup=60,
+                              n_queries=6, seed=1):
+    """Worker loss re-homes the gallery plane: the lost worker's cameras
+    (and their device-resident blocks) migrate to survivors chosen by the
+    camera hash, block VALUES survive the move bit-exactly, and surviving
+    owners keep their cameras (only the lost shard moves)."""
+    from repro import api as rexcam
+
+    _require_devices(shards)
+    from repro.core.policy import SearchPolicy
+
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=world["net"].geo_adjacent, shards=shards)
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    for t in range(t0, t0 + warmup):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick()
+
+    store = eng.gallery
+    lost = f"w{lose_worker}"
+    pre_owner = dict(store._owner)
+    owned_keys = [k for k in store._blocks if store.owner_of(k[0]) == lost]
+    assert owned_keys, \
+        f"warmup never cached a block owned by {lost} — warmup too short?"
+    pre_vals = {k: store._fetch(*k).copy() for k in owned_keys}
+    rehomed_before = store.rehomed_blocks
+
+    eng.lose_worker(lose_worker)
+
+    assert store.rehomed_blocks - rehomed_before == len(owned_keys)
+    assert lost not in set(store._owner.values())
+    for cam, w in pre_owner.items():
+        if w != lost:       # survivors keep their cameras
+            assert store._owner[cam] == w
+    for k in owned_keys:
+        new_owner = store.owner_of(k[0])
+        assert new_owner in eng._workers
+        arr, _n = store._blocks[k]
+        assert {d for d in arr.devices()} == \
+            {eng._device_of[new_owner]}, f"block {k} not on its owner device"
+        np.testing.assert_array_equal(store._fetch(*k), pre_vals[k])
+
+
+def fleet_case_load_accounting(shards=4, n_queries=7, seed=2, lose_at=40,
+                               lose_worker=2):
+    """Satellite: ``_load`` is O(1) counter-backed and must equal the brute
+    placement-map scan at every tick — across submits, query completions
+    (both the device round and the host skip fast path) and a mid-run
+    worker loss rebalance."""
+    from repro import api as rexcam
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+
+    def brute(eng, worker):
+        return sum(1 for qid, w in eng._placement.items()
+                   if w == worker and qid in eng.queries
+                   and not eng.queries[qid].done)
+
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60, replay_skip=2)   # exercise _skip_round
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=world["net"].geo_adjacent, shards=shards)
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+        assert all(eng._load(w) == brute(eng, w) for w in eng._workers)
+    for step, t in enumerate(range(t0, vis.horizon + 500)):
+        if step == lose_at:
+            eng.lose_worker(lose_worker)
+        if t < vis.horizon:
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+        eng.tick()
+        assert all(eng._load(w) == brute(eng, w) for w in eng._workers), \
+            f"load counters diverged from the placement scan at step {step}"
+        if all(q.done for q in eng.queries.values()):
+            break
+    assert all(q.done for q in eng.queries.values())
+    assert all(eng._load(w) == 0 for w in eng._workers)
 
 
 def fleet_property_suite(max_examples=6):

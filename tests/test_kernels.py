@@ -151,10 +151,12 @@ def test_reid_rank_parity_property(Q, G, C, k, ties):
         np.testing.assert_allclose(msv, rmv, rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(msi, rmi)
 
-    matched, match_cam, match_emb, best_val, best_idx = (
+    (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
+     topk_frame) = (
         np.asarray(a) for a in rank_round(
         jnp.asarray(qf), jnp.asarray(q_frame), jnp.asarray(adm),
         jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), thresh))
+    best_val, best_idx = topk_val[:, 0], topk_idx[:, 0]
     # numpy mirror of the pre-device host ranking loop
     for i in range(Q):
         valid = adm[i, gal_cam] & (gal_frame == q_frame[i]) if G else \

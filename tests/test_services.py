@@ -180,7 +180,7 @@ def test_frame_store_embedding_cache_evicts_with_frames():
     fs = FrameStore(n_cams=1, retention=10)
     for t in range(5):
         fs.append(0, t, f"f{t}")
-    fs.put_emb(0, 3, "e3")
+    assert fs.put_emb(0, 3, "e3")            # retained: cached (True)
     assert fs.get_emb(0, 3) == "e3"
     assert fs.get_emb(0, 4) is None          # frame retained, never embedded
     assert fs.cached_embeddings() == 1
@@ -188,9 +188,9 @@ def test_frame_store_embedding_cache_evicts_with_frames():
         fs.append(0, t, f"f{t}")
     assert fs.get_emb(0, 3) is None          # evicted together with its frame
     assert fs.cached_embeddings() == 0
-    fs.put_emb(0, 2, "stale")                # past retention: refused
+    assert not fs.put_emb(0, 2, "stale")     # past retention: refused
     assert fs.get_emb(0, 2) is None
-    fs.put_emb(0, 25, "e25")                 # retained: accepted
+    assert fs.put_emb(0, 25, "e25")          # retained: accepted
     assert fs.get_emb(0, 25) == "e25"
 
 

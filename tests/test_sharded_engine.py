@@ -66,6 +66,26 @@ def test_fleet_random_streams_property():
     _fleet_case("fleet_property_suite", max_examples=6)
 
 
+def test_fleet_gallery_modes_differential():
+    """The gallery-plane contract: sharded AND replicated-local gallery
+    fleets are trace-identical to the single engine, and a counting
+    embed_fn shows fleet-global embed calls equal the single engine's —
+    no (cam, frame) pair ever embedded twice fleet-wide."""
+    _fleet_case("fleet_case_gallery_modes")
+
+
+def test_fleet_gallery_rehome_on_worker_loss():
+    """Worker loss migrates the lost worker's gallery shard (cameras +
+    device-resident blocks) onto survivors, bit-exactly."""
+    _fleet_case("fleet_case_gallery_rehome")
+
+
+def test_fleet_load_accounting_o1():
+    """Satellite: the O(1) per-worker live-load counters match the brute
+    placement scan at every tick, across completions and a rebalance."""
+    _fleet_case("fleet_case_load_accounting")
+
+
 # ---------------------------------------------------------------------------
 # fleet machinery that needs no fake-device mesh (tier-1, in-process)
 # ---------------------------------------------------------------------------
