@@ -14,6 +14,7 @@ ALL = {
     "serving_sweep": scenarios.serving_sweep,
     "serving_shard_sweep": scenarios.serving_shard_sweep,
     "gallery_sweep": scenarios.gallery_sweep,
+    "drift_sweep": scenarios.drift_sweep,
     "sec3_potential": tables.sec3_potential,
     "fig10_anoncampus": tables.fig10_anoncampus,
     "fig11_duke": tables.fig11_duke,

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docs link-check: every relative markdown link and every backticked
+repo path in the given docs must resolve to a real file.
+
+  python scripts/check_docs_links.py README.md ROADMAP.md docs/ARCHITECTURE.md
+
+Checked:
+  * ``[text](path)`` links — http(s)/mailto and pure #anchors are skipped;
+  * `` `path/to/file.py` `` / `` `path/file.md` `` code spans containing a
+    "/" — resolved against the doc's directory, the repo root, ``src/`` and
+    ``src/repro/`` (prose shorthand like `kernels/ref.py`), with trailing
+    ``::test_name`` suffixes stripped.
+
+Exits non-zero listing every dangling reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(r"`([\w.\-/]+/[\w.\-]+\.(?:py|md))(?:::[\w.\-]+)?`")
+
+
+def candidates(ref: str, doc_dir: Path):
+    yield doc_dir / ref
+    yield ROOT / ref
+    yield ROOT / "src" / ref
+    yield ROOT / "src" / "repro" / ref
+
+
+def check(doc: Path) -> list[str]:
+    text = doc.read_text()
+    doc_dir = doc.parent
+    bad = []
+    refs = []
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        refs.append(target)
+    refs += [m.group(1) for m in CODE_PATH.finditer(text)]
+    for ref in refs:
+        if not any(c.exists() for c in candidates(ref, doc_dir)):
+            bad.append(f"{doc.relative_to(ROOT)}: dangling reference {ref!r}")
+    return bad
+
+
+def main() -> int:
+    docs = [Path(a) if Path(a).is_absolute() else ROOT / a
+            for a in sys.argv[1:]] or [ROOT / "README.md"]
+    failures = []
+    for doc in docs:
+        if not doc.exists():
+            failures.append(f"doc not found: {doc}")
+            continue
+        failures += check(doc)
+    for f in failures:
+        print(f, file=sys.stderr)
+    if not failures:
+        print(f"docs link-check OK ({len(docs)} docs)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

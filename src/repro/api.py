@@ -12,7 +12,8 @@
 All three run the SAME admission/phase machinery from
 ``repro.core.policy`` — one ``SearchPolicy``, one ``admit``, one phase
 machine — so offline experiments, benchmarks and the live serving plane
-cannot drift apart.
+cannot drift apart.  (``docs/ARCHITECTURE.md`` maps every paper section to
+the module that implements it.)
 """
 from __future__ import annotations
 
@@ -27,23 +28,53 @@ from repro.core.tracker import (TrackResult, make_queries, track_queries,  # noq
                                 trace_queries)
 from repro.runtime.engine import EngineConfig, ServingEngine
 from repro.runtime.fleet import ShardedServingEngine
+from repro.runtime.recal import (RecalibrationController,  # noqa: F401
+                                 RecalibrationPolicy, visits_window_source)
 
 
 def profile(visits: Visits, *, time_limit: int | None = None,
             n_bins: int = 256, bin_width: int = 1,
-            sample_every: int = 1) -> SpatioTemporalModel:
+            sample_every: int = 1, epoch: int = 0) -> SpatioTemporalModel:
     """Offline profiling (paper §6): historical visits -> spatio-temporal
-    model M.  ``time_limit`` restricts profiling to the historical partition
-    (visits *starting* at or after it are excluded)."""
+    model M.
+
+    Keywords:
+      time_limit=    profile only visits *starting* before this step (the
+                     paper's §8.4 prefix-partition methodology); None
+                     profiles the whole table.
+      n_bins=        travel-time histogram bins per camera pair (CDF
+                     resolution; a model can only be hot-swapped for one
+                     with the SAME n_bins).
+      bin_width=     steps per histogram bin (coarser bins trade temporal
+                     precision for memory at city scale).
+      sample_every=  emulate frame-sampled MTMC labeling: keep only visits a
+                     multiple-of-k tick intersects and quantize their
+                     timestamps (§8.4's cheaper-profiling degradation).
+      epoch=         model version stamp (0 = offline profile; the
+                     recalibration loop bumps it on every hot-swap).
+    """
     return build_model(visits.ent, visits.cam, visits.t_in, visits.t_out,
                        visits.n_cams, n_bins=n_bins, bin_width=bin_width,
-                       sample_every=sample_every, time_limit=time_limit)
+                       sample_every=sample_every, time_limit=time_limit,
+                       epoch=epoch)
 
 
 def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
           q_vids, gt_vids, policy: SearchPolicy = SearchPolicy(),
           geo_adj=None) -> TrackResult:
-    """Batched Algorithm-1 tracking of all queries under one policy."""
+    """Batched Algorithm-1 tracking of all queries under one policy.
+
+    Positional: the profiled model M, the live ``Visits`` table, the dense
+    per-(camera, step) detection ``gallery`` (``build_gallery``), per-visit
+    re-id features, and the query/ground-truth visit ids
+    (``make_queries``).
+
+    Keywords:
+      policy=   the shared ``SearchPolicy`` (scheme, thresholds, replay
+                settings) — the same object the serving engine takes.
+      geo_adj=  (C, C) bool proximity mask for the geo baseline scheme;
+                None degrades geo to all-camera (the tracker's default).
+    """
     return track_queries(model, visits, gallery, feats, q_vids, gt_vids,
                          policy, geo_adj=geo_adj)
 
@@ -51,28 +82,63 @@ def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
 def serve(model: SpatioTemporalModel, embed_fn: Callable,
           policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
           retention: int = 600, geo_adj=None, shards: int | None = None,
-          devices=None, gallery: str = "auto",
-          topk: int = 1) -> ServingEngine:
+          devices=None, gallery: str = "auto", topk: int = 1,
+          recalibrate=None, visit_source=None) -> ServingEngine:
     """Live serving engine driving the same vectorized admission plane.
 
-    ``shards=None`` returns the single-process engine; ``shards=k`` (or an
-    explicit ``devices`` list) returns a ``ShardedServingEngine`` whose
-    query axis is shard_map-partitioned over k devices of the local mesh —
-    trace-identical to the single engine, pinned by the differential
-    harness in tests/test_sharded_engine.py.
-
-    ``gallery`` selects the embedding plane behind the engine(s):
-    ``"auto"`` (a per-engine ``LocalGalleryStore`` for the single engine,
-    the fleet-shared ``ShardedGalleryStore`` for the fleet), ``"local"``
-    (force the replicated-baseline host cache) or ``"sharded"`` (fleet
-    only: camera-hash owner shards over the data axis).
-
-    ``topk`` surfaces the k best (value, camera, frame) candidate bands per
-    query round in the trace records (§5.2 confidence bands); the argmax
-    match path is band 0 and is unchanged by k > 1."""
+    Keywords:
+      max_batch=     embedding micro-batch cap per round.
+      retention=     FrameStore ring-buffer horizon in steps (§5.3's "last
+                     few minutes"; replay past it surfaces replay_misses).
+      geo_adj=       (C, C) bool proximity mask for the geo baseline.
+      shards=        None -> the single-process engine; k -> a
+                     ``ShardedServingEngine`` whose query axis is
+                     shard_map-partitioned over k devices of the local mesh
+                     — trace-identical to the single engine, pinned by the
+                     differential harness in tests/test_sharded_engine.py.
+      devices=       explicit device list for the fleet (overrides shards'
+                     "first k of jax.devices()").
+      gallery=       the embedding plane behind the engine(s): "auto" (a
+                     per-engine ``LocalGalleryStore`` for the single engine,
+                     the fleet-shared ``ShardedGalleryStore`` for the
+                     fleet), "local" (force the replicated-baseline host
+                     cache) or "sharded" (fleet only: camera-hash owner
+                     shards over the data axis).
+      topk=          surface the k best (value, camera, frame) candidate
+                     bands per query round in trace records (§5.2
+                     confidence bands); the argmax match path is band 0 and
+                     is unchanged by k > 1.
+      recalibrate=   close the §6 drift loop: True (default trigger knobs)
+                     or a ``RecalibrationPolicy`` attaches a
+                     ``RecalibrationController`` that polls the engine's
+                     live rescue matrix and hot-swaps a re-profiled M
+                     (epoch-bumped, atomic between rounds — on the fleet,
+                     re-replicated onto every shard) when drift trips the
+                     hysteresis trigger.  None (default) serves the frozen
+                     model forever.
+      visit_source=  where recalibration re-profiles from: a callable
+                     ``(lo, hi) -> (ent, cam, t_in, t_out)`` over the
+                     recent window — ``visits_window_source(visits)`` wraps
+                     a ground-truth table (the "re-run the MTMC profiler"
+                     deployment recipe).  None falls back to the engine's
+                     own confirmed-sighting log (``match_log_source``).
+                     Only meaningful with recalibrate=.
+    """
     cfg = EngineConfig(policy=policy, max_batch=max_batch,
                        retention=retention, gallery=gallery, topk=topk)
     if shards is not None or devices is not None:
-        return ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
-                                    shards=shards, devices=devices)
-    return ServingEngine(model, embed_fn, cfg, geo_adj=geo_adj)
+        eng = ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
+                                   shards=shards, devices=devices)
+    else:
+        eng = ServingEngine(model, embed_fn, cfg, geo_adj=geo_adj)
+    if recalibrate is not None and recalibrate is not False:
+        rp = RecalibrationPolicy() if recalibrate is True else recalibrate
+        if not isinstance(rp, RecalibrationPolicy):
+            raise TypeError(f"recalibrate= takes True or a "
+                            f"RecalibrationPolicy, got {recalibrate!r}")
+        eng.recal = RecalibrationController(eng, visit_source, rp)
+    elif visit_source is not None:
+        raise ValueError("visit_source= given without recalibrate= — pass "
+                         "recalibrate=True (or a RecalibrationPolicy) to "
+                         "attach the recalibration loop")
+    return eng

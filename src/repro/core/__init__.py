@@ -10,6 +10,7 @@ from repro.core.profiler import build_model, transitions_from_visits  # noqa: F4
 from repro.core.simulate import (  # noqa: F401
     CameraNetwork, Visits, simulate_network, duke_like_network,
     anoncampus_like_network, porto_like_network, build_gallery,
+    permute_network, concat_visits,
 )
 from repro.core.tracker import TrackerParams, track_queries, TrackResult  # noqa: F401
 from repro.core.detect import DetectorParams, identity_detection  # noqa: F401

@@ -37,6 +37,11 @@ class SpatioTemporalModel:
     entry: jnp.ndarray      # (C,)    P*_c — first-appearance distribution (paper §5.4)
     counts: jnp.ndarray     # (C, C)  raw transition counts (for drift detection / tests)
     bin_width: int = dataclasses.field(metadata=dict(static=True), default=1)
+    # model version: 0 = the offline profile, +1 per recalibration hot-swap
+    # (runtime.recal).  A data field (not static) so an epoch bump never
+    # recompiles the jitted admission/ranking paths; trace records carry it
+    # so the differential harness can pin swap timing across the fleet.
+    epoch: int = 0
 
     @property
     def n_cams(self) -> int:

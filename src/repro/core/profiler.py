@@ -65,11 +65,14 @@ def transitions_from_visits(ent, cam, t_in, t_out):
 
 def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
                 bin_width: int = 1, sample_every: int = 1,
-                time_limit: int | None = None) -> SpatioTemporalModel:
+                time_limit: int | None = None,
+                epoch: int = 0) -> SpatioTemporalModel:
     """Profile a visit table into a SpatioTemporalModel.
 
     ``time_limit`` restricts profiling to visits starting before it (paper
-    §8.4 profiles on a prefix partition of the data).
+    §8.4 profiles on a prefix partition of the data).  ``epoch`` stamps the
+    model version (0 = the offline profile; ``runtime.recal`` bumps it on
+    every recalibration hot-swap).
     """
     ent, cam, t_in, t_out = map(np.asarray, (ent, cam, t_in, t_out))
     if time_limit is not None:
@@ -113,6 +116,7 @@ def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
         entry=jnp.asarray(entry, jnp.float32),
         counts=jnp.asarray(counts, jnp.float32),
         bin_width=bin_width,
+        epoch=epoch,
     )
 
 
@@ -136,6 +140,18 @@ def drift_score(model: SpatioTemporalModel, replay_rescues: np.ndarray,
     """Paper §6 drift detection: rescue events per (c_s, c_d) normalized by the
     profile's transition counts (additively smoothed so single rescues on
     near-empty pairs don't dominate).  A spike (>> typical) triggers
-    re-profiling of the corresponding camera pair."""
-    counts = np.asarray(model.counts) + smoothing
-    return np.asarray(replay_rescues, np.float64) / counts
+    re-profiling of the corresponding camera pair.
+
+    A fresh engine (no replays yet) has an all-zero rescue matrix: the score
+    is exactly zero everywhere, returned without touching the division (so an
+    unsmoothed call on a model with zero-count pairs never emits a
+    divide-by-zero warning)."""
+    rescues = np.asarray(replay_rescues, np.float64)
+    if not rescues.any():
+        return np.zeros_like(rescues)
+    counts = np.asarray(model.counts, np.float64) + smoothing
+    with np.errstate(divide="ignore", invalid="ignore"):
+        score = rescues / counts
+    # smoothing=0 on a never-profiled pair: a rescue there is infinite
+    # surprise — keep it finite but dominant instead of propagating inf/nan
+    return np.nan_to_num(score, nan=0.0, posinf=np.float64(1e18))

@@ -163,6 +163,41 @@ def porto_like_network(n_cams: int = 130, grid=(13, 10), seed: int = 3) -> Camer
                          dwell_mean=6.0, geo_adjacent=geo, fps=1)
 
 
+def permute_network(net: CameraNetwork, perm) -> CameraNetwork:
+    """Traffic-pattern shift (paper §6's drift risk): relabel the topology by
+    a camera permutation — camera i now behaves like camera ``perm[i]`` did
+    (transitions, travel times, entry mass, geo adjacency all follow).  A
+    derangement makes a model profiled on ``net`` wrong on essentially every
+    pair, which is the drift injection ``drift_sweep`` uses."""
+    perm = np.asarray(perm)
+    C = net.n_cams
+    assert sorted(perm.tolist()) == list(range(C)), perm
+    T = np.zeros_like(net.trans)
+    T[:, :C] = net.trans[np.ix_(perm, perm)]
+    T[:, C] = net.trans[perm, C]
+    return CameraNetwork(
+        f"{net.name}-perm", C, T,
+        net.travel_mean[np.ix_(perm, perm)],
+        net.travel_std[np.ix_(perm, perm)],
+        net.entry[perm], net.dwell_mean,
+        net.geo_adjacent[np.ix_(perm, perm)], net.fps)
+
+
+def concat_visits(a: Visits, b: Visits, t_offset: int) -> Visits:
+    """One continuous detection stream: ``b`` replayed starting ``t_offset``
+    steps into ``a``'s clock, entity ids relabeled disjoint.  The mid-run
+    traffic-pattern shift for drift experiments: a = the old world, b = the
+    shifted world from ``t_offset`` on."""
+    assert a.n_cams == b.n_cams
+    e_off = int(a.ent.max()) + 1 if len(a) else 0
+    return Visits(
+        np.concatenate([a.ent, b.ent + e_off]),
+        np.concatenate([a.cam, b.cam]),
+        np.concatenate([a.t_in, b.t_in + t_offset]),
+        np.concatenate([a.t_out, b.t_out + t_offset]),
+        max(a.horizon, t_offset + b.horizon), a.n_cams)
+
+
 def restrict_network(net: CameraNetwork, cams: np.ndarray) -> CameraNetwork:
     """Sub-network over a camera subset (paper Fig. 13 scaling study).
     Transitions to removed cameras become exits."""

@@ -15,6 +15,12 @@ a CPU host, fake the devices first:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
     PYTHONPATH=src python -m repro.launch.serve --queries 8 --shards 4
+
+``--recalibrate`` closes the paper's §6 drift loop: a
+``RecalibrationController`` watches the engine's live rescue matrix and
+hot-swaps a model re-profiled from the recent window when the drift score
+trips the trigger (knobs: ``--drift-threshold``, ``--recal-cooldown``,
+``--recal-window``); swap events and the final model epoch are printed.
 """
 from __future__ import annotations
 
@@ -46,6 +52,16 @@ def main():
                     help="surface the k best (value, cam, frame) candidate "
                          "bands per round in trace records (argmax path "
                          "unchanged)")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="close the §6 drift loop: watch the live rescue "
+                         "matrix and hot-swap a re-profiled model when the "
+                         "drift score trips the trigger")
+    ap.add_argument("--drift-threshold", type=float, default=0.1,
+                    help="recalibration trigger: max drift_score to trip at")
+    ap.add_argument("--recal-cooldown", type=int, default=240,
+                    help="min ticks between model swaps (hysteresis)")
+    ap.add_argument("--recal-window", type=int, default=1200,
+                    help="sliding re-profile window (recent steps)")
     args = ap.parse_args()
 
     net = duke_like_network()
@@ -57,9 +73,15 @@ def main():
 
     policy = rexcam.SearchPolicy(scheme=args.scheme, s_thresh=args.s_thresh,
                                  t_thresh=args.t_thresh)
+    recal = rexcam.RecalibrationPolicy(
+        drift_threshold=args.drift_threshold, cooldown=args.recal_cooldown,
+        window=args.recal_window) if args.recalibrate else None
     eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
                        geo_adj=net.geo_adjacent, shards=args.shards,
-                       gallery=args.gallery, topk=args.topk)
+                       gallery=args.gallery, topk=args.topk,
+                       recalibrate=recal,
+                       visit_source=rexcam.visits_window_source(vis)
+                       if args.recalibrate else None)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -103,6 +125,17 @@ def main():
           f"({g['bytes']} bytes), {g['hits']} hits / {g['misses']} misses, "
           f"{g['evictions']} evictions")
     print(f"wall: {wall:.2f}s ({args.steps/max(wall,1e-9):.0f} steps/s)")
+    if args.recalibrate:
+        ev = eng.recal.events
+        print(f"recalibration [epoch {eng.model_epoch}]: {len(ev)} swaps, "
+              f"{len(eng.recal.polls)} polls "
+              f"(threshold {args.drift_threshold}, "
+              f"cooldown {args.recal_cooldown}, window {args.recal_window})")
+        for e in ev:
+            print(f"  t={e['t']}: epoch {e['epoch']} "
+                  f"(score {e['score']:.2f}, {e['rescues']} rescues, "
+                  f"re-profiled {e['visits']} visits in "
+                  f"[{e['window'][0]}, {e['window'][1]}))")
     if args.shards is not None:
         # per-shard demand is shard-LOCAL dedup: a frame two shards both
         # want counts once per shard here but once in the engine totals;

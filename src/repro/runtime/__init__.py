@@ -4,3 +4,6 @@ from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,  # noqa: F40
                                    ShardedGalleryStore)
 from repro.runtime.stream_store import FrameStore  # noqa: F401
 from repro.runtime.cluster import HeartbeatMonitor, ElasticMesh  # noqa: F401
+from repro.runtime.recal import (RecalibrationController,  # noqa: F401
+                                 RecalibrationPolicy, match_log_source,
+                                 visits_window_source)

@@ -50,6 +50,7 @@ padded slots).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 from typing import Any, Callable
@@ -193,6 +194,8 @@ class ServingEngine:
         self.cfg = cfg
         self.policy = cfg.policy
         self.C = model.n_cams
+        self.model_epoch = int(model.epoch)  # host mirror for trace records
+        self.model_swaps: list[tuple[int, int]] = []  # (tick, new epoch)
         # the geo baseline's proximity mask; all-ones when not provided
         # (same default as the tracker)
         self._geo_adj = jnp.asarray(
@@ -215,11 +218,56 @@ class ServingEngine:
         # anchor camera at match time) — the tracker's rescue_pairs, live:
         # the §6 drift-detection signal profiler.drift_score consumes
         self.rescue_pairs = np.zeros((self.C, self.C), np.int64)
+        # (qid, cam, frame) confirmed-sighting log: the query's submit anchor
+        # plus every match — the engine's own trajectory record, which
+        # runtime.recal.match_log_source can re-profile from (§6).  A deque
+        # pruned each tick past the largest window anyone can replay into
+        # (frame retention, or the recal window when a controller is
+        # attached), so a long-running engine's memory stays bounded.
+        self.sightings: collections.deque[tuple[int, int, int]] = \
+            collections.deque()
+        self.recal = None            # attached RecalibrationController
+        self._in_round = False       # swap_model atomicity guard
         self._slots = np.zeros(0, np.int64)  # qs-index -> batch-row mapping
         self._windows = phase_windows(model, cfg.policy)
         # host copies of the exhaustion windows for the skip fast path
         self._w1 = np.asarray(self._windows.w_end1)
         self._w2 = np.asarray(self._windows.w_end2)
+
+    # -- the correlation model (the control plane's only persistent state) --
+    def swap_model(self, model: SpatioTemporalModel) -> int:
+        """Hot-swap the spatio-temporal model M without dropping in-flight
+        queries (§6 recalibration): the next round admits/ranks under the new
+        model while every query keeps its anchor, cursor and phase.  The
+        phase-exhaustion windows (device + host skip-path copies) are rebuilt
+        so both step paths switch together, and the model epoch bumps — trace
+        records carry it, which is how the differential harness pins the
+        fleet's swap to the same round as the single engine's.
+
+        M's arrays must keep their shapes ((C, C[, NB])), so the jitted step
+        bodies never recompile on a swap; swaps land BETWEEN rounds (calling
+        mid-round raises — the atomicity contract the fleet relies on, since
+        one round's admit and rank must see the same M on every shard).
+        Returns the new epoch."""
+        if self._in_round:
+            raise RuntimeError(
+                "swap_model called mid-round: the model must stay constant "
+                "within a round (admit and rank see one M) — swap between "
+                "ticks, e.g. from RecalibrationController.on_tick")
+        if model.n_cams != self.C or model.n_bins != self.model.n_bins:
+            raise ValueError(
+                f"swap_model shape mismatch: engine serves C={self.C}, "
+                f"NB={self.model.n_bins}; got C={model.n_cams}, "
+                f"NB={model.n_bins} (re-profile with the same n_bins)")
+        self.model_epoch += 1
+        if int(model.epoch) != self.model_epoch:
+            model = dataclasses.replace(model, epoch=self.model_epoch)
+        self.model = model
+        self._windows = phase_windows(model, self.cfg.policy)
+        self._w1 = np.asarray(self._windows.w_end1)
+        self._w2 = np.asarray(self._windows.w_end2)
+        self.model_swaps.append((self.t, self.model_epoch))
+        return self.model_epoch
 
     # -- the gallery plane -------------------------------------------------
     def _make_gallery(self) -> GalleryStore:
@@ -244,6 +292,7 @@ class ServingEngine:
         self.queries[qid] = QueryState(
             qid, feat / max(np.linalg.norm(feat), 1e-9), cam, frame,
             f_curr=frame + 1)
+        self.sightings.append((qid, cam, frame))
 
     def _on_query_done(self, q: QueryState) -> None:
         """Fired exactly once per query, on its not-done -> done transition
@@ -307,6 +356,8 @@ class ServingEngine:
                     q.rescued += 1
                     self.rescue_pairs[q.c_q, int(match_cam[j])] += 1
                 q.matches.append((int(match_cam[j]), int(q.f_curr)))
+                self.sightings.append((q.qid, int(match_cam[j]),
+                                       int(q.f_curr)))
             q.f_q, q.c_q = int(f_q[j]), int(c_q[j])
             q.f_curr, q.phase = int(f_curr[j]), int(phase[j])
             q.done = bool(done[j])
@@ -383,10 +434,32 @@ class ServingEngine:
             self._round(qs, stats, record_trace)
         self.t += 1
         self.ticks += 1
+        # drift-aware recalibration (§6): the attached controller polls the
+        # live rescue matrix and may hot-swap M — strictly between rounds,
+        # so the swap is atomic across the whole fleet's next round
+        if self.recal is not None:
+            self.recal.on_tick()
+        # bound the sighting log: drop entries no recalibration window can
+        # still reach (sightings arrive near-sorted by frame — submit
+        # anchors and replay matches lag at most a window behind — so
+        # stopping at the first young head is amortized O(1) per tick)
+        keep = max(self.cfg.retention,
+                   self.recal.policy.window if self.recal is not None else 0)
+        cutoff = self.t - 2 * keep
+        while self.sightings and self.sightings[0][2] < cutoff:
+            self.sightings.popleft()
         return stats
 
     def _round(self, qs: list[QueryState], stats: dict,
                trace: list | None) -> None:
+        self._in_round = True
+        try:
+            self._round_body(qs, stats, trace)
+        finally:
+            self._in_round = False
+
+    def _round_body(self, qs: list[QueryState], stats: dict,
+                    trace: list | None) -> None:
         stats["content_steps"] += len(qs)
         self.content_steps += len(qs)
         replaying = sum(q.f_curr < self.t for q in qs)
@@ -523,6 +596,7 @@ class ServingEngine:
                 j = sl[i]
                 records[q.qid] = dict(
                     qid=q.qid, f_curr=q.f_curr, phase=q.phase,
+                    epoch=self.model_epoch,
                     mask=mask[j].copy(), matched=bool(matched[j]),
                     match_cam=int(match_cam[j]),
                     match_val=float(topk_val[j, 0]),
@@ -547,7 +621,7 @@ class ServingEngine:
             empty_topk = ((float(NEG_INF), -1, -1),) * self.cfg.topk
             for q in qs:
                 records[q.qid] = dict(qid=q.qid, f_curr=q.f_curr,
-                                      phase=q.phase,
+                                      phase=q.phase, epoch=self.model_epoch,
                                       mask=np.zeros(self.C, bool),
                                       matched=False, match_cam=0,
                                       match_val=float(NEG_INF), match_idx=-1,

@@ -46,7 +46,7 @@ from typing import Iterable
 
 import jax
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.policy import admit
 from repro.parallel.compat import shard_map
@@ -137,13 +137,36 @@ class ShardedServingEngine(ServingEngine):
         """(Re)build the mesh over the surviving workers: the data axis
         shrinks to the live count (``ElasticMesh.grid_for``), and the cached
         shard_map callables are invalidated so the next round lowers onto
-        the new grid."""
+        the new grid.  The replicated control-plane state (M + the phase
+        windows) is re-committed to the new mesh so a fleet that already
+        hot-swapped its model never dispatches arrays committed to a dead
+        device."""
         if not self._workers:
             raise RuntimeError("serving fleet has no surviving workers")
         self.mesh = self.cluster.make_mesh(
             [self._device_of[w] for w in self._workers])
         self._shard_of = {w: i for i, w in enumerate(self._workers)}
         self._sharded_fns = None
+        self._replicate_control_plane()
+
+    def _replicate_control_plane(self) -> None:
+        """Commit M and the phase windows replicated onto every shard of the
+        CURRENT mesh — one transfer at swap/re-mesh time instead of an
+        implicit broadcast on every dispatch."""
+        rep = NamedSharding(self.mesh, P())
+        self.model = jax.device_put(self.model, rep)
+        self._windows = jax.device_put(self._windows, rep)
+
+    def swap_model(self, model) -> int:
+        """Fleet hot-swap: the base swap (atomic between rounds — the
+        mid-round guard is what makes 'every shard sees one M per round'
+        hold), then the new M/windows are re-replicated onto every live
+        shard of the mesh in one device_put.  The shard_map callables are
+        untouched: M rides in as a replicated ARGUMENT, so a swap never
+        recompiles or re-lowers the step bodies."""
+        epoch = super().swap_model(model)
+        self._replicate_control_plane()
+        return epoch
 
     def _load(self, worker: str) -> int:
         """Live (not-done) queries placed on ``worker`` — O(1), from the

@@ -1,0 +1,190 @@
+"""Drift-aware recalibration: the online re-profiling loop (paper §6).
+
+The paper names model drift as the key deployment risk: the offline-profiled
+spatio-temporal model M goes stale as traffic patterns shift, and ReXCam's
+answer is to watch the replay-rescue rate and re-profile.  The serving plane
+already computes the signal — the engine attributes every phase-2 rescue to
+its (anchor camera, match camera) pair in a live ``rescue_pairs`` (C, C)
+matrix, and ``profiler.drift_score`` normalizes it by the profile's own
+transition counts.  This module closes the loop:
+
+  ``RecalibrationController``  polls the score every ``poll_every`` ticks,
+      and when it trips the trigger — score above ``drift_threshold`` AND at
+      least ``min_rescues`` observed (small-sample guard) AND ``cooldown``
+      ticks since the last swap (hysteresis: a borderline score oscillating
+      around the threshold must not thrash re-profiles) — re-profiles a
+      fresh M from a sliding ``window`` of recent trajectories and hot-swaps
+      it into the engine via ``engine.swap_model``.
+
+  The swap is epoch-versioned and atomic between rounds: in-flight queries
+  keep their anchors/cursors/phases and simply admit under the new M from
+  the next round on.  On the sharded fleet the same controller drives
+  ``ShardedServingEngine.swap_model``, which re-replicates M onto every
+  shard of the mesh — single-controller, so "atomically on every shard"
+  falls out of swapping strictly between ticks.  Trace records carry the
+  model epoch, so the fleet-vs-single differential harness pins the swap to
+  the same round on both planes.
+
+Trajectory sources — re-profiling needs a visit table for the recent
+window, and two are natural:
+
+  ``visits_window_source(visits)``  the deployment recipe: re-run the MTMC
+      profiling pass over the last ``window`` steps of video (here: slice
+      the simulator's ground-truth visit table).  What ``drift_sweep`` and
+      ``launch/serve.py --recalibrate`` use.
+
+  ``match_log_source(engine)``  fully self-contained: rebuild trajectories
+      from the engine's OWN confirmed sightings (submit anchors + matches,
+      entity = query id).  Sparser — it only sees tracked identities — but
+      it is exactly the §6 story: the relaxed replay phase is what discovers
+      transitions the stale model prunes, so the rescues that trip the
+      trigger also teach the new model the drifted pairs.  The default when
+      no source is given.
+
+After a swap the rescue matrix is reset (``reset_rescues``): the old
+rescues were evidence against the OLD model, and carrying them over would
+re-trigger immediately against the new one — the second half of the
+hysteresis besides the cooldown.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.profiler import build_model, drift_score
+from repro.core.simulate import Visits
+
+# (ent, cam, t_in, t_out) arrays for a time window — what build_model eats
+VisitSource = Callable[[int, int], tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecalibrationPolicy:
+    """Trigger knobs for the §6 re-profiling loop.  All times are engine
+    ticks (= simulation steps)."""
+
+    # Trip when drift_score.max() reaches this.  Scale intuition: one rescue
+    # on a pair the profile never saw scores 1/smoothing (~0.33); k rescues
+    # on a pair with n historical transitions score k/(n+smoothing) — dense
+    # profiles keep scores small, so 0.1 means "a sustained spike on a pair
+    # the profile considered cold", not "10% of traffic moved".
+    drift_threshold: float = 0.1
+    min_rescues: int = 16          # total rescues before the score is trusted
+    cooldown: int = 240            # min ticks between swaps (hysteresis)
+    poll_every: int = 20           # score polling cadence
+    window: int = 1200             # sliding re-profile window (recent steps)
+    smoothing: float = 3.0         # drift_score additive smoothing
+    reset_rescues: bool = True     # zero the rescue matrix after a swap
+
+
+def visits_window_source(visits: Visits) -> VisitSource:
+    """Adapt a ground-truth ``Visits`` table into a sliding-window source:
+    ``source(lo, hi)`` returns the visits active inside [lo, hi) — the
+    deployment's "re-run the MTMC profiling tracker on the recent video"
+    step, which the simulators stand in for."""
+    ent = np.asarray(visits.ent)
+    cam = np.asarray(visits.cam)
+    t_in = np.asarray(visits.t_in)
+    t_out = np.asarray(visits.t_out)
+
+    def source(lo: int, hi: int):
+        keep = (t_out >= lo) & (t_in < hi)
+        return ent[keep], cam[keep], t_in[keep], t_out[keep]
+
+    return source
+
+
+def match_log_source(engine) -> VisitSource:
+    """Rebuild trajectories from the engine's own confirmed sightings
+    (``engine.sightings``: submit anchors + every match, entity = qid).
+    Each sighting becomes a zero-dwell visit, so consecutive sightings of
+    one query yield exactly the (c_s -> c_d, dt) transitions the profiler
+    histograms."""
+
+    def source(lo: int, hi: int):
+        rows = [(q, c, f) for (q, c, f) in engine.sightings if lo <= f < hi]
+        if not rows:
+            z = np.zeros(0, np.int64)
+            return z, z, z, z
+        ent, cam, f = map(np.asarray, zip(*rows))
+        return ent, cam, f, f
+
+    return source
+
+
+class RecalibrationController:
+    """Watches one engine's live drift signal and hot-swaps its model.
+
+    Attach via ``repro.api.serve(recalibrate=...)`` (the engine then calls
+    ``on_tick`` after every tick) or drive ``on_tick``/``maybe_recalibrate``
+    yourself.  ``clock`` defaults to the engine's wall tick ``engine.t``;
+    tests inject a fake clock to pin the hysteresis."""
+
+    def __init__(self, engine, visit_source: VisitSource | None = None,
+                 policy: RecalibrationPolicy = RecalibrationPolicy(),
+                 clock: Callable[[], int] | None = None):
+        self.engine = engine
+        self.visit_source = visit_source if visit_source is not None \
+            else match_log_source(engine)
+        self.policy = policy
+        self.clock = clock if clock is not None else (lambda: engine.t)
+        self.events: list[dict] = []   # one dict per completed swap (rare)
+        # recent score history — bounded, a long-running engine polls forever
+        self.polls: collections.deque[dict] = collections.deque(maxlen=512)
+        self._last_poll: int | None = None
+        self._last_swap: int | None = None
+
+    # -- the drift signal --------------------------------------------------
+    def score(self) -> np.ndarray:
+        """(C, C) drift score of the engine's live rescue matrix against its
+        CURRENT model (normalized rescue spikes, see profiler.drift_score)."""
+        return drift_score(self.engine.model, self.engine.rescue_pairs,
+                           self.policy.smoothing)
+
+    # -- the trigger -------------------------------------------------------
+    def on_tick(self) -> dict | None:
+        """Per-tick hook: polls every ``poll_every`` ticks; returns the swap
+        event when a recalibration fired, else None."""
+        t = int(self.clock())
+        if self._last_poll is not None and \
+                t - self._last_poll < self.policy.poll_every:
+            return None
+        self._last_poll = t
+        return self.maybe_recalibrate(t)
+
+    def maybe_recalibrate(self, t: int | None = None) -> dict | None:
+        """One trigger evaluation (hysteresis included) at time ``t``."""
+        p = self.policy
+        t = int(self.clock()) if t is None else t
+        rescues = int(np.asarray(self.engine.rescue_pairs).sum())
+        score = float(self.score().max())
+        self.polls.append(dict(t=t, score=score, rescues=rescues))
+        if rescues < p.min_rescues:            # small-sample guard
+            return None
+        if score < p.drift_threshold:          # no drift evidence
+            return None
+        if self._last_swap is not None and t - self._last_swap < p.cooldown:
+            return None                        # cooling down: no thrash
+        return self._recalibrate(t, score, rescues)
+
+    # -- the re-profile + hot-swap ----------------------------------------
+    def _recalibrate(self, t: int, score: float, rescues: int) -> dict | None:
+        p = self.policy
+        lo, hi = max(t - p.window, 0), t
+        ent, cam, t_in, t_out = self.visit_source(lo, hi)
+        if len(ent) == 0:
+            return None                        # nothing to profile from
+        old = self.engine.model
+        fresh = build_model(ent, cam, t_in, t_out, self.engine.C,
+                            n_bins=old.n_bins, bin_width=old.bin_width)
+        epoch = self.engine.swap_model(fresh)
+        if p.reset_rescues:
+            self.engine.rescue_pairs[:] = 0
+        self._last_swap = t
+        event = dict(t=t, epoch=epoch, score=score, rescues=rescues,
+                     window=(lo, hi), visits=int(len(ent)))
+        self.events.append(event)
+        return event

@@ -40,15 +40,46 @@ def make_serving_world(n_entities=100, horizon=360, seed=0, n_queries=4):
                 q_vids=q_vids, gt_vids=gt_vids)
 
 
+def make_drifted_world(n_entities=80, t_shift=150, horizon=420, seed=0,
+                       n_queries=6):
+    """Serving world whose live stream SHIFTS topology mid-run (a camera
+    permutation at ``t_shift``) while the profile model stays frozen on the
+    pre-shift world — the §6 drift injection the recalibration differential
+    runs on.  Queries are drawn from the post-shift traffic."""
+    from repro.core import (build_gallery, build_model, concat_visits,
+                            duke_like_network, permute_network,
+                            simulate_network)
+    from repro.core.features import FeatureParams, make_features
+    from repro.core.tracker import make_queries
+
+    net = duke_like_network()
+    shifted = permute_network(net, np.roll(np.arange(net.n_cams), 3))
+    hist = simulate_network(net, 400, 900, seed=seed + 50)
+    model = build_model(hist.ent, hist.cam, hist.t_in, hist.t_out, net.n_cams)
+    vis_a = simulate_network(net, n_entities // 2, t_shift, seed=seed + 51)
+    vis_b = simulate_network(shifted, n_entities, horizon - t_shift,
+                             seed=seed + 52)
+    vis = concat_visits(vis_a, vis_b, t_shift)
+    gal, _ = build_gallery(vis, 16)
+    feats, _ = make_features(vis, int(vis.ent.max()) + 1,
+                             FeatureParams(seed=seed + 52))
+    q_b, gt_b = make_queries(vis_b, n_queries, seed=seed + 53)
+    q_vids = q_b + len(vis_a)
+    gt_vids = np.where(gt_b >= 0, gt_b + len(vis_a), gt_b)
+    return dict(net=net, vis=vis, gal=gal, model=model, feats=feats,
+                q_vids=q_vids, gt_vids=gt_vids, t_shift=t_shift)
+
+
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                         lose_worker=0, extra_ticks=500, gallery="auto",
-                        topk=1, embed_fn=None):
+                        topk=1, embed_fn=None, recalibrate=None):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
     the fleet rebalances; the single engine ignores it.  ``gallery`` picks
     the embedding plane ("auto": local for one engine, fleet-shared sharded
-    store for the fleet)."""
+    store for the fleet).  ``recalibrate`` (a RecalibrationPolicy) attaches
+    the §6 drift loop, re-profiling from the world's ground-truth visits."""
     from repro import api as rexcam
 
     vis, gal, feats = world["vis"], world["gal"], world["feats"]
@@ -58,7 +89,9 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                        else lambda x: x,
                        policy=policy,
                        geo_adj=world["net"].geo_adjacent, shards=shards,
-                       gallery=gallery, topk=topk)
+                       gallery=gallery, topk=topk, recalibrate=recalibrate,
+                       visit_source=rexcam.visits_window_source(vis)
+                       if recalibrate is not None else None)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
@@ -81,6 +114,7 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
         admitted_steps=eng.admitted_steps, unique_frames=eng.unique_frames,
         content_steps=eng.content_steps, replay_steps=eng.replay_steps,
         rescue_pairs=eng.rescue_pairs.copy(),
+        model_epoch=eng.model_epoch, model_swaps=list(eng.model_swaps),
         per_query=[(q.matches, q.rescued, q.done, q.phase, q.f_curr)
                    for q in eng.queries.values()])
     return eng, trace, summary
@@ -88,9 +122,10 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
 
 def trace_key(trace):
     """Canonical per-round tuple stream: admissions (mask), the match
-    decision, tie-break (gallery row index), raw kernel score and the
-    top-k (value, cam, frame) candidate bands."""
-    return [(r["qid"], r["f_curr"], r["phase"],
+    decision, tie-break (gallery row index), raw kernel score, the
+    top-k (value, cam, frame) candidate bands and the model epoch the
+    round ran under (recalibration swap boundaries)."""
+    return [(r["qid"], r["f_curr"], r["phase"], r["epoch"],
              tuple(bool(x) for x in r["mask"]), bool(r["matched"]),
              int(r["match_cam"]), float(r["match_val"]), int(r["match_idx"]),
              tuple(r["topk"]))
@@ -98,22 +133,25 @@ def trace_key(trace):
 
 
 def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
-                                 lose_worker=0, single=None, gallery="auto"):
+                                 lose_worker=0, single=None, gallery="auto",
+                                 recalibrate=None):
     """THE differential assertion: the sharded fleet's rounds are
     bit-identical to the single-process engine's — admissions, match
-    indices/values (tie-breaks included), rescue attribution, and both
+    indices/values (tie-breaks included), rescue attribution, model-epoch
+    boundaries (recalibration swaps land on the same round), and both
     cost conventions.  Returns (fleet engine, single (trace, summary)) so
     callers can layer fleet-specific asserts on top; pass ``single`` (a
     prior return) to reuse the reference run across shard counts."""
     from repro.runtime.gallery import ShardedGalleryStore
 
     if single is None:
-        _, ref_trace, ref_sum = drive_serving_trace(world, policy)
+        _, ref_trace, ref_sum = drive_serving_trace(world, policy,
+                                                    recalibrate=recalibrate)
         single = (ref_trace, ref_sum)
     ref_trace, ref_sum = single
     eng, fl_trace, fl_sum = drive_serving_trace(
         world, policy, shards=shards, lose_at=lose_at,
-        lose_worker=lose_worker, gallery=gallery)
+        lose_worker=lose_worker, gallery=gallery, recalibrate=recalibrate)
     assert trace_key(fl_trace) == trace_key(ref_trace), \
         f"fleet (shards={shards}) trace diverged from the single engine"
     assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
@@ -122,6 +160,9 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
     assert fl_sum["replay_steps"] == ref_sum["replay_steps"]
     np.testing.assert_array_equal(fl_sum["rescue_pairs"],
                                   ref_sum["rescue_pairs"])
+    assert fl_sum["model_epoch"] == ref_sum["model_epoch"]
+    assert fl_sum["model_swaps"] == ref_sum["model_swaps"], \
+        "recalibration swaps did not land on the same ticks fleet-wide"
     assert fl_sum["per_query"] == ref_sum["per_query"]
     # per-shard accounting must tile the fleet totals (admitted) / at least
     # cover them (unique frames are shard-local dedup, so >= the global);
@@ -194,6 +235,45 @@ def fleet_case_worker_loss(shards=4, lose_worker=1, lose_at=50,
     # worker owns no cameras anymore (fleet default gallery is sharded)
     assert eng.gallery.kind == "sharded"
     assert lost not in set(eng.gallery._owner.values())
+
+
+def fleet_case_recalibration(shard_counts=(2, 4, 8), n_queries=8, seed=0):
+    """Differential case for the §6 recalibration loop: on a mid-run
+    topology shift, the controller re-profiles and hot-swaps M — and the
+    fleet stays bit-identical to the single engine INCLUDING the model-epoch
+    boundaries in every trace record (the swap lands on the same round on
+    every shard).  The single run must actually swap (epoch > 0), both
+    pre- and post-swap rounds must appear in the trace, and the hot-swap
+    must never drop an in-flight query."""
+    from repro.core.policy import SearchPolicy
+    from repro.runtime.recal import RecalibrationPolicy
+
+    _require_devices(max(shard_counts))
+    # exit_t must outlast duke travel times (~44 +- 10 plus dwell) or phase-2
+    # replay expires before the entity reappears and no rescues ever accrue
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=120)
+    # test-world trigger: tiny fleet -> few rescues, so trip early and often
+    # enough that at least one swap lands mid-trace
+    recal = RecalibrationPolicy(drift_threshold=.02, min_rescues=2,
+                                cooldown=60, poll_every=10, window=200)
+    world = make_drifted_world(seed=seed, n_queries=n_queries, horizon=500)
+    _, ref_trace, ref_sum = drive_serving_trace(world, policy,
+                                                recalibrate=recal)
+    single = (ref_trace, ref_sum)
+    assert ref_sum["model_epoch"] >= 1, \
+        "drifted world never tripped the recalibration trigger"
+    epochs = {r["epoch"] for r in ref_trace}
+    assert len(epochs) >= 2, "no pre/post-swap rounds both present in trace"
+    live_at_swap = ref_sum["model_swaps"][0][0]
+    n_alive = sum(1 for (_m, _r, done, _p, f) in ref_sum["per_query"]
+                  if f > live_at_swap)
+    assert n_alive > 0, "swap landed after every query finished"
+    for shards in shard_counts:
+        eng, single = assert_fleet_trace_identical(
+            world, policy, shards, single=single, recalibrate=recal)
+        assert eng.model_epoch == ref_sum["model_epoch"]
+        assert int(eng.model.epoch) == eng.model_epoch
 
 
 def _drive_counting(world, policy, *, shards=None, gallery="auto",

@@ -118,6 +118,40 @@ def test_profiling_cost_scales_with_sampling(duke_sim):
     assert full == pytest.approx(2 * half, rel=0.01)
 
 
+def test_drift_score_all_zero_rescues_is_zero_no_warning():
+    """Regression: a fresh engine (no replays yet) hands drift_score an
+    all-zero rescue matrix — the score must be exactly 0.0 everywhere with
+    no divide-by-zero warning, even unsmoothed on a model whose count
+    matrix has zero-count pairs."""
+    import warnings
+    from repro.core.profiler import drift_score
+
+    ent = np.array([0, 0])
+    cam = np.array([0, 1])
+    m = build_model(ent, cam, np.array([0, 20]), np.array([5, 25]), 3)
+    assert float(np.asarray(m.counts).min()) == 0.0   # zero-count pairs exist
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for smoothing in (3.0, 0.0):
+            s = drift_score(m, np.zeros((3, 3)), smoothing=smoothing)
+            assert s.shape == (3, 3) and (s == 0.0).all()
+
+
+def test_drift_score_unsmoothed_zero_count_pair_stays_finite():
+    """smoothing=0 with a rescue on a never-profiled pair: infinite surprise
+    must come back as a large finite score (it should dominate), not inf."""
+    from repro.core.profiler import drift_score
+
+    ent = np.array([0, 0])
+    cam = np.array([0, 1])
+    m = build_model(ent, cam, np.array([0, 20]), np.array([5, 25]), 3)
+    rescues = np.zeros((3, 3))
+    rescues[2, 0] = 1.0                               # count[2, 0] == 0
+    s = drift_score(m, rescues, smoothing=0.0)
+    assert np.isfinite(s).all()
+    assert s[2, 0] == s.max() > 0
+
+
 def test_potential_savings_positive(duke_sim):
     m = duke_sim["model"]
     s = m.potential_savings(0.05, 0.02)

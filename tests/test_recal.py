@@ -1,0 +1,335 @@
+"""The §6 recalibration loop: trigger hysteresis, hot-swap semantics, and
+the serve() wiring.  The fleet-vs-single epoch-boundary differential lives
+in tests/test_sharded_engine.py (fleet_case_recalibration)."""
+import numpy as np
+import pytest
+
+from repro.core.profiler import build_model
+from repro.runtime.recal import (RecalibrationController, RecalibrationPolicy,
+                                 match_log_source, visits_window_source)
+
+
+def _toy_model(n_cams=4, epoch=0):
+    """A tiny profiled model: a handful of 0->1 and 1->2 transitions."""
+    ent = np.array([0, 0, 0, 1, 1, 1])
+    cam = np.array([0, 1, 2, 0, 1, 2])
+    t_in = np.array([0, 20, 40, 100, 120, 140])
+    t_out = np.array([5, 25, 45, 105, 125, 145])
+    return build_model(ent, cam, t_in, t_out, n_cams, epoch=epoch)
+
+
+class _StubEngine:
+    """The engine surface the controller touches: model, rescue matrix,
+    swap_model, wall tick.  Records every swap instead of re-jitting."""
+
+    def __init__(self, model):
+        self.model = model
+        self.C = model.n_cams
+        self.rescue_pairs = np.zeros((self.C, self.C), np.int64)
+        self.t = 0
+        self.model_epoch = int(model.epoch)
+        self.swap_times: list[int] = []
+
+    def swap_model(self, model):
+        self.model_epoch += 1
+        self.model = model
+        self.swap_times.append(self.t)
+        return self.model_epoch
+
+
+def _source_from_model_inputs():
+    ent = np.array([0, 0, 1, 1])
+    cam = np.array([0, 3, 0, 3])
+    t_in = np.array([0, 30, 60, 95])
+    t_out = np.array([5, 35, 65, 100])
+    return lambda lo, hi: (ent, cam, t_in, t_out)
+
+
+# ---------------------------------------------------------------------------
+# trigger hysteresis (fake clock)
+# ---------------------------------------------------------------------------
+
+def test_borderline_score_does_not_thrash_swaps():
+    """THE hysteresis regression: a drift score oscillating around the
+    threshold must not re-trigger inside the cooldown — one swap, then
+    silence until ``cooldown`` ticks have passed, then at most one more."""
+    eng = _StubEngine(_toy_model())
+    now = [0]
+    p = RecalibrationPolicy(drift_threshold=.1, min_rescues=4, cooldown=100,
+                            poll_every=5, window=200, reset_rescues=False)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: now[0])
+    for t in range(0, 100, 5):
+        now[0] = eng.t = t
+        # oscillate around the threshold: rescues on a never-profiled pair
+        # flip between 1 (score ~0.33 > 0.1) and 0 every poll
+        eng.rescue_pairs[:] = 0
+        eng.rescue_pairs[2, 3] = 1 if (t // 5) % 2 == 0 else 0
+        eng.rescue_pairs[0, 2] = 4          # keeps min_rescues satisfied
+        ctl.on_tick()
+    assert eng.swap_times == [0], \
+        f"cooldown violated: swaps at {eng.swap_times}"
+    # cooldown expires -> the (still-high) score may trigger exactly once more
+    for t in range(100, 160, 5):
+        now[0] = eng.t = t
+        eng.rescue_pairs[2, 3] = 1
+        ctl.on_tick()
+    assert eng.swap_times == [0, 100]
+    assert eng.model_epoch == 2
+    assert [e["epoch"] for e in ctl.events] == [1, 2]
+
+
+def test_min_rescue_guard_blocks_noisy_small_samples():
+    """One rescue on a never-profiled pair scores far above the threshold —
+    but with fewer than min_rescues total events the trigger must not trust
+    it (the small-sample guard)."""
+    eng = _StubEngine(_toy_model())
+    p = RecalibrationPolicy(drift_threshold=.1, min_rescues=8, cooldown=50,
+                            poll_every=1)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: eng.t)
+    eng.rescue_pairs[2, 3] = 7              # high score, below the guard
+    assert float(ctl.score().max()) > p.drift_threshold
+    for t in range(30):
+        eng.t = t
+        ctl.on_tick()
+    assert eng.swap_times == []
+    eng.rescue_pairs[2, 3] = 8              # guard satisfied -> fires
+    eng.t = 30
+    ctl.on_tick()
+    assert eng.swap_times == [30]
+
+
+def test_poll_cadence_and_score_history():
+    eng = _StubEngine(_toy_model())
+    p = RecalibrationPolicy(poll_every=10)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: eng.t)
+    for t in range(0, 35):
+        eng.t = t
+        ctl.on_tick()
+    assert [pp["t"] for pp in ctl.polls] == [0, 10, 20, 30]
+    assert ctl.polls.maxlen is not None     # bounded on long-running engines
+    assert all(pp["score"] == 0.0 and pp["rescues"] == 0 for pp in ctl.polls)
+
+
+def test_rescue_reset_after_swap_rearms_the_trigger():
+    """reset_rescues=True: the swap consumes the evidence — the same matrix
+    must not re-trigger against the new model once the cooldown passes."""
+    eng = _StubEngine(_toy_model())
+    p = RecalibrationPolicy(drift_threshold=.1, min_rescues=2, cooldown=10,
+                            poll_every=1, reset_rescues=True)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: eng.t)
+    eng.rescue_pairs[2, 3] = 5
+    eng.t = 0
+    ctl.on_tick()
+    assert eng.swap_times == [0]
+    assert eng.rescue_pairs.sum() == 0      # evidence consumed
+    for t in range(1, 40):                  # far past the cooldown
+        eng.t = t
+        ctl.on_tick()
+    assert eng.swap_times == [0], "re-triggered without fresh rescues"
+
+
+def test_empty_window_skips_the_swap():
+    """A tripped trigger with nothing to re-profile from (empty visit
+    window) must not swap in a degenerate model."""
+    eng = _StubEngine(_toy_model())
+    z = np.zeros(0, np.int64)
+    p = RecalibrationPolicy(drift_threshold=.1, min_rescues=1, cooldown=1,
+                            poll_every=1)
+    ctl = RecalibrationController(eng, lambda lo, hi: (z, z, z, z), p,
+                                  clock=lambda: eng.t)
+    eng.rescue_pairs[2, 3] = 3
+    assert ctl.on_tick() is None
+    assert eng.swap_times == [] and ctl.events == []
+
+
+# ---------------------------------------------------------------------------
+# engine hot-swap semantics (the real engine)
+# ---------------------------------------------------------------------------
+
+def _mini_world():
+    from conftest import make_serving_world
+    return make_serving_world(n_entities=60, horizon=240, seed=3, n_queries=2)
+
+
+def _drive(eng, world, t_lo, t_hi, trace=None):
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    for t in range(t_lo, t_hi):
+        frames = {}
+        for c in range(vis.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        eng.tick(record_trace=trace)
+
+
+def test_swap_model_keeps_in_flight_queries_and_stamps_epochs():
+    from repro import api as rexcam
+    from repro.core.profiler import build_model
+
+    world = _mini_world()
+    vis, feats = world["vis"], world["feats"]
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                       geo_adj=world["net"].geo_adjacent)
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    trace = []
+    _drive(eng, world, t0, t0 + 30, trace)
+    pre = {qid: (q.f_q, q.c_q, q.f_curr, q.phase, len(q.matches))
+           for qid, q in eng.queries.items()}
+    fresh = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out, vis.n_cams,
+                        time_limit=150)
+    assert eng.swap_model(fresh) == 1
+    assert eng.model_epoch == 1 and int(eng.model.epoch) == 1
+    assert eng.model_swaps == [(t0 + 30, 1)]
+    # in-flight queries survived the swap untouched
+    assert {qid: (q.f_q, q.c_q, q.f_curr, q.phase, len(q.matches))
+            for qid, q in eng.queries.items()} == pre
+    _drive(eng, world, t0 + 30, t0 + 60, trace)
+    epochs = {r["epoch"] for r in trace}
+    assert epochs == {0, 1}, f"trace must span the swap, got {epochs}"
+    # epoch is monotone along the trace: no round ran under a stale M
+    seen = [r["epoch"] for r in trace]
+    assert seen == sorted(seen)
+
+
+def test_swap_model_mid_round_raises():
+    """The atomicity contract: one round sees ONE model — swapping from
+    inside the round (here: from embed_fn) must fail loudly."""
+    from repro import api as rexcam
+
+    world = _mini_world()
+    vis, feats = world["vis"], world["feats"]
+    caught = []
+
+    def embed_fn(x):
+        try:
+            eng.swap_model(world["model"])
+        except RuntimeError as e:
+            caught.append(str(e))
+        return x
+
+    eng = rexcam.serve(world["model"], embed_fn=embed_fn,
+                       geo_adj=world["net"].geo_adjacent)
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    _drive(eng, world, t0, t0 + 20)
+    assert caught, "embed_fn never ran — world too small to admit anything"
+    assert "mid-round" in caught[0]
+    assert eng.model_epoch == 0         # nothing swapped
+
+
+def test_swap_model_shape_mismatch_raises():
+    from repro import api as rexcam
+
+    world = _mini_world()
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x)
+    vis = world["vis"]
+    with pytest.raises(ValueError, match="n_bins"):
+        eng.swap_model(build_model(vis.ent, vis.cam, vis.t_in, vis.t_out,
+                                   vis.n_cams, n_bins=64))
+    bad_c = build_model(vis.ent, vis.cam, vis.t_in, vis.t_out,
+                        vis.n_cams + 1)
+    with pytest.raises(ValueError):
+        eng.swap_model(bad_c)
+
+
+# ---------------------------------------------------------------------------
+# trajectory sources
+# ---------------------------------------------------------------------------
+
+def test_visits_window_source_slices_active_visits():
+    from repro.core.simulate import Visits
+
+    vis = Visits(np.array([0, 0, 1]), np.array([0, 1, 2]),
+                 np.array([0, 50, 90]), np.array([10, 60, 95]), 100, 3)
+    src = visits_window_source(vis)
+    ent, cam, t_in, t_out = src(40, 80)
+    assert ent.tolist() == [0] and cam.tolist() == [1]
+    ent, _, _, _ = src(0, 100)
+    assert len(ent) == 3
+
+
+def test_match_log_source_rebuilds_query_trajectories():
+    """The engine's own sightings (submit anchor + matches) re-profile into
+    a model whose transitions are exactly the tracked hops."""
+    eng = _StubEngine(_toy_model())
+    eng.sightings = [(0, 0, 10), (0, 1, 55), (0, 2, 99), (1, 0, 200)]
+    src = match_log_source(eng)
+    ent, cam, t_in, t_out = src(0, 150)
+    assert ent.tolist() == [0, 0, 0] and cam.tolist() == [0, 1, 2]
+    m = build_model(ent, cam, t_in, t_out, 4)
+    assert float(m.counts[0, 1]) == 1.0 and float(m.counts[1, 2]) == 1.0
+    ent, _, _, _ = src(300, 400)
+    assert len(ent) == 0
+
+
+def test_engine_sighting_log_grows_with_matches():
+    from repro import api as rexcam
+
+    world = _mini_world()
+    vis, feats = world["vis"], world["feats"]
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                       geo_adj=world["net"].geo_adjacent)
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    assert len(eng.sightings) == len(q_vids)      # the submit anchors
+    _drive(eng, world, t0, vis.horizon)
+    n_matches = sum(len(q.matches) for q in eng.queries.values())
+    assert n_matches > 0
+    assert len(eng.sightings) == len(q_vids) + n_matches
+
+
+# ---------------------------------------------------------------------------
+# serve() wiring
+# ---------------------------------------------------------------------------
+
+def test_sighting_log_pruned_on_long_runs():
+    """The sighting log is bounded: entries no recalibration window can
+    still reach are dropped each tick (a serving engine runs forever)."""
+    from repro import api as rexcam
+
+    world = _mini_world()
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, retention=10)
+    eng.sightings.extend((0, 0, f) for f in range(100))
+    eng.t = 500
+    eng.tick()
+    assert len(eng.sightings) == 0          # all far behind t - 2*retention
+    eng.sightings.append((0, 0, eng.t - 1))  # recent: survives
+    eng.tick()
+    assert len(eng.sightings) == 1
+
+
+def test_api_serve_recalibrate_knob():
+    from repro import api as rexcam
+    from repro.runtime.recal import RecalibrationController
+
+    world = _mini_world()
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x)
+    assert eng.recal is None
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                       recalibrate=True)
+    assert isinstance(eng.recal, RecalibrationController)
+    custom = RecalibrationPolicy(drift_threshold=.3)
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                       recalibrate=custom,
+                       visit_source=visits_window_source(world["vis"]))
+    assert eng.recal.policy is custom
+    with pytest.raises(TypeError):
+        rexcam.serve(world["model"], embed_fn=lambda x: x, recalibrate=123)
+    with pytest.raises(ValueError, match="visit_source"):
+        rexcam.serve(world["model"], embed_fn=lambda x: x,
+                     visit_source=visits_window_source(world["vis"]))

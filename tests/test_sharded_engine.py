@@ -66,6 +66,15 @@ def test_fleet_random_streams_property():
     _fleet_case("fleet_property_suite", max_examples=6)
 
 
+def test_fleet_recalibration_epoch_boundaries():
+    """§6 recalibration differential: a mid-run topology shift trips the
+    drift trigger, the controller hot-swaps a re-profiled M, and the fleet
+    stays bit-identical to the single engine INCLUDING the model-epoch
+    stamps in every trace record — the swap lands on the same round on
+    every shard of the mesh."""
+    _fleet_case("fleet_case_recalibration")
+
+
 def test_fleet_gallery_modes_differential():
     """The gallery-plane contract: sharded AND replicated-local gallery
     fleets are trace-identical to the single engine, and a counting
