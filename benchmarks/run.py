@@ -1,5 +1,6 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 import argparse
+import json
 import os
 import sys
 import time
@@ -15,6 +16,7 @@ ALL = {
     "serving_shard_sweep": scenarios.serving_shard_sweep,
     "gallery_sweep": scenarios.gallery_sweep,
     "drift_sweep": scenarios.drift_sweep,
+    "transport_sweep": scenarios.transport_sweep,
     "sec3_potential": tables.sec3_potential,
     "fig10_anoncampus": tables.fig10_anoncampus,
     "fig11_duke": tables.fig11_duke,
@@ -32,12 +34,17 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None, choices=list(ALL))
+    ap.add_argument("--bench-dir", default=None, metavar="DIR",
+                    help="write machine-readable BENCH_<scenario>.json files "
+                    "(admitted_steps, unique_frames, wall, p50/p99 round "
+                    "latency per config) for every sweep that records them")
     args = ap.parse_args()
     names = args.only or list(ALL)
 
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
+        scenarios.pop_bench_records(name)  # drop stale in-process records
         try:
             rows = ALL[name]()
         except Exception as e:  # noqa: BLE001 — report and continue the suite
@@ -45,6 +52,13 @@ def main() -> None:
             continue
         for rname, us, derived in rows:
             print(f"{rname},{us:.1f},{derived}")
+        recs = scenarios.pop_bench_records(name)
+        if args.bench_dir and recs:
+            os.makedirs(args.bench_dir, exist_ok=True)
+            path = os.path.join(args.bench_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"scenario": name, "records": recs}, f, indent=1)
+            print(f"# {name}: {len(recs)} records -> {path}", file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
 

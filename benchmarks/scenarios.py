@@ -28,6 +28,35 @@ from repro.core.simulate import restrict_network
 from repro.core.tracker import make_queries
 
 
+# ---------------------------------------------------------------------------
+# Machine-readable benchmark records (BENCH_<scenario>.json via run.py).
+# ---------------------------------------------------------------------------
+
+#: scenario name -> list of record dicts appended by ``bench_record`` while a
+#: sweep runs; ``benchmarks/run.py --bench-dir`` drains this into
+#: ``BENCH_<scenario>.json`` after the sweep returns.
+BENCH_RECORDS: dict = {}
+
+
+def bench_record(sweep: str, **fields) -> None:
+    """Append one machine-readable record for ``BENCH_<sweep>.json``."""
+    BENCH_RECORDS.setdefault(sweep, []).append(fields)
+
+
+def pop_bench_records(sweep: str):
+    """Drain (and clear) the records a sweep accumulated — run.py calls this
+    both before a sweep (drop stale in-process state) and after (collect)."""
+    return BENCH_RECORDS.pop(sweep, [])
+
+
+def _tick_pcts(tick_lat):
+    """(p50_ms, p99_ms) over a list of per-tick wall latencies in seconds."""
+    if not tick_lat:
+        return 0.0, 0.0
+    p50, p99 = np.percentile(np.asarray(tick_lat) * 1e3, [50, 99])
+    return float(p50), float(p99)
+
+
 @functools.lru_cache(maxsize=None)
 def duke(n_queries: int = 100):
     net = duke_like_network()
@@ -118,22 +147,28 @@ def policy_sweep(scenarios=("duke", "porto130")):
 # ---------------------------------------------------------------------------
 
 def _drive_serving(sc, policy, n_queries, steps, shards=None,
-                   gallery="auto"):
+                   gallery="auto", transport=None, prefetch=False):
     """The one engine-driving loop every serving benchmark shares: build the
     engine (fleet when ``shards``), submit the scenario's queries, replay the
     live stream tick by tick.  Returns (engine, matches, wall seconds
-    including engine construction and jit warmup)."""
+    including engine construction and jit warmup, per-tick wall latencies).
+
+    ``transport=``/``prefetch=`` pass straight through to ``rexcam.serve`` —
+    the transport_sweep drives the same loop with a ``FakeRpcTransport`` so
+    its walls are comparable against every other serving row."""
     vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
     q_vids = sc["q_vids"][:n_queries]
     wall0 = time.perf_counter()
     eng = rexcam.serve(sc["model"], embed_fn=lambda x: x, policy=policy,
                        geo_adj=net.geo_adjacent, shards=shards,
-                       gallery=gallery)
+                       gallery=gallery, transport=transport,
+                       prefetch=prefetch)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
         eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
     matches = 0
+    tick_lat = []
     for t in range(t0, min(t0 + steps, vis.horizon)):
         frames = {}
         for c in range(net.n_cams):
@@ -141,8 +176,10 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
             if len(vids):
                 frames[c] = feats[vids]
         eng.ingest(frames)
+        tk0 = time.perf_counter()
         matches += eng.tick()["matches"]
-    return eng, matches, time.perf_counter() - wall0
+        tick_lat.append(time.perf_counter() - tk0)
+    return eng, matches, time.perf_counter() - wall0, tick_lat
 
 
 def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
@@ -160,7 +197,7 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
         n_q = min(n_queries, len(sc["q_vids"]))
         base = None
         for pname, policy in SWEEP_POLICIES:
-            eng, matches, wall = _drive_serving(sc, policy, n_q, steps)
+            eng, matches, wall, lat = _drive_serving(sc, policy, n_q, steps)
             us = wall * 1e6 / max(n_q, 1)
             if pname == "all":
                 base = eng.admitted_steps
@@ -169,6 +206,12 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
             # hit rate over replay re-reads only — live first-embeds can
             # never be cache hits and would just dilute the number
             hot = eng.cache_hits / max(eng.cache_hits + eng.replay_embeds, 1)
+            p50, p99 = _tick_pcts(lat)
+            bench_record("serving_sweep", scenario=sc["name"], policy=pname,
+                         admitted_steps=int(eng.admitted_steps),
+                         unique_frames=int(eng.unique_frames),
+                         wall_s=round(wall, 4), p50_tick_ms=round(p50, 3),
+                         p99_tick_ms=round(p99, 3), matches=int(matches))
             rows.append((f"serving_sweep/{sc['name']}/{pname}", us,
                          f"savings={savings:.1f}x "
                          f"admitted_steps={eng.admitted_steps} "
@@ -203,14 +246,14 @@ def serving_shard_sweep(scenarios=("duke",), n_queries=16, steps=300,
         n_q = min(n_queries, len(sc["q_vids"]))
         policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
                                      t_thresh=.02)
-        base_eng, _, base_wall = _drive_serving(sc, policy, n_q, steps)
+        base_eng, _, base_wall, _ = _drive_serving(sc, policy, n_q, steps)
         for S in shard_counts:
             if S > n_dev:
                 rows.append((f"serving_shard_sweep/{sc['name']}/shards{S}",
                              0.0, f"skipped: {n_dev} devices visible "
                              f"(set xla_force_host_platform_device_count)"))
                 continue
-            eng, _, wall = _drive_serving(sc, policy, n_q, steps, shards=S)
+            eng, _, wall, _ = _drive_serving(sc, policy, n_q, steps, shards=S)
             assert eng.admitted_steps == base_eng.admitted_steps, \
                 "fleet diverged from the single engine (admitted_steps)"
             assert eng.unique_frames == base_eng.unique_frames, \
@@ -312,6 +355,7 @@ def drift_sweep(n_queries: int = 32, shards: int = 8):
         eng.t = t0
         for i, q in enumerate(q_vids):
             eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+        tick_lat = []
         for t in range(t0, vis.horizon):
             frames = {}
             for c in range(net.n_cams):
@@ -319,20 +363,34 @@ def drift_sweep(n_queries: int = 32, shards: int = 8):
                 if len(vids):
                     frames[c] = feats[vids]
             eng.ingest(frames)
+            tk0 = time.perf_counter()
             eng.tick()
-        return eng, time.perf_counter() - wall0
+            tick_lat.append(time.perf_counter() - tk0)
+        return eng, time.perf_counter() - wall0, tick_lat
+
+    def record(config, eng, wall, tick_lat, recall, **extra):
+        p50, p99 = _tick_pcts(tick_lat)
+        bench_record("drift_sweep", scenario=sc["name"], config=config,
+                     admitted_steps=int(eng.admitted_steps),
+                     unique_frames=int(eng.unique_frames),
+                     wall_s=round(wall, 4), p50_tick_ms=round(p50, 3),
+                     p99_tick_ms=round(p99, 3), recall=round(recall, 4),
+                     epoch=int(eng.model_epoch), **extra)
 
     rows = []
-    frozen, wall_f = drive(None)
+    frozen, wall_f, lat_f = drive(None)
     r_frozen = _serving_recall(frozen, vis, q_vids, gt_vids)
+    record("frozen", frozen, wall_f, lat_f, r_frozen)
     rows.append((f"drift_sweep/{sc['name']}/frozen",
                  wall_f * 1e6 / max(len(q_vids), 1),
                  f"recall={r_frozen:.2f} admitted_steps={frozen.admitted_steps} "
                  f"rescues={int(frozen.rescue_pairs.sum())} epoch=0 "
                  f"note=stale model degrades silently (no re-profiling)"))
 
-    fresh, wall_r = drive(recal)
+    fresh, wall_r, lat_r = drive(recal)
     r_fresh = _serving_recall(fresh, vis, q_vids, gt_vids)
+    record("recalibrated", fresh, wall_r, lat_r, r_fresh,
+           swaps=len(fresh.model_swaps))
     ev = fresh.recal.events
     swaps = ";".join(f"t={e['t']}:epoch{e['epoch']}(score={e['score']:.2f})"
                      for e in ev)
@@ -348,13 +406,15 @@ def drift_sweep(n_queries: int = 32, shards: int = 8):
         f"frozen model's {r_frozen:.3f} after the injected shift"
 
     if shards <= len(jax.devices()):
-        fleet, wall_s = drive(recal, n_shards=shards)
+        fleet, wall_s, lat_s = drive(recal, n_shards=shards)
         r_fleet = _serving_recall(fleet, vis, q_vids, gt_vids)
         assert fleet.admitted_steps == fresh.admitted_steps, \
             "recalibrating fleet diverged from the single engine"
         assert fleet.model_swaps == fresh.model_swaps, \
             "fleet model swaps did not land on the single engine's ticks"
         assert r_fleet == r_fresh
+        record(f"recalibrated_shards{shards}", fleet, wall_s, lat_s, r_fleet,
+               swaps=len(fleet.model_swaps))
         rows.append((f"drift_sweep/{sc['name']}/recalibrated_shards{shards}",
                      wall_s * 1e6 / max(len(q_vids), 1),
                      f"recall={r_fleet:.2f} "
@@ -403,10 +463,10 @@ def gallery_sweep(scenarios=("duke",), n_queries=16, steps=300, shards=4):
         n_q = min(n_queries, len(sc["q_vids"]))
         policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
                                      t_thresh=.02)
-        single, _, _ = _drive_serving(sc, policy, n_q, steps)
+        single, _, _, _ = _drive_serving(sc, policy, n_q, steps)
         for mode in ("local", "sharded"):
-            eng, _, wall = _drive_serving(sc, policy, n_q, steps,
-                                          shards=shards, gallery=mode)
+            eng, _, wall, lat = _drive_serving(sc, policy, n_q, steps,
+                                               shards=shards, gallery=mode)
             assert eng.unique_frames == single.unique_frames, \
                 f"gallery={mode} fleet diverged from the single engine"
             assert eng.frames_processed == single.frames_processed, \
@@ -423,6 +483,16 @@ def gallery_sweep(scenarios=("duke",), n_queries=16, steps=300, shards=4):
                 # replicated baseline: every worker would hold the full cache
                 mem = "/".join(str(g["bytes"]) for _ in rep)
                 peak = g["bytes"]
+            p50, p99 = _tick_pcts(lat)
+            bench_record("gallery_sweep", scenario=sc["name"], gallery=mode,
+                         shards=shards,
+                         admitted_steps=int(eng.admitted_steps),
+                         unique_frames=int(eng.unique_frames),
+                         wall_s=round(wall, 4), p50_tick_ms=round(p50, 3),
+                         p99_tick_ms=round(p99, 3),
+                         embed_calls=int(eng.frames_processed),
+                         cache_hits=int(eng.cache_hits),
+                         peak_worker_bytes=int(peak))
             rows.append((f"gallery_sweep/{sc['name']}/{mode}",
                          wall * 1e6 / max(n_q, 1),
                          f"embed_calls={eng.frames_processed} "
@@ -430,4 +500,151 @@ def gallery_sweep(scenarios=("duke",), n_queries=16, steps=300, shards=4):
                          f"embed_reduction={reduction:.1f}x "
                          f"cache_hits={eng.cache_hits} "
                          f"per_worker_bytes={mem} peak_worker_bytes={peak}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# transport_sweep: latency hiding — speculative prefetch vs blocking fetches.
+# ---------------------------------------------------------------------------
+
+def transport_sweep(scenarios=("duke",), n_queries=16, steps=600, shards=4,
+                    rtt_scales=(1, 4, 8)):
+    """The transport plane's wall-clock argument, measured and asserted:
+    drive the fleet through a real-clock ``FakeRpcTransport`` whose injected
+    RTT is pegged to the measured p50 round latency ("comparable to one
+    ranking pass"), and show
+
+    * the BLOCKING fetch path degrades ~linearly in injected RTT — every
+      owner-shard cache hit stalls the round for a full round trip, so the
+      extra wall across ``rtt_scales`` tracks ``cache_hits x RTT`` (the
+      slope between the smallest and largest scale is asserted), while
+    * the PREFETCHED path (double-buffered speculative fetch issued at the
+      end of the previous round) hides the latency behind compute: at
+      RTT = one ranking pass its wall must land within 25% of the
+      zero-latency baseline (asserted), with misspeculation exactly
+      accounted (``prefetch_wasted``).
+
+    Every run must stay trace-identical — admitted_steps/unique_frames are
+    asserted EQUAL across the baseline, every blocking RTT and the
+    prefetched run (transport moves WHEN blocks arrive, never WHAT is
+    ranked).  Uses ``steps=600`` so the replay phase re-reads enough
+    owner-shard blocks (~130 remote fetches) for the walls to separate.
+    Needs ``shards`` visible devices (xla_force_host_platform_device_count).
+    """
+    import jax
+
+    builders = {"duke": lambda: duke(60)}
+    rows = []
+    n_dev = len(jax.devices())
+    for sc_name in scenarios:
+        if shards > n_dev:
+            rows.append((f"transport_sweep/{sc_name}", 0.0,
+                         f"skipped: {n_dev} devices visible "
+                         f"(set xla_force_host_platform_device_count)"))
+            continue
+        sc = builders[sc_name]()
+        n_q = min(n_queries, len(sc["q_vids"]))
+        policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
+                                     t_thresh=.02)
+        # warmup run absorbs jit compilation so the walls below compare
+        # injected latency, not tracing
+        _drive_serving(sc, policy, n_q, min(steps, 120), shards=shards)
+
+        base, _, wall0, lat0 = _drive_serving(sc, policy, n_q, steps,
+                                              shards=shards)
+        hits = base.cache_hits
+        p50_0, p99_0 = _tick_pcts(lat0)
+        # "RTT comparable to one ranking pass": the measured p50 tick
+        rtt = max(0.002, p50_0 / 1e3)
+        rows.append((f"transport_sweep/{sc['name']}/baseline",
+                     wall0 * 1e6 / max(n_q, 1),
+                     f"wall={wall0:.2f}s cache_hits={hits} "
+                     f"p50_tick={p50_0:.1f}ms rtt_unit={rtt * 1e3:.1f}ms"))
+        bench_record("transport_sweep", scenario=sc["name"],
+                     config="baseline", rtt_ms=0.0,
+                     admitted_steps=int(base.admitted_steps),
+                     unique_frames=int(base.unique_frames),
+                     wall_s=round(wall0, 4), p50_tick_ms=round(p50_0, 3),
+                     p99_tick_ms=round(p99_0, 3), cache_hits=int(hits))
+
+        def run(config, transport, prefetch, rtt_s):
+            eng, _, wall, lat = _drive_serving(sc, policy, n_q, steps,
+                                               shards=shards,
+                                               transport=transport,
+                                               prefetch=prefetch)
+            assert eng.admitted_steps == base.admitted_steps, \
+                f"transport config {config} changed admitted_steps"
+            assert eng.unique_frames == base.unique_frames, \
+                f"transport config {config} changed unique_frames"
+            c = eng.gallery.counters()
+            p50, p99 = _tick_pcts(lat)
+            bench_record("transport_sweep", scenario=sc["name"],
+                         config=config, rtt_ms=round(rtt_s * 1e3, 3),
+                         admitted_steps=int(eng.admitted_steps),
+                         unique_frames=int(eng.unique_frames),
+                         wall_s=round(wall, 4), p50_tick_ms=round(p50, 3),
+                         p99_tick_ms=round(p99, 3),
+                         remote_fetches=int(c["remote_fetches"]),
+                         prefetch_hits=int(c["prefetch_hits"]),
+                         prefetch_wasted=int(c["prefetch_wasted"]),
+                         retries=int(c["retries"]),
+                         timeouts=int(c["timeouts"]))
+            return eng, wall, c, p99
+
+        # zero-latency control for the prefetched path: same speculation
+        # machinery through the in-proc transport, no injected RTT — the
+        # 25% bound below isolates the *latency* cost, not the (small)
+        # cost of speculating itself
+        _, wall_p0, _, _ = run("prefetch_rtt0", rexcam.InProcTransport(),
+                               True, 0.0)
+
+        walls_b = {}
+        for s in rtt_scales:
+            lat_s = rtt * s
+            tr = rexcam.FakeRpcTransport(
+                default=rexcam.FaultProfile(latency=lat_s),
+                timeout=4 * lat_s + 1.0)
+            _, wall_b, cb, p99_b = run(f"blocking_rtt{s}x", tr, False, lat_s)
+            walls_b[s] = wall_b
+            rows.append((f"transport_sweep/{sc['name']}/blocking_rtt{s}x",
+                         wall_b * 1e6 / max(n_q, 1),
+                         f"wall={wall_b:.2f}s rtt={lat_s * 1e3:.1f}ms "
+                         f"extra={wall_b - wall0:+.2f}s "
+                         f"stall_floor={cb['remote_fetches'] * lat_s:.2f}s "
+                         f"remote_fetches={cb['remote_fetches']} "
+                         f"p99_tick={p99_b:.1f}ms"))
+
+        tr = rexcam.FakeRpcTransport(
+            default=rexcam.FaultProfile(latency=rtt), timeout=4 * rtt + 1.0)
+        _, wall_p, cp, p99_p = run("prefetch_rtt1x", tr, True, rtt)
+        hidden = walls_b[min(rtt_scales)] - wall_p
+        rows.append((f"transport_sweep/{sc['name']}/prefetch_rtt1x",
+                     wall_p * 1e6 / max(n_q, 1),
+                     f"wall={wall_p:.2f}s rtt={rtt * 1e3:.1f}ms "
+                     f"vs_blocking={hidden:+.2f}s "
+                     f"prefetch_hits={cp['prefetch_hits']} "
+                     f"wasted={cp['prefetch_wasted']} p99_tick={p99_p:.1f}ms"))
+
+        # --- the two acceptance asserts -------------------------------
+        # blocking degrades ~linearly in RTT: the slope between the
+        # smallest and largest injected RTT must carry most of the
+        # deterministic stall floor (remote_fetches x delta-RTT; 0.6
+        # tolerates wall noise on top of the exact injected sleeps)
+        lo, hi = min(rtt_scales), max(rtt_scales)
+        d_rtt = rtt * (hi - lo)
+        floor = 0.6 * cp["remote_fetches"] * d_rtt
+        assert walls_b[hi] - walls_b[lo] >= floor, \
+            f"blocking path did not degrade linearly: " \
+            f"{walls_b[hi]:.2f}s @ {hi}x vs {walls_b[lo]:.2f}s @ {lo}x " \
+            f"(expected >= {floor:.2f}s of injected stall)"
+        # prefetch hides the latency: within 25% of the zero-latency
+        # baseline (the speculation-enabled control; wall0 guards the
+        # degenerate case of a slow control run)
+        bound = 1.25 * max(wall_p0, wall0)
+        assert wall_p <= bound, \
+            f"prefetched wall {wall_p:.2f}s exceeds 1.25x the " \
+            f"zero-latency baseline ({max(wall_p0, wall0):.2f}s)"
+        assert cp["prefetch_hits"] >= 0.8 * max(hits, 1), \
+            f"speculation mispredicted: {cp['prefetch_hits']} prefetch " \
+            f"hits vs {hits} cache hits"
     return rows

@@ -30,6 +30,8 @@ from repro.runtime.engine import EngineConfig, ServingEngine
 from repro.runtime.fleet import ShardedServingEngine
 from repro.runtime.recal import (RecalibrationController,  # noqa: F401
                                  RecalibrationPolicy, visits_window_source)
+from repro.runtime.transport import (FakeRpcTransport, FaultProfile,  # noqa: F401
+                                     InProcTransport, Transport)
 
 
 def profile(visits: Visits, *, time_limit: int | None = None,
@@ -83,6 +85,7 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
           policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
           retention: int = 600, geo_adj=None, shards: int | None = None,
           devices=None, gallery: str = "auto", topk: int = 1,
+          transport=None, prefetch: bool = False,
           recalibrate=None, visit_source=None) -> ServingEngine:
     """Live serving engine driving the same vectorized admission plane.
 
@@ -108,6 +111,24 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
                      bands per query round in trace records (§5.2
                      confidence bands); the argmax match path is band 0 and
                      is unchanged by k > 1.
+      transport=     the gallery fetch plane (``repro.runtime.transport``):
+                     None (default) keeps direct zero-copy reads; "inproc"
+                     names the same behavior explicitly through the
+                     ``Transport`` contract (counters tick); a ``Transport``
+                     instance — e.g. ``FakeRpcTransport`` with per-peer
+                     injected latency/jitter/drop/reorder and
+                     timeout/retry/backoff — routes every owner-shard block
+                     fetch through it.  Requires the sharded fleet gallery
+                     (shards= with gallery "auto"/"sharded").  A peer whose
+                     retry budget exhausts fires the dead-peer signal: the
+                     gallery re-homes immediately and the fleet scales down
+                     at the end of the tick.
+      prefetch=      double-buffered speculative fetch: at the end of round
+                     N the engine issues async fetches for round N+1's
+                     predicted admitted blocks so transport latency hides
+                     behind compute; misspeculation falls back to the
+                     blocking fetch (exactly accounted as prefetch_wasted).
+                     Never changes the trace — only when blocks arrive.
       recalibrate=   close the §6 drift loop: True (default trigger knobs)
                      or a ``RecalibrationPolicy`` attaches a
                      ``RecalibrationController`` that polls the engine's
@@ -124,8 +145,18 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
                      own confirmed-sighting log (``match_log_source``).
                      Only meaningful with recalibrate=.
     """
+    if transport == "inproc":
+        transport = InProcTransport()
+    elif isinstance(transport, str):
+        raise ValueError(f"unknown transport {transport!r} (expected None, "
+                         f"'inproc' or a runtime.transport.Transport)")
+    if transport is not None and shards is None and devices is None:
+        raise ValueError("transport= requires the sharded fleet "
+                         "(serve(..., shards=k)): the single engine's local "
+                         "gallery has no remote owners to fetch from")
     cfg = EngineConfig(policy=policy, max_batch=max_batch,
-                       retention=retention, gallery=gallery, topk=topk)
+                       retention=retention, gallery=gallery, topk=topk,
+                       transport=transport, prefetch=prefetch)
     if shards is not None or devices is not None:
         eng = ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
                                    shards=shards, devices=devices)

@@ -16,6 +16,12 @@ a CPU host, fake the devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
     PYTHONPATH=src python -m repro.launch.serve --queries 8 --shards 4
 
+``--transport fake --rtt 0.01 --prefetch`` (fleet only) routes every
+owner-shard gallery fetch through a ``FakeRpcTransport`` with injected
+latency/jitter/drop and turns on the double-buffered speculative prefetch;
+the transport-plane line prints remote fetches, prefetch hits/waste,
+retries, timeouts and dead peers.
+
 ``--recalibrate`` closes the paper's §6 drift loop: a
 ``RecalibrationController`` watches the engine's live rescue matrix and
 hot-swaps a model re-profiled from the recent window when the drift score
@@ -52,6 +58,26 @@ def main():
                     help="surface the k best (value, cam, frame) candidate "
                          "bands per round in trace records (argmax path "
                          "unchanged)")
+    ap.add_argument("--transport", default="none",
+                    choices=["none", "inproc", "fake"],
+                    help="gallery fetch plane (fleet only): none (direct "
+                         "zero-copy reads), inproc (same behavior through "
+                         "the Transport contract, counters tick) or fake "
+                         "(FakeRpcTransport with --rtt/--jitter/--drop "
+                         "injected per fetch, timeout/retry/backoff)")
+    ap.add_argument("--rtt", type=float, default=0.005,
+                    help="injected one-way fetch latency in seconds "
+                         "(--transport fake)")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="uniform extra latency bound in seconds "
+                         "(--transport fake)")
+    ap.add_argument("--drop", type=float, default=0.0,
+                    help="per-attempt drop probability; dropped fetches "
+                         "time out and retry with backoff (--transport fake)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffered speculative fetch: issue round "
+                         "N+1's predicted gallery reads at the end of round "
+                         "N so transport latency hides behind compute")
     ap.add_argument("--recalibrate", action="store_true",
                     help="close the §6 drift loop: watch the live rescue "
                          "matrix and hot-swap a re-profiled model when the "
@@ -76,9 +102,17 @@ def main():
     recal = rexcam.RecalibrationPolicy(
         drift_threshold=args.drift_threshold, cooldown=args.recal_cooldown,
         window=args.recal_window) if args.recalibrate else None
+    if args.transport == "fake":
+        transport = rexcam.FakeRpcTransport(
+            default=rexcam.FaultProfile(latency=args.rtt, jitter=args.jitter,
+                                        drop=args.drop),
+            timeout=max(4 * (args.rtt + args.jitter), 1.0))
+    else:
+        transport = None if args.transport == "none" else args.transport
     eng = rexcam.serve(model, embed_fn=lambda x: x, policy=policy,
                        geo_adj=net.geo_adjacent, shards=args.shards,
                        gallery=args.gallery, topk=args.topk,
+                       transport=transport, prefetch=args.prefetch,
                        recalibrate=recal,
                        visit_source=rexcam.visits_window_source(vis)
                        if args.recalibrate else None)
@@ -124,6 +158,15 @@ def main():
     print(f"gallery plane [{g['kind']}]: {g['cached']} blocks resident "
           f"({g['bytes']} bytes), {g['hits']} hits / {g['misses']} misses, "
           f"{g['evictions']} evictions")
+    if args.transport != "none" or args.prefetch:
+        c = eng.gallery.counters()
+        kind = getattr(getattr(eng.gallery, "transport", None), "kind",
+                       "local")
+        print(f"transport plane [{kind}]: {c['remote_fetches']} remote "
+              f"fetches ({c['prefetch_hits']} served by prefetch, "
+              f"{c['prefetch_wasted']} wasted speculations), "
+              f"{c['retries']} retries, {c['timeouts']} timeouts, "
+              f"{c.get('dead_peers', 0)} dead peers")
     print(f"wall: {wall:.2f}s ({args.steps/max(wall,1e-9):.0f} steps/s)")
     if args.recalibrate:
         ev = eng.recal.events

@@ -67,6 +67,7 @@ from repro.kernels.reid_topk import NEG_INF
 from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
                                    assemble_round_gallery, pow2)
 from repro.runtime.stream_store import FrameStore
+from repro.runtime.transport import PrefetchPipeline
 
 # effectively "never": the live engine terminates queries via exit_t /
 # window exhaustion, not a simulation horizon
@@ -91,6 +92,15 @@ class EngineConfig:
     # (§5.2 confidence bands / re-ranking); the argmax match path is always
     # band 0, so topk=1 is exactly the classic engine
     topk: int = 1
+    # the gallery fetch plane (runtime.transport): None keeps today's
+    # direct zero-copy reads; a Transport instance routes every fetch of an
+    # owner-resident block through it (fleet + sharded gallery only)
+    transport: Any = None
+    # double-buffered speculative fetch: at the end of round N the engine
+    # issues async fetches for round N+1's predicted admitted blocks, so
+    # transport latency hides behind the rank pass (misspeculation falls
+    # back to the blocking fetch, exactly accounted)
+    prefetch: bool = False
 
 
 @dataclasses.dataclass
@@ -202,6 +212,10 @@ class ServingEngine:
             geo_adj if geo_adj is not None else np.ones((self.C, self.C), bool))
         self.gallery = self._make_gallery()
         self.store = FrameStore(self.C, cfg.retention, gallery=self.gallery)
+        # the double buffer over the gallery fetch plane (issue round N+1's
+        # fetches while round N consumes) — harmless but pointless without a
+        # transport, since the local path delivers immediately
+        self._prefetch = PrefetchPipeline(self.store) if cfg.prefetch else None
         self.queries: dict[int, QueryState] = {}
         self.t = 0
         self.frames_processed = 0    # (cam, frame) batches actually embedded
@@ -273,6 +287,11 @@ class ServingEngine:
     def _make_gallery(self) -> GalleryStore:
         """Which GalleryStore backs the embedding plane.  The fleet
         overrides this to inject the shared ``ShardedGalleryStore``."""
+        if self.cfg.transport is not None:
+            raise ValueError(
+                "transport= requires the sharded fleet gallery "
+                "(serve(..., shards=k)); the single engine's local store "
+                "has no remote owners to fetch from")
         if self.cfg.gallery in ("auto", "local"):
             return LocalGalleryStore(self.C, self.cfg.retention)
         if self.cfg.gallery == "sharded":
@@ -409,6 +428,11 @@ class ServingEngine:
         # rounds per wall tick, with the fractional remainder carried across
         # ticks so e.g. replay_speed=1.5 really averages 1.5x, matching the
         # tracker's continuous live_f model.  Caught-up queries get 1 round.
+        # drop prefetch handles whose blocks got evicted since they were
+        # issued (ingest ran between ticks) — exact waste accounting and a
+        # buffer bounded by the cache size
+        if self._prefetch is not None:
+            self._prefetch.sweep()
         budget = {}
         for q in self.queries.values():
             if q.done:
@@ -485,6 +509,8 @@ class ServingEngine:
                 if not qs:
                     if trace is not None:
                         trace.extend(records[q.qid] for q in all_qs)
+                    if self._prefetch is not None:
+                        self._issue_prefetch(all_qs)
                     return
 
         ps = self._gather(qs)
@@ -511,7 +537,13 @@ class ServingEngine:
         key_emb: dict[tuple[int, int], np.ndarray] = {}
         for key in sorted(wanted):
             if self.cfg.embed_cache:
-                emb = self.store.get_emb(*key)
+                # prefetched blocks first (round N-1 speculated this key);
+                # any misspeculation falls back to the blocking fetch below
+                emb = None
+                if self._prefetch is not None:
+                    emb = self._prefetch.consume(*key)
+                if emb is None:
+                    emb = self.store.get_emb(*key)
                 if emb is not None:     # replay re-read: skip re-embedding
                     key_emb[key] = emb
                     batch_keys.append(key)
@@ -606,6 +638,43 @@ class ServingEngine:
             trace.extend(records[q.qid] for q in all_qs)
 
         self._scatter(qs, ps_next, matched, match_cam, match_emb)
+
+        # double-buffer: with the round's outcomes scattered, the cohort's
+        # NEXT cursors are known — speculate round N+1's admission and start
+        # its cached fetches now, so they deliver while other work runs
+        if self._prefetch is not None:
+            self._issue_prefetch(all_qs)
+
+    def _issue_prefetch(self, qs: list[QueryState]) -> None:
+        """Speculatively issue async fetches for the cohort's next round.
+
+        ``policy.advance`` already produced the next cursors/phases, so the
+        next admission mask is re-evaluated on the REAL advanced state; the
+        only guesses are the live frontier (``self.t`` — next tick moves it)
+        and anything that mutates between rounds (a model swap, eviction, a
+        resubmitted query).  Guesses only cost accuracy, never correctness:
+        ``PrefetchPipeline.consume`` validates at use time and the round
+        falls back to the blocking fetch — the trace cannot change.
+        """
+        live = [q for q in qs if not q.done]
+        if not live:
+            return
+        # only replay cursors (f_curr behind the live frontier) can read a
+        # cache-RESIDENT block — a live-frontier block was ingested this tick
+        # and is not embedded yet, so fetch_async declines it anyway.  Skip
+        # the speculative admit dispatch entirely when nothing is replaying:
+        # this is what keeps the prefetch path's zero-latency overhead
+        # proportional to the replay rounds, not to every round.
+        if all(q.f_curr >= self.t for q in live):
+            return
+        ps = self._gather(live)
+        sl = self._slots
+        mask = np.asarray(self._dispatch_admit(ps))
+        keys: set[tuple[int, int]] = set()
+        for i, q in enumerate(live):
+            for cam in np.flatnonzero(mask[sl[i]]):
+                keys.add((int(cam), q.f_curr))
+        self._prefetch.issue(keys)
 
     def _skip_round(self, qs: list[QueryState], stats: dict,
                     records: dict | None) -> None:

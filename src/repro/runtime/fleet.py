@@ -105,6 +105,15 @@ class ShardedServingEngine(ServingEngine):
                                      owned_frames=0, query_rounds=0)
                              for w in self._all_workers}
         self.rebalances = 0
+        # transport dead-peer signal: a fetch whose retry budget exhausts
+        # mid-round re-homes the gallery IMMEDIATELY (so the blocked fetch
+        # can retry against the new owner) and defers the full mesh
+        # scale-down to the end of the tick (the mesh must not shrink while
+        # a round's shard_map dispatch is in flight)
+        self._pending_loss: list[str] = []
+        tr = getattr(self.gallery, "transport", None)
+        if tr is not None:
+            tr.on_dead = self._on_transport_dead
         self._refresh_mesh()
 
     # -- the gallery plane -------------------------------------------------
@@ -116,8 +125,14 @@ class ShardedServingEngine(ServingEngine):
         for itself) — what ``gallery_sweep`` compares against."""
         if self.cfg.gallery in ("auto", "sharded"):
             return ShardedGalleryStore(self.C, self.cfg.retention,
-                                       self._all_workers, self._device_of)
+                                       self._all_workers, self._device_of,
+                                       transport=self.cfg.transport)
         if self.cfg.gallery == "local":
+            if self.cfg.transport is not None:
+                raise ValueError(
+                    "transport= requires the sharded gallery "
+                    "(gallery='auto'/'sharded'): the replicated-local "
+                    "baseline has no remote owners to fetch from")
             return LocalGalleryStore(self.C, self.cfg.retention)
         raise ValueError(f"unknown gallery mode {self.cfg.gallery!r} "
                          f"(expected 'auto', 'local' or 'sharded')")
@@ -206,6 +221,11 @@ class ShardedServingEngine(ServingEngine):
             raise RuntimeError("cannot lose the last worker of the fleet")
         self._workers.remove(w)
         self._refresh_mesh()
+        tr = getattr(self.gallery, "transport", None)
+        if tr is not None:
+            # in-flight fetches (prefetch handles included) to the lost
+            # worker now fail fast with PeerDeadError instead of timing out
+            tr.mark_dead(w)
         if isinstance(self.gallery, ShardedGalleryStore):
             self.gallery.rehome(w, list(self._workers))
         orphans = sorted(qid for qid, pw in self._placement.items() if pw == w)
@@ -222,6 +242,37 @@ class ShardedServingEngine(ServingEngine):
                     self._live_load[tw] += 1
         self.rebalances += 1
         return orphans
+
+    def _on_transport_dead(self, w: str) -> None:
+        """The transport's dead-peer signal: a fetch to ``w`` exhausted its
+        retry budget.  Mid-round the mesh cannot shrink (a shard_map
+        dispatch may be in flight), but the gallery CAN re-home immediately
+        — ownership remapping touches no mesh state, and it is exactly what
+        lets the blocked fetch retry against the block's new owner instead
+        of failing the round.  The full scale-down (mesh shrink + orphan
+        re-scatter) runs at the end of the tick."""
+        if w not in self._workers or len(self._workers) == 1:
+            return
+        if self.monitor is not None and w in self.monitor.workers:
+            self.monitor.quarantine(w)
+        if self._in_round:
+            if w not in self._pending_loss:
+                self._pending_loss.append(w)
+                self.gallery.rehome(
+                    w, [x for x in self._workers if x != w])
+        else:
+            self.lose_worker(w)
+
+    def tick(self, record_trace: list | None = None) -> dict:
+        stats = super().tick(record_trace)
+        # drain transport-discovered worker deaths: the gallery already
+        # re-homed mid-round; now the mesh shrinks and queries re-scatter
+        # (lose_worker's own rehome is a no-op — ownership moved already)
+        while self._pending_loss:
+            w = self._pending_loss.pop(0)
+            if w in self._workers and len(self._workers) > 1:
+                self.lose_worker(w)
+        return stats
 
     def poll_health(self) -> list[str]:
         """Drive elastic scale-down from the HeartbeatMonitor: dead workers
@@ -338,7 +389,17 @@ class ShardedServingEngine(ServingEngine):
         slice of the fleet-global dedup set; sums to the engine's
         ``unique_frames`` when the gallery is sharded)."""
         live = set(self._workers)
-        return [dict(worker=w, alive=w in live,
+        rows = [dict(worker=w, alive=w in live,
                      queries=self._load(w) if w in live else 0,
                      **self._shard_stats[w])
                 for w in self._all_workers]
+        if getattr(self.gallery, "transport", None) is not None:
+            # fetch-plane traffic per owner peer: prefetch efficiency and
+            # fault pressure are observable per worker
+            per_w = self.gallery.per_worker_report()
+            for row in rows:
+                st = per_w[row["worker"]]
+                row["remote_fetches"] = st["remote_fetches"]
+                row["retries"] = st["retries"]
+                row["timeouts"] = st["timeouts"]
+        return rows

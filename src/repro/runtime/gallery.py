@@ -35,6 +35,8 @@ from typing import Any
 
 import numpy as np
 
+from repro.runtime.transport import LocalFetchHandle, PeerDeadError
+
 
 def pow2(n: int) -> int:
     """Smallest power of two >= n (>= 1) — the shared padding rule for jit
@@ -73,6 +75,8 @@ class GalleryStore:
         self.evictions = 0   # cached blocks dropped (horizon or frame-evict)
         self.puts = 0        # blocks accepted
         self.rejected = 0    # puts refused (behind the retention horizon)
+        self.prefetch_hits = 0    # blocks served from the prefetch buffer
+        self.prefetch_wasted = 0  # prefetched blocks discarded (misspeculation)
 
     # -- retention bookkeeping (FrameStore-identical) ----------------------
     def _horizon(self, cam: int) -> int:
@@ -115,6 +119,31 @@ class GalleryStore:
             self.hits += 1
         return emb
 
+    def cached(self, cam: int, t: int) -> bool:
+        """Whether a retained block for (cam, t) is resident right now —
+        the prefetch plane's validity check, no counters tick."""
+        return t >= self._horizon(cam) and self._has(cam, t)
+
+    def fetch_async(self, cam: int, t: int):
+        """Issue an async fetch for a CACHED (cam, t) block: a handle for
+        ``wait_fetch``, or None when the block is uncached / behind the
+        horizon.  No hit/miss counters tick at issue time — the consumer
+        accounts at consume time (``PrefetchPipeline``), so speculation
+        never skews the cache statistics."""
+        if t < self._horizon(cam) or not self._has(cam, t):
+            return None
+        return self._fetch_async(cam, t)
+
+    def wait_fetch(self, handle) -> Any:
+        """Deliver an async fetch.  May return None (the block vanished
+        between issue and wait) or raise ``PeerDeadError`` (remote owner
+        lost mid-fetch); the caller falls back to the blocking path."""
+        if isinstance(handle, LocalFetchHandle):
+            if handle.t < self._horizon(handle.cam):
+                return None
+            return self._fetch(handle.cam, handle.t)
+        raise TypeError(f"unknown fetch handle {handle!r}")
+
     def drop(self, cam: int, t: int) -> bool:
         """Remove one key (frame-eviction driven: ``FrameStore`` calls this
         for every frame it evicts so embeddings never outlive frames).  The
@@ -137,6 +166,12 @@ class GalleryStore:
     def _has(self, cam: int, t: int) -> bool:
         raise NotImplementedError
 
+    def _fetch_async(self, cam: int, t: int) -> Any:
+        """Backend async fetch for a known-resident key.  The base path is
+        the degenerate immediate handle (re-reads the store at wait time);
+        a transport-backed store returns a real in-flight handle."""
+        return LocalFetchHandle(cam, t)
+
     # -- accounting --------------------------------------------------------
     def cached_embeddings(self) -> int:
         raise NotImplementedError
@@ -145,10 +180,15 @@ class GalleryStore:
         raise NotImplementedError
 
     def counters(self) -> dict:
+        # transport-era keys are zeros here; a transport-backed store
+        # overrides them with the live fetch-plane stats
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions, puts=self.puts,
                     rejected=self.rejected, cached=self.cached_embeddings(),
-                    bytes=self.memory_bytes())
+                    bytes=self.memory_bytes(),
+                    prefetch_hits=self.prefetch_hits,
+                    prefetch_wasted=self.prefetch_wasted,
+                    remote_fetches=0, retries=0, timeouts=0)
 
 
 class LocalGalleryStore(GalleryStore):
@@ -194,12 +234,20 @@ class ShardedGalleryStore(GalleryStore):
     Blocks must be numpy arrays (the engines' (n, D) float32 embedding
     batches); values round-trip the device bit-exactly, which is what keeps
     the sharded-gallery fleet trace-identical to the single engine.
+
+    With a ``transport`` (``runtime.transport``), every fetch of an
+    owner-resident block goes through the fetch plane addressed to the
+    block's owner peer — in-proc that is a zero-copy read, fake-RPC it
+    pays injected latency and may retry/time out.  A ``PeerDeadError``
+    during a blocking fetch re-resolves ownership: if the dead-peer signal
+    re-homed the camera (the fleet's ``on_dead`` wiring), the fetch retries
+    against the block's new owner; otherwise it surfaces.
     """
 
     kind = "sharded"
 
     def __init__(self, n_cams: int, retention: int, workers: list[str],
-                 device_of: dict[str, Any]):
+                 device_of: dict[str, Any], transport: Any = None):
         super().__init__(n_cams, retention)
         if not workers:
             raise ValueError("sharded gallery needs at least one worker")
@@ -212,6 +260,7 @@ class ShardedGalleryStore(GalleryStore):
         # (cam, t) -> (device-resident padded block, valid row count)
         self._blocks: dict[tuple[int, int], tuple[Any, int]] = {}
         self.rehomed_blocks = 0
+        self.transport = transport
 
     def owner_of(self, cam: int) -> str:
         return self._owner[cam]
@@ -228,12 +277,39 @@ class ShardedGalleryStore(GalleryStore):
         self._blocks[(cam, t)] = (
             jax.device_put(emb, self._device_of[self._owner[cam]]), n)
 
-    def _fetch(self, cam, t):
-        blk = self._blocks.get((cam, t))
-        if blk is None:
-            return None
+    @staticmethod
+    def _read_block(blk):
         arr, n = blk
         return np.asarray(arr)[:n]
+
+    def _fetch(self, cam, t):
+        while True:
+            blk = self._blocks.get((cam, t))
+            if blk is None:
+                return None
+            if self.transport is None:
+                return self._read_block(blk)
+            owner = self._owner[cam]
+            try:
+                return self.transport.fetch(owner, (cam, t),
+                                            lambda b=blk: self._read_block(b))
+            except PeerDeadError:
+                if self._owner[cam] == owner:
+                    raise          # nobody re-homed the camera: surface it
+                # the dead-peer signal re-homed it mid-fetch — retry against
+                # the new owner (the block moved with the camera)
+
+    def _fetch_async(self, cam, t):
+        if self.transport is None:
+            return super()._fetch_async(cam, t)
+        blk = self._blocks[(cam, t)]
+        return self.transport.fetch_async(self._owner[cam], (cam, t),
+                                          lambda: self._read_block(blk))
+
+    def wait_fetch(self, handle):
+        if isinstance(handle, LocalFetchHandle):
+            return super().wait_fetch(handle)
+        return self.transport.wait(handle)
 
     def _drop(self, cam, t):
         return self._blocks.pop((cam, t), None) is not None
@@ -269,12 +345,17 @@ class ShardedGalleryStore(GalleryStore):
         return sum(arr.nbytes for arr, _ in self._blocks.values())
 
     def counters(self):
-        return dict(super().counters(), rehomed_blocks=self.rehomed_blocks)
+        c = dict(super().counters(), rehomed_blocks=self.rehomed_blocks)
+        if self.transport is not None:
+            c.update(self.transport.counters())
+        return c
 
     def per_worker_report(self) -> dict[str, dict]:
         """Owner-resident cache memory, per worker: cameras owned, resident
-        blocks/rows/bytes.  Lost workers report zeros after ``rehome``."""
-        rep = {w: dict(cameras=0, blocks=0, rows=0, bytes=0)
+        blocks/rows/bytes, plus the fetch plane's per-peer traffic when a
+        transport is attached.  Lost workers report zeros after ``rehome``."""
+        rep = {w: dict(cameras=0, blocks=0, rows=0, bytes=0,
+                       remote_fetches=0, retries=0, timeouts=0)
                for w in self._device_of}
         for w in self._owner.values():
             rep[w]["cameras"] += 1
@@ -283,6 +364,12 @@ class ShardedGalleryStore(GalleryStore):
             r["blocks"] += 1
             r["rows"] += n
             r["bytes"] += arr.nbytes
+        if self.transport is not None:
+            for w, st in self.transport.peer_counters().items():
+                if w in rep:
+                    rep[w]["remote_fetches"] = st["fetches"]
+                    rep[w]["retries"] = st["retries"]
+                    rep[w]["timeouts"] = st["timeouts"]
         return rep
 
 

@@ -88,6 +88,23 @@ class FrameStore:
             return False
         return self.gallery.put(cam, t, emb)
 
+    def emb_cached(self, cam: int, t: int) -> bool:
+        """Whether a retained embedding block for (cam, t) is resident —
+        the prefetch plane's issue/consume validity check (no counters)."""
+        return t >= self._horizon(cam) and self.gallery.cached(cam, t)
+
+    def fetch_emb_async(self, cam: int, t: int):
+        """Issue an async fetch for a cached (cam, t) embedding block: a
+        handle for ``wait_emb``, or None when uncached / behind the frame
+        horizon.  Counter-neutral at issue time — the prefetch consumer
+        accounts hits and misspeculation exactly."""
+        if t < self._horizon(cam):
+            return None
+        return self.gallery.fetch_async(cam, t)
+
+    def wait_emb(self, handle) -> Any:
+        return self.gallery.wait_fetch(handle)
+
     def get_emb(self, cam: int, t: int) -> Any:
         """Cached embeddings for (cam, t), or None (uncached / evicted).
         The frame horizon is re-checked here too: an out-of-order append

@@ -72,24 +72,32 @@ def make_drifted_world(n_entities=80, t_shift=150, horizon=420, seed=0,
 
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                         lose_worker=0, extra_ticks=500, gallery="auto",
-                        topk=1, embed_fn=None, recalibrate=None):
+                        topk=1, embed_fn=None, recalibrate=None,
+                        transport=None, prefetch=False):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
     the fleet rebalances; the single engine ignores it.  ``gallery`` picks
     the embedding plane ("auto": local for one engine, fleet-shared sharded
     store for the fleet).  ``recalibrate`` (a RecalibrationPolicy) attaches
-    the §6 drift loop, re-profiling from the world's ground-truth visits."""
+    the §6 drift loop, re-profiling from the world's ground-truth visits.
+    ``transport`` routes the fleet's gallery fetches through a
+    ``runtime.transport.Transport`` — pass a zero-arg FACTORY (callable or
+    class) so every drive gets fresh transport state; ``prefetch`` turns on
+    the double-buffered speculative fetch pipeline."""
     from repro import api as rexcam
 
     vis, gal, feats = world["vis"], world["gal"], world["feats"]
     q_vids = world["q_vids"]
+    if callable(transport):
+        transport = transport()
     eng = rexcam.serve(world["model"],
                        embed_fn=embed_fn if embed_fn is not None
                        else lambda x: x,
                        policy=policy,
                        geo_adj=world["net"].geo_adjacent, shards=shards,
                        gallery=gallery, topk=topk, recalibrate=recalibrate,
+                       transport=transport, prefetch=prefetch,
                        visit_source=rexcam.visits_window_source(vis)
                        if recalibrate is not None else None)
     t0 = int(vis.t_out[q_vids].min())
@@ -134,14 +142,18 @@ def trace_key(trace):
 
 def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
                                  lose_worker=0, single=None, gallery="auto",
-                                 recalibrate=None):
+                                 recalibrate=None, transport=None,
+                                 prefetch=False):
     """THE differential assertion: the sharded fleet's rounds are
     bit-identical to the single-process engine's — admissions, match
     indices/values (tie-breaks included), rescue attribution, model-epoch
     boundaries (recalibration swaps land on the same round), and both
     cost conventions.  Returns (fleet engine, single (trace, summary)) so
     callers can layer fleet-specific asserts on top; pass ``single`` (a
-    prior return) to reuse the reference run across shard counts."""
+    prior return) to reuse the reference run across shard counts.
+    ``transport``/``prefetch`` apply to the FLEET run only (the reference
+    single engine has no remote owners) — transport must never change what
+    is ranked, only when it arrives, so the assertion is unchanged."""
     from repro.runtime.gallery import ShardedGalleryStore
 
     if single is None:
@@ -151,7 +163,8 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
     ref_trace, ref_sum = single
     eng, fl_trace, fl_sum = drive_serving_trace(
         world, policy, shards=shards, lose_at=lose_at,
-        lose_worker=lose_worker, gallery=gallery, recalibrate=recalibrate)
+        lose_worker=lose_worker, gallery=gallery, recalibrate=recalibrate,
+        transport=transport, prefetch=prefetch)
     assert trace_key(fl_trace) == trace_key(ref_trace), \
         f"fleet (shards={shards}) trace diverged from the single engine"
     assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
@@ -496,6 +509,148 @@ def fleet_property_suite(max_examples=6):
             world, policy, shards, single=singles.get(key))
 
     prop()
+
+
+def _fake_rpc_factory(profiles=None, **kw):
+    """Zero-arg factory for a VIRTUAL-clock ``FakeRpcTransport`` — each
+    drive gets fresh transport state and injected latency costs no real
+    wall time.  ``profiles`` maps peer -> FaultProfile kwargs."""
+    def make():
+        from repro.runtime.transport import (FakeRpcTransport, FaultProfile,
+                                             manual_clock)
+        clock, sleep = manual_clock()
+        faults = {w: FaultProfile(**p) for w, p in (profiles or {}).items()}
+        kw2 = dict(kw)
+        if isinstance(kw2.get("default"), dict):
+            kw2["default"] = FaultProfile(**kw2["default"])
+        return FakeRpcTransport(faults=faults, clock=clock, sleep=sleep, **kw2)
+    return make
+
+
+def fleet_case_transport_shard_counts(shard_counts=(1, 2, 4, 8), n_queries=5,
+                                      seed=0):
+    """The transport differential across the whole shard matrix: a fake-RPC
+    fleet with per-peer latency+jitter AND the prefetch pipeline on stays
+    bit-identical to the single engine for shards {1, 2, 4, 8}; the named
+    in-proc transport (with and without prefetch) likewise.  Transport must
+    change WHEN blocks arrive, never WHAT is ranked."""
+    from repro.core.policy import SearchPolicy
+    from repro.runtime.transport import InProcTransport
+
+    _require_devices(max(shard_counts))
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    fake = _fake_rpc_factory(default=dict(latency=.01, jitter=.005))
+    single = None
+    for shards in shard_counts:
+        eng, single = assert_fleet_trace_identical(
+            world, policy, shards, single=single, transport=fake,
+            prefetch=True)
+        c = eng.gallery.counters()
+        assert c["remote_fetches"] > 0, "no fetch ever crossed the transport"
+        assert c["dead_peers"] == 0 and c["timeouts"] == 0
+        # cache-hit parity: every hit was served through the fetch plane,
+        # either prefetched or as the blocking fallback
+        assert c["prefetch_hits"] <= eng.cache_hits
+    eng, _ = assert_fleet_trace_identical(world, policy, 4, single=single,
+                                          transport=InProcTransport,
+                                          prefetch=True)
+    assert eng.gallery.counters()["remote_fetches"] > 0
+    assert_fleet_trace_identical(world, policy, 4, single=single,
+                                 transport=InProcTransport, prefetch=False)
+
+
+def fleet_case_transport_faults(shards=4, n_queries=5, seed=0):
+    """The fault-injection matrix, each configuration trace-identical to
+    the single engine: drop+retry (lost attempts re-issue after
+    timeout+backoff), reorder (responses overtake each other), and blocking
+    heavy latency with no prefetch (pure slowdown)."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    single = None
+    cases = [
+        ("drop+retry",
+         _fake_rpc_factory(default=dict(latency=.01, drop=.3),
+                           timeout=.05, max_retries=6), True),
+        ("reorder",
+         _fake_rpc_factory(default=dict(latency=.01, jitter=.01, reorder=.5,
+                                        reorder_delay=.2),
+                           timeout=1.0), True),
+        ("blocking-latency",
+         _fake_rpc_factory(default=dict(latency=.05)), False),
+    ]
+    for name, factory, prefetch in cases:
+        eng, single = assert_fleet_trace_identical(
+            world, policy, shards, single=single, transport=factory,
+            prefetch=prefetch)
+        c = eng.gallery.counters()
+        assert c["remote_fetches"] > 0, f"{name}: transport never used"
+        assert c["dead_peers"] == 0, f"{name}: a peer unexpectedly died"
+        if name == "drop+retry":
+            assert c["retries"] > 0 and c["timeouts"] > 0, \
+                "drop=.3 produced no retries — fault injection inert"
+        # per-worker fetch traffic is surfaced in the shard report
+        rep = eng.shard_report()
+        assert sum(r["remote_fetches"] for r in rep) == c["remote_fetches"]
+
+
+def fleet_case_transport_timeout_rehome(shards=4, n_queries=6, seed=1,
+                                        warmup=None):
+    """timeout -> dead-peer -> rehome, end to end: one peer drops EVERY
+    attempt, so the first fetch against it exhausts the retry budget
+    mid-round, fires ``on_dead``, the gallery re-homes immediately (the
+    blocked fetch retries against the new owner and succeeds), and the
+    fleet scales down at the end of the tick — trace stays bit-identical."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    victim = "w1"
+    factory = _fake_rpc_factory({victim: dict(drop=1.0)},
+                                timeout=.05, max_retries=2, backoff=.01)
+    eng, _ = assert_fleet_trace_identical(world, policy, shards,
+                                          transport=factory, prefetch=False)
+    c = eng.gallery.counters()
+    assert c["dead_peers"] == 1, \
+        f"the all-drop peer never died (counters: {c})"
+    assert c["timeouts"] >= 3 and c["retries"] >= 2
+    assert victim not in eng._workers, "dead peer still in the fleet"
+    assert eng.n_shards == shards - 1
+    assert victim not in set(eng.gallery._owner.values()), \
+        "dead peer still owns cameras"
+    assert eng.gallery.rehomed_blocks > 0 or c["remote_fetches"] > 0
+
+
+def fleet_case_transport_midfetch_loss(shards=4, lose_at=50, lose_worker=1,
+                                       n_queries=7, seed=1):
+    """Mid-fetch worker loss: with prefetch handles in flight, the fleet
+    loses a worker (``lose_worker`` marks the peer dead on the transport) —
+    in-flight handles to it fail fast with ``PeerDeadError`` at consume
+    time and the round falls back to a blocking fetch from the re-homed
+    owner.  Trace stays bit-identical; waste is exactly accounted."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(shards)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    factory = _fake_rpc_factory(default=dict(latency=.01, jitter=.005))
+    eng, _ = assert_fleet_trace_identical(
+        world, policy, shards, lose_at=lose_at, lose_worker=lose_worker,
+        transport=factory, prefetch=True)
+    tr = eng.gallery.transport
+    assert tr.is_dead(f"w{lose_worker}"), \
+        "lose_worker did not mark the peer dead on the transport"
+    c = eng.gallery.counters()
+    assert c["prefetch_hits"] > 0, "prefetch never served a block"
+    assert f"w{lose_worker}" not in set(eng.gallery._owner.values())
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,412 @@
+"""The transport & prefetch plane (runtime/transport.py).
+
+Two layers of coverage:
+
+  * a FAKE-CLOCK unit suite for the fetch-plane arithmetic — latency/jitter
+    delivery windows, drop -> timeout -> retry-with-backoff schedules,
+    dead-peer declaration and the ``on_dead`` signal, reorder, determinism,
+    and the ``PrefetchPipeline``'s misspeculation accounting.  Injected
+    latency advances a virtual clock (``manual_clock``), so seconds of
+    modelled RTT cost microseconds of test time;
+  * the fleet DIFFERENTIAL matrix on >= 8 fake CPU devices (in-process
+    when available, else the flag-setting subprocess — same split as
+    ``test_sharded_engine.py``): every transport/fault configuration must
+    be TRACE-IDENTICAL to the single engine, because transport may only
+    change WHEN a gallery block arrives, never WHAT is ranked.
+"""
+import numpy as np
+import pytest
+
+from test_sharded_engine import _fleet_case
+
+
+def _fake(faults=None, **kw):
+    from repro.runtime.transport import FakeRpcTransport, manual_clock
+
+    clock, sleep = manual_clock()
+    tr = FakeRpcTransport(faults or {}, clock=clock, sleep=sleep, **kw)
+    return tr, clock
+
+
+# ---------------------------------------------------------------------------
+# fake-clock unit suite: delivery / timeout / retry / backoff arithmetic
+# ---------------------------------------------------------------------------
+
+def test_inproc_transport_is_immediate_and_zero_copy():
+    from repro.runtime.transport import InProcTransport
+
+    tr = InProcTransport()
+    calls = []
+
+    def payload():
+        calls.append(1)
+        return "block"
+
+    h = tr.fetch_async("w0", (2, 5), payload)
+    assert calls == [], "in-proc payload must be lazy (zero-copy at wait)"
+    assert tr.wait(h) == "block"
+    assert calls == [1]
+    assert tr.counters() == dict(remote_fetches=1, retries=0, timeouts=0,
+                                 dead_peers=0)
+    assert tr.peer_counters()["w0"]["fetches"] == 1
+
+
+def test_latency_jitter_delivery_window():
+    from repro.runtime.transport import FaultProfile
+
+    tr, clock = _fake(default=FaultProfile(latency=.2, jitter=.1),
+                      timeout=1.0)
+    t0 = clock()
+    assert tr.fetch("w0", (0, 1), lambda: 42) == 42
+    dt = clock() - t0
+    assert .2 <= dt < .3, f"delivery at {dt}, expected latency+[0,jitter)"
+    assert tr.counters()["retries"] == 0
+
+
+def test_fake_rpc_snapshots_payload_at_issue():
+    """serialize-at-send: the RPC payload is what the owner held at issue
+    time, even if the block mutates before the response arrives."""
+    from repro.runtime.transport import FaultProfile
+
+    tr, _ = _fake(default=FaultProfile(latency=.1), timeout=1.0)
+    cell = ["v1"]
+    h = tr.fetch_async("w0", (0, 1), lambda: cell[0])
+    cell[0] = "v2"
+    assert tr.wait(h) == "v1"
+
+
+def test_drop_all_exhausts_retry_budget_with_exact_backoff():
+    """drop=1.0: attempt k waits out the timeout then backs off
+    backoff * 2**k; after max_retries re-issues the final timeout declares
+    the peer dead, fires on_dead once, and raises PeerDeadError."""
+    from repro.runtime.transport import FaultProfile, PeerDeadError
+
+    dead = []
+    tr, clock = _fake({"w1": FaultProfile(drop=1.0)}, timeout=1.0,
+                      max_retries=2, backoff=.5, on_dead=dead.append)
+    h = tr.fetch_async("w1", (3, 7), lambda: "blk")
+    with pytest.raises(PeerDeadError):
+        tr.wait(h)
+    # attempt 0: timeout 1.0, backoff .5 | attempt 1: 1.0, 1.0 | attempt 2:
+    # final timeout 1.0 -> dead at 4.5 exactly
+    assert clock() == pytest.approx((1.0 + .5) + (1.0 + 1.0) + 1.0)
+    assert tr.counters() == dict(remote_fetches=1, retries=2, timeouts=3,
+                                 dead_peers=1)
+    assert dead == ["w1"], "on_dead must fire exactly once"
+    # once dead, a new fetch fails FAST at issue (no timeout burned)
+    t_before = clock()
+    with pytest.raises(PeerDeadError):
+        tr.fetch_async("w1", (3, 8), lambda: "blk")
+    assert clock() == t_before
+
+
+def test_latency_past_deadline_counts_as_timeout():
+    """A response slower than the timeout is indistinguishable from a drop:
+    the attempt times out and re-issues."""
+    from repro.runtime.transport import FaultProfile, PeerDeadError
+
+    tr, clock = _fake({"w0": FaultProfile(latency=5.0)}, timeout=1.0,
+                      max_retries=1, backoff=.25)
+    with pytest.raises(PeerDeadError):
+        tr.fetch("w0", (0, 0), lambda: 1)
+    assert clock() == pytest.approx((1.0 + .25) + 1.0)
+    assert tr.counters()["timeouts"] == 2
+
+
+def test_drop_some_eventually_delivers():
+    """drop < 1: some seed has a dropped first attempt and a delivered
+    retry — delivery time is exactly timeout + backoff + latency, and the
+    payload survives the retry."""
+    from repro.runtime.transport import FakeRpcTransport, FaultProfile, \
+        manual_clock, PeerDeadError
+
+    prof = FaultProfile(latency=.1, drop=.5)
+    for seed in range(64):
+        clock, sleep = manual_clock()
+        tr = FakeRpcTransport(default=prof, timeout=1.0, max_retries=3,
+                              backoff=.25, seed=seed, clock=clock,
+                              sleep=sleep)
+        try:
+            v = tr.fetch("w0", (1, 2), lambda: "blk")
+        except PeerDeadError:       # ~6% of seeds drop all 4 attempts
+            continue
+        assert v == "blk"
+        if tr.counters()["retries"] == 1:
+            assert clock() == pytest.approx(1.0 + .25 + .1)
+            return
+    pytest.fail("no seed in [0, 64) dropped exactly the first attempt")
+
+
+def test_reorder_inverts_delivery_order_not_payloads():
+    """With reorder probability, later-issued fetches can resolve earlier —
+    responses overtake each other — but every handle still delivers ITS
+    payload.  Deterministic: a fixed seed yields a fixed inversion set."""
+    from repro.runtime.transport import FaultProfile
+
+    tr, clock = _fake(default=FaultProfile(latency=.1, reorder=.5,
+                                           reorder_delay=2.0),
+                      timeout=5.0)
+    keys = [(0, t) for t in range(12)]
+    handles = [tr.fetch_async("w0", k, lambda k=k: k) for k in keys]
+    ready = [tr._schedule(h.peer, h.key, h.issued_at).ready for h in handles]
+    assert any(ready[i] > ready[j] for i in range(len(keys))
+               for j in range(i + 1, len(keys))), \
+        "reorder=.5 never inverted a pair"
+    # wait in REVERSE issue order: payloads stay correct, clock is the max
+    for h, k in zip(reversed(handles), reversed(keys)):
+        assert tr.wait(h) == k
+    assert clock() == pytest.approx(max(ready))
+
+
+def test_schedule_is_deterministic_across_instances():
+    """(seed, peer, key, attempt) fully determines the fault schedule: two
+    transports with the same seed replay identical clock trajectories."""
+    from repro.runtime.transport import FaultProfile
+
+    times = []
+    for _ in range(2):
+        tr, clock = _fake(default=FaultProfile(latency=.2, jitter=.3,
+                                               drop=.2),
+                          timeout=1.0, max_retries=4)
+        for key in [(0, 1), (1, 5), (3, 2)]:
+            tr.fetch("w0", key, lambda: 0)
+        times.append(clock())
+    assert times[0] == times[1]
+
+
+def test_mark_dead_fails_inflight_handles_fast():
+    """External death (the fleet lost the worker): in-flight handles raise
+    PeerDeadError at wait WITHOUT burning their timeout — mid-fetch loss."""
+    from repro.runtime.transport import FaultProfile, PeerDeadError
+
+    dead = []
+    tr, clock = _fake(default=FaultProfile(latency=.5), timeout=1.0,
+                      on_dead=dead.append)
+    h = tr.fetch_async("w2", (4, 4), lambda: "blk")
+    tr.mark_dead("w2")
+    t0 = clock()
+    with pytest.raises(PeerDeadError):
+        tr.wait(h)
+    assert clock() == t0, "dead-peer wait must not sleep"
+    assert dead == [], "mark_dead is the external direction: no on_dead echo"
+    assert tr.counters()["dead_peers"] == 1
+
+
+def test_timeout_must_be_positive():
+    from repro.runtime.transport import FakeRpcTransport
+
+    with pytest.raises(ValueError):
+        FakeRpcTransport(timeout=0.0)
+
+
+# ---------------------------------------------------------------------------
+# store-level: the sharded gallery through the fetch plane
+# ---------------------------------------------------------------------------
+
+def _sharded_store(transport=None, workers=("w0", "w1"), n_cams=8,
+                   retention=100):
+    import jax
+    from repro.runtime.gallery import ShardedGalleryStore
+
+    dev = jax.devices()[0]
+    return ShardedGalleryStore(n_cams, retention, list(workers),
+                               {w: dev for w in workers},
+                               transport=transport)
+
+
+def test_sharded_store_fetch_roundtrips_through_transport():
+    """A transport-backed get returns the block bit-exactly, pays the
+    injected latency, and ticks remote_fetches against the owner peer."""
+    from repro.runtime.transport import FaultProfile
+
+    tr, clock = _fake(default=FaultProfile(latency=.05), timeout=1.0)
+    store = _sharded_store(transport=tr)
+    blk = np.arange(12, dtype=np.float32).reshape(3, 4)
+    cam = 2
+    assert store.put(cam, 10, blk)
+    t0 = clock()
+    out = store.get(cam, 10)
+    np.testing.assert_array_equal(out, blk)
+    assert clock() - t0 == pytest.approx(.05)
+    owner = store.owner_of(cam)
+    assert tr.peer_counters()[owner]["fetches"] == 1
+    c = store.counters()
+    assert c["remote_fetches"] == 1 and c["hits"] == 1
+    rep = store.per_worker_report()
+    assert rep[owner]["remote_fetches"] == 1
+
+
+def test_sharded_store_dead_owner_rehomes_and_fetch_retries():
+    """End-to-end dead-peer path at the store level: the owner drops every
+    attempt, on_dead re-homes its cameras, and the SAME blocking get
+    retries against the new owner and succeeds — the caller never sees the
+    death."""
+    from repro.runtime.transport import FakeRpcTransport, FaultProfile, \
+        manual_clock
+
+    clock, sleep = manual_clock()
+    holder = {}
+
+    def on_dead(peer):
+        survivors = [w for w in ("w0", "w1") if w != peer]
+        holder["store"].rehome(peer, survivors)
+
+    tr = FakeRpcTransport(clock=clock, sleep=sleep, timeout=.05,
+                          max_retries=1, backoff=.01, on_dead=on_dead)
+    store = holder["store"] = _sharded_store(transport=tr)
+    victim_cam = 0
+    victim = store.owner_of(victim_cam)
+    tr.faults[victim] = FaultProfile(drop=1.0)
+    blk = np.ones((2, 4), np.float32)
+    assert store.put(victim_cam, 3, blk)
+    out = store.get(victim_cam, 3)          # blocks, dies, rehomes, retries
+    np.testing.assert_array_equal(out, blk)
+    assert store.counters()["dead_peers"] == 1
+    assert store.owner_of(victim_cam) != victim
+    assert store.rehomed_blocks == 1
+
+
+def test_sharded_store_dead_owner_without_rehome_surfaces():
+    """No on_dead wiring (nobody re-homes): the failure surfaces instead of
+    spinning."""
+    from repro.runtime.transport import FakeRpcTransport, FaultProfile, \
+        manual_clock, PeerDeadError
+
+    clock, sleep = manual_clock()
+    tr = FakeRpcTransport(clock=clock, sleep=sleep, timeout=.05,
+                          max_retries=1, backoff=.01)
+    store = _sharded_store(transport=tr)
+    cam = 0
+    tr.faults[store.owner_of(cam)] = FaultProfile(drop=1.0)
+    assert store.put(cam, 3, np.ones((2, 4), np.float32))
+    with pytest.raises(PeerDeadError):
+        store.get(cam, 3)
+
+
+# ---------------------------------------------------------------------------
+# PrefetchPipeline: speculation accounting
+# ---------------------------------------------------------------------------
+
+def _frame_store(n_cams=4, retention=10):
+    from repro.runtime.stream_store import FrameStore
+
+    fs = FrameStore(n_cams, retention)
+    return fs
+
+
+def test_prefetch_hit_serves_block_and_accounts():
+    from repro.runtime.transport import PrefetchPipeline
+
+    fs = _frame_store()
+    pipe = PrefetchPipeline(fs)
+    blk = np.ones((2, 3), np.float32)
+    fs.append(1, 5, blk)
+    assert fs.put_emb(1, 5, blk)
+    assert pipe.issue({(1, 5), (1, 99)}) == 1   # only the cached key issues
+    assert pipe.in_flight == 1
+    out = pipe.consume(1, 5)
+    np.testing.assert_array_equal(out, blk)
+    assert fs.gallery.prefetch_hits == 1
+    assert fs.gallery.prefetch_wasted == 0
+    assert pipe.in_flight == 0
+    assert pipe.consume(1, 5) is None           # consumed: gone
+
+
+def test_prefetch_eviction_between_issue_and_consume_is_wasted():
+    """A block evicted after issue must NOT be served (the blocking path
+    would miss it — serving it would change the trace): consume returns
+    None and accounts the handle as wasted."""
+    from repro.runtime.transport import PrefetchPipeline
+
+    fs = _frame_store(retention=5)
+    pipe = PrefetchPipeline(fs)
+    blk = np.ones((2, 3), np.float32)
+    fs.append(0, 0, blk)
+    assert fs.put_emb(0, 0, blk)
+    assert pipe.issue({(0, 0)}) == 1
+    fs.append(0, 20, blk)                       # pushes (0,0) past retention
+    assert pipe.consume(0, 0) is None
+    assert fs.gallery.prefetch_wasted == 1
+    assert fs.gallery.prefetch_hits == 0
+
+
+def test_prefetch_sweep_drops_stale_handles():
+    from repro.runtime.transport import PrefetchPipeline
+
+    fs = _frame_store(retention=5)
+    pipe = PrefetchPipeline(fs)
+    blk = np.ones((1, 3), np.float32)
+    fs.append(0, 0, blk)
+    assert fs.put_emb(0, 0, blk)
+    pipe.issue({(0, 0)})
+    fs.append(0, 20, blk)
+    assert pipe.sweep() == 1
+    assert pipe.in_flight == 0
+    assert fs.gallery.prefetch_wasted == 1
+
+
+def test_counters_have_transport_era_keys_everywhere():
+    """Every GalleryStore reports the transport-era keys (zeros without a
+    transport) so reports are shape-stable across backends."""
+    from repro.runtime.gallery import LocalGalleryStore
+
+    for c in (LocalGalleryStore(4, 10).counters(),
+              _sharded_store().counters()):
+        for k in ("remote_fetches", "prefetch_hits", "prefetch_wasted",
+                  "retries", "timeouts"):
+            assert k in c and c[k] == 0, (k, c)
+
+
+def test_api_serve_transport_validation():
+    """transport= demands the sharded fleet gallery; the string shorthand
+    resolves; junk strings fail loudly."""
+    from conftest import make_serving_world
+    from repro import api as rexcam
+    from repro.runtime.transport import InProcTransport
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    with pytest.raises(ValueError):
+        rexcam.serve(world["model"], embed_fn=lambda x: x,
+                     transport=InProcTransport())          # no fleet
+    with pytest.raises(ValueError):
+        rexcam.serve(world["model"], embed_fn=lambda x: x, shards=1,
+                     transport="quic")                     # unknown name
+    with pytest.raises(ValueError):
+        rexcam.serve(world["model"], embed_fn=lambda x: x, shards=1,
+                     gallery="local", transport="inproc")  # no owners
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, shards=1,
+                       transport="inproc", prefetch=True)
+    assert eng.gallery.transport is not None
+    assert eng.gallery.transport.kind == "inproc"
+
+
+# ---------------------------------------------------------------------------
+# the fleet differential matrix on 8 fake CPU devices
+# ---------------------------------------------------------------------------
+
+def test_fleet_transport_trace_identical_across_shard_counts():
+    """Fake-RPC (latency+jitter) with prefetch, and the named in-proc
+    transport, each bit-identical to the single engine for shards
+    {1, 2, 4, 8}."""
+    _fleet_case("fleet_case_transport_shard_counts")
+
+
+def test_fleet_transport_fault_matrix():
+    """drop+retry, reorder, and blocking heavy latency: trace-identical,
+    with the retry counters proving the faults actually fired."""
+    _fleet_case("fleet_case_transport_faults")
+
+
+def test_fleet_transport_timeout_drives_rehome():
+    """An all-drop peer dies mid-round; the gallery re-homes immediately,
+    the blocked fetch retries against the new owner, and the fleet scales
+    down at the tick boundary — trace identical throughout."""
+    _fleet_case("fleet_case_transport_timeout_rehome")
+
+
+def test_fleet_transport_midfetch_worker_loss():
+    """Worker loss with prefetch handles in flight: handles to the lost
+    peer fail fast and the rounds fall back to blocking fetches from the
+    re-homed owner — trace identical, waste exactly accounted."""
+    _fleet_case("fleet_case_transport_midfetch_loss")
