@@ -147,7 +147,8 @@ def policy_sweep(scenarios=("duke", "porto130")):
 # ---------------------------------------------------------------------------
 
 def _drive_serving(sc, policy, n_queries, steps, shards=None,
-                   gallery="auto", transport=None, prefetch=False):
+                   gallery="auto", transport=None, prefetch=False,
+                   guard_steady_after=None):
     """The one engine-driving loop every serving benchmark shares: build the
     engine (fleet when ``shards``), submit the scenario's queries, replay the
     live stream tick by tick.  Returns (engine, matches, wall seconds
@@ -155,7 +156,15 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
 
     ``transport=``/``prefetch=`` pass straight through to ``rexcam.serve`` —
     the transport_sweep drives the same loop with a ``FakeRpcTransport`` so
-    its walls are comparable against every other serving row."""
+    its walls are comparable against every other serving row.
+
+    ``guard_steady_after=N`` arms a ``RecompileGuard`` over every registered
+    jit entry (plus the fleet's shard_map jits) once tick N is reached: the
+    remaining ticks are the benchmark's steady state, and a compile-cache
+    miss there (shape churn, a kwarg leaking out of the statics) raises
+    instead of silently poisoning the reported walls."""
+    from repro.analysis import RecompileGuard
+
     vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
     q_vids = sc["q_vids"][:n_queries]
     wall0 = time.perf_counter()
@@ -169,7 +178,15 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
         eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
     matches = 0
     tick_lat = []
-    for t in range(t0, min(t0 + steps, vis.horizon)):
+    guard = None
+    for step_i, t in enumerate(range(t0, min(t0 + steps, vis.horizon))):
+        if guard_steady_after is not None and step_i == guard_steady_after:
+            # each entry may mint at most ONE more signature after warmup
+            # (a genuinely new shape class, e.g. the round gallery growing
+            # past its high-water mark); per-tick churn trips immediately
+            guard = RecompileGuard.for_engine(
+                eng, max_new=1, label=f"steady after tick {step_i}")
+            guard.__enter__()
         frames = {}
         for c in range(net.n_cams):
             vids = gal[c, t][gal[c, t] >= 0]
@@ -179,6 +196,8 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
         tk0 = time.perf_counter()
         matches += eng.tick()["matches"]
         tick_lat.append(time.perf_counter() - tk0)
+    if guard is not None:
+        guard.__exit__(None, None, None)
     return eng, matches, time.perf_counter() - wall0, tick_lat
 
 
@@ -197,7 +216,8 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
         n_q = min(n_queries, len(sc["q_vids"]))
         base = None
         for pname, policy in SWEEP_POLICIES:
-            eng, matches, wall, lat = _drive_serving(sc, policy, n_q, steps)
+            eng, matches, wall, lat = _drive_serving(
+                sc, policy, n_q, steps, guard_steady_after=steps // 2)
             us = wall * 1e6 / max(n_q, 1)
             if pname == "all":
                 base = eng.admitted_steps
@@ -551,7 +571,8 @@ def transport_sweep(scenarios=("duke",), n_queries=16, steps=600, shards=4,
         _drive_serving(sc, policy, n_q, min(steps, 120), shards=shards)
 
         base, _, wall0, lat0 = _drive_serving(sc, policy, n_q, steps,
-                                              shards=shards)
+                                              shards=shards,
+                                              guard_steady_after=steps // 2)
         hits = base.cache_hits
         p50_0, p99_0 = _tick_pcts(lat0)
         # "RTT comparable to one ranking pass": the measured p50 tick
@@ -571,7 +592,8 @@ def transport_sweep(scenarios=("duke",), n_queries=16, steps=600, shards=4,
             eng, _, wall, lat = _drive_serving(sc, policy, n_q, steps,
                                                shards=shards,
                                                transport=transport,
-                                               prefetch=prefetch)
+                                               prefetch=prefetch,
+                                               guard_steady_after=steps // 2)
             assert eng.admitted_steps == base.admitted_steps, \
                 f"transport config {config} changed admitted_steps"
             assert eng.unique_frames == base.unique_frames, \

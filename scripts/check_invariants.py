@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""The static invariant gate: trace-discipline lint + jaxpr audit + Pallas
+kernel audit, as one blocking CI step.
+
+Default mode audits the tree at HEAD and exits non-zero on ANY finding:
+
+    PYTHONPATH=src python scripts/check_invariants.py
+
+Layers (select a subset with ``--only``):
+
+* ``lint``   — AST rules REX001-005 over ``src/repro`` (see
+  ``repro.analysis.lint.RULES``; suppress a deliberate exception inline
+  with ``# rex: disable=REXNNN``).
+* ``jaxpr``  — traces every registered jit entry point (engine admit/rank/
+  advance, kernel wrappers, fleet shard_map bodies) and walks the
+  ClosedJaxpr for host callbacks, f64/weak-type promotions and dynamic
+  shapes.
+* ``kernel`` — proves every Pallas grid/BlockSpec index map in bounds over
+  a ragged shape sweep and probes the (NEG_INF, -1) masked/padded-slot
+  sentinel convention in interpret mode.
+
+``--fixtures`` mode lints the planted-violation corpus under
+``tests/fixtures/analysis`` instead and exits NON-zero when — and only
+when — every ``# rex-expect: REXNNN=n`` expectation is met exactly.  CI
+runs ``! check_invariants.py --fixtures``: if a rule ever stops firing (or
+fires somewhere unexpected) the command exits 0 and the inverted gate
+fails.  ``tests/test_analysis.py`` holds the per-rule exactness tests.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+_EXPECT_RE = re.compile(r"#\s*rex-expect:\s*(REX\d+)\s*=\s*(\d+)")
+
+
+def _read_expectations(root: str) -> dict[tuple[str, str], int]:
+    """(relpath, rule) -> expected count, from # rex-expect: headers."""
+    out: dict[tuple[str, str], int] = {}
+    for dirpath, _dirs, files in os.walk(root):
+        for f in sorted(files):
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, root)
+            with open(path, encoding="utf-8") as fh:
+                for rule, n in _EXPECT_RE.findall(fh.read()):
+                    out[(rel, rule)] = out.get((rel, rule), 0) + int(n)
+    return out
+
+
+def run_fixtures() -> int:
+    from repro.analysis.lint import RULES, lint_paths
+    if not os.path.isdir(FIXTURES):
+        print(f"ERROR: fixture corpus missing at {FIXTURES}")
+        return 0          # fails the inverted CI gate
+    expected = _read_expectations(FIXTURES)
+    got: dict[tuple[str, str], int] = {}
+    for v in lint_paths([FIXTURES], rel_to=FIXTURES):
+        print(v)
+        got[(v.path, v.rule)] = got.get((v.path, v.rule), 0) + 1
+
+    ok = True
+    for key in sorted(set(expected) | set(got)):
+        e, g = expected.get(key, 0), got.get(key, 0)
+        if e != g:
+            ok = False
+            print(f"FIXTURE MISMATCH {key[0]}: {key[1]} expected {e}, "
+                  f"got {g}")
+    fired = {rule for (_p, rule) in got}
+    for rule in sorted(set(RULES) - fired):
+        ok = False
+        print(f"FIXTURE MISMATCH: rule {rule} never fired on the corpus")
+    if not ok:
+        return 0          # fails the inverted CI gate
+    print(f"fixtures OK: {len(got)} expectation group(s), every rule "
+          "demonstrated — exiting non-zero as the gate demo")
+    return 1
+
+
+def run_head(layers: list[str]) -> int:
+    findings = []
+    if "lint" in layers:
+        from repro.analysis.lint import lint_paths
+        findings += lint_paths([os.path.join(REPO, "src", "repro")],
+                               rel_to=REPO)
+    if "jaxpr" in layers:
+        from repro.analysis.jaxpr_audit import audit_jaxprs
+        findings += audit_jaxprs()
+    if "kernel" in layers:
+        from repro.analysis.kernel_audit import audit_kernels
+        findings += audit_kernels()
+    for v in findings:
+        print(v)
+    n = len(findings)
+    print(f"check_invariants: {n} finding(s) across layers "
+          f"[{', '.join(layers)}]")
+    return 1 if n else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fixtures", action="store_true",
+                    help="lint the planted-violation corpus; exits non-zero "
+                         "iff every expectation is met (CI inverts this)")
+    ap.add_argument("--only", nargs="+", default=["lint", "jaxpr", "kernel"],
+                    choices=["lint", "jaxpr", "kernel"],
+                    help="subset of audit layers to run")
+    args = ap.parse_args(argv)
+    if args.fixtures:
+        return run_fixtures()
+    return run_head(args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,47 @@
+"""The static invariant plane (scripts/check_invariants.py, CI hard gate).
+
+Three layers, each guarding a class of regression the runtime differentials
+(tracker<->engine, single<->fleet, fault-schedule trace identity) would only
+catch minutes into a run:
+
+  lint         AST rules REX001-REX005 over the repo source (host work in
+               hot round bodies, unseeded rngs, tracer-dependent control
+               flow, unordered iteration feeding traces, undeclared jit
+               statics).
+  jaxpr_audit  walks the ClosedJaxpr of every registered jit entry point
+               for forbidden primitives / f64 / weak-type / dynamic shapes,
+               and exports RecompileGuard (steady-state compile-count
+               assertions for tests and benchmarks).
+  kernel_audit Pallas grid/BlockSpec bounds proofs plus the masked-slot
+               (NEG_INF, -1) sentinel convention probes.
+
+Submodules are imported lazily: ``repro.runtime.transport`` imports
+``repro.analysis.sanitize`` (the REPRO_SANITIZE=1 switch), and an eager
+``from .jaxpr_audit import *`` here would close an import cycle through
+``repro.runtime.engine``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("jaxpr_audit", "kernel_audit", "lint", "registry", "sanitize")
+_EXPORTS = {
+    "RecompileGuard": "jaxpr_audit",
+    "RecompileError": "jaxpr_audit",
+    "audit_jaxprs": "jaxpr_audit",
+    "audit_kernels": "kernel_audit",
+    "lint_paths": "lint",
+    "lint_file": "lint",
+    "Violation": "lint",
+}
+
+__all__ = list(_SUBMODULES) + list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    if name in _EXPORTS:
+        mod = importlib.import_module(f"{__name__}.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

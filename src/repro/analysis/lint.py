@@ -1,0 +1,667 @@
+"""AST lint for the serving loop's trace discipline (rules REX001-REX005).
+
+Each rule guards an invariant a runtime differential would otherwise catch
+minutes into a run (the mapping lives in docs/ARCHITECTURE.md):
+
+  REX001  no heavy host-numpy ops inside runtime/ hot-path round bodies
+  REX002  no unseeded default_rng / global-RNG calls in trace-affecting code
+  REX003  no if/while/bool() on tracer values inside traced functions
+  REX004  no set (unordered) iteration feeding trace records or placement
+  REX005  jit entry points must declare their static argnames
+
+Suppression syntax (line- or def-level; file-level with disable-file):
+
+    x = np.linalg.norm(v)        # rex: disable=REX001
+    # rex: disable-file=REX004
+
+Rules are scoped by repo-relative path substring (see ``_rule_applies``), so
+the planted-violation fixture corpus under tests/fixtures/analysis mirrors
+the source layout (runtime/, core/, kernels/) to opt into each rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+
+__all__ = ["Violation", "lint_file", "lint_paths", "RULES"]
+
+RULES = {
+    "REX001": "host-numpy heavy op in a runtime hot-path round body",
+    "REX002": "unseeded rng in trace-affecting code",
+    "REX003": "control flow on a (possibly) traced value",
+    "REX004": "iteration over an unordered set feeds downstream state",
+    "REX005": "jit entry point does not declare its static argnames",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+# ---------------------------------------------------------------------------
+# Rule configuration.  Kept as data at module top so scope changes are diffs
+# here, not code changes.
+# ---------------------------------------------------------------------------
+
+# REX001: the per-tick dispatch path.  Anything here runs once per round per
+# cohort; heavy numpy (reductions, factorizations, sorts) belongs on-device
+# or outside the loop.  Cheap marshalling (asarray/stack/full/flatnonzero)
+# is explicitly fine — the rule names the expensive offenders.
+HOT_PATH_FUNCS = {
+    "_round_body", "_skip_round", "_issue_prefetch", "_gather", "_scatter",
+    "rank_round", "rank_advance_round", "advance_round",
+}
+HEAVY_NP_OPS = {
+    "linalg", "argmin", "argmax", "sort", "argsort", "dot", "matmul",
+    "einsum", "inner", "outer", "tensordot", "vdot", "exp", "log", "sqrt",
+    "percentile", "quantile", "median", "mean", "std", "var", "histogram",
+    "cumsum", "cumprod", "corrcoef", "cov", "fft", "unique", "lexsort",
+}
+
+# REX002: legacy global-RNG entry points (process-seeded, trace-visible
+# nondeterminism).  ``default_rng()`` with no arguments is the other half.
+NP_GLOBAL_RNG = {
+    "random", "rand", "randn", "randint", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "poisson", "exponential",
+    "standard_normal", "beta", "gamma", "seed",
+}
+STDLIB_RANDOM_FNS = {
+    "random", "randint", "choice", "choices", "shuffle", "uniform",
+    "randrange", "sample", "gauss", "normalvariate", "seed", "betavariate",
+}
+
+# REX003: functions whose bodies execute under jax tracing.  Decorated jit
+# entry points are discovered from their decorators (any file); closures
+# dispatched via jit/shard_map are named here per module, mapped to the
+# params that arrive as python statics (safe to branch on).
+# ``.shape``/``.ndim``/``len()``/``is None`` are always trace-static and
+# never flagged.
+TRACED_FUNCTION_STATICS: dict[str, dict[str, set[str]]] = {
+    # the jit-static SearchPolicy drives all control flow
+    "core/policy.py": {
+        "spatial_mask": set(),
+        "temporal_mask": set(),
+        "correlated": set(),
+        "replay_sampled_out": {"policy"},
+        "admit": {"policy"},
+        "advance": {"policy", "horizon"},
+    },
+    # step bodies both engines dispatch under jit / shard_map
+    "runtime/engine.py": {
+        "rank_advance_round": {"policy", "k"},
+        "advance_round": {"policy"},
+    },
+    # wrappers run at trace time; kernel bodies run under pallas
+    "kernels/reid_topk.py": {
+        "reid_topk": {"k", "block_q", "block_g", "interpret"},
+        "reid_topk_masked": {"k", "block_q", "block_g", "interpret"},
+        "_reid_kernel": {"k", "block_g", "ng", "g_real"},
+        "_reid_masked_kernel": {"k", "block_g", "ng", "g_real"},
+        "_merge_topk": {"k"},
+        "_mask_padded": set(),
+    },
+    "kernels/flash_attention.py": {
+        "flash_attention": {"causal", "block_q", "block_k", "interpret"},
+        "_flash_kernel": {"scale", "causal", "block_q", "block_k", "nk"},
+    },
+    "kernels/decode_attention.py": {
+        "decode_attention": {"block_k", "interpret"},
+        "_decode_kernel": {"scale", "block_k", "nk"},
+    },
+    "kernels/mamba_scan.py": {
+        "mamba_scan": {"chunk", "block_d", "interpret"},
+        "_scan_kernel": {"chunk", "block_d", "n_state"},
+    },
+}
+
+# REX005: param names that are search/kernel configuration — python values
+# that MUST be jit-static or every distinct value recompiles (or worse,
+# traces wrong).  A jit wrapper over a function taking one of these without
+# declaring static_argnames/argnums is flagged.
+STATIC_VOCAB = {
+    "policy", "cfg", "k", "topk", "match_thresh", "scheme", "interpret",
+    "causal", "block_q", "block_g", "block_k", "chunk", "block_d",
+}
+
+# Calls whose result is a python value even on tracer arguments.
+_STATIC_ALWAYS_CALLS = {"len", "isinstance", "hasattr", "ndim", "shape"}
+# Calls that are static iff every argument is static.
+_STATIC_IF_ARGS_CALLS = {"int", "float", "bool", "min", "max", "abs",
+                         "round", "range", "tuple", "str", "repr"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type"}
+
+_SUPPRESS_RE = re.compile(r"#\s*rex:\s*disable(-file)?\s*=\s*([A-Z0-9,\s]+)")
+
+
+def _rule_applies(rule: str, path: str) -> bool:
+    p = path.replace("\\", "/")
+    if rule == "REX001":
+        return "runtime/" in p
+    if rule in ("REX002", "REX004"):
+        return any(s in p for s in ("core/", "runtime/", "kernels/"))
+    return True      # REX003 scopes by function name, REX005 everywhere
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+def _parse_suppressions(text: str):
+    """-> (line -> {rules}, file-level {rules})."""
+    by_line: dict[int, set[str]] = {}
+    file_level: set[str] = set()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+            if m.group(1):          # disable-file
+                file_level |= rules
+            else:
+                by_line.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return by_line, file_level
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """x.a.b -> ["x", "a", "b"]; non-name roots -> []."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+class _Imports(ast.NodeVisitor):
+    """Alias maps: which local names refer to numpy / numpy.random /
+    stdlib random / jax / functools.partial / the rng factory."""
+
+    def __init__(self):
+        self.numpy: set[str] = set()          # import numpy as np
+        self.np_random: set[str] = set()      # from numpy import random as r
+        self.stdlib_random: set[str] = set()  # import random
+        self.default_rng: set[str] = set()    # from numpy.random import default_rng
+        self.jax: set[str] = set()            # import jax
+        self.jit: set[str] = set()            # from jax import jit
+        self.partial: set[str] = set()        # from functools import partial
+
+    def visit_Import(self, node):
+        for a in node.names:
+            name = a.asname or a.name
+            if a.name == "numpy":
+                self.numpy.add(name)
+            elif a.name == "numpy.random":
+                self.np_random.add(name)
+            elif a.name == "random":
+                self.stdlib_random.add(name)
+            elif a.name == "jax":
+                self.jax.add(name)
+
+    def visit_ImportFrom(self, node):
+        for a in node.names:
+            name = a.asname or a.name
+            if node.module == "numpy" and a.name == "random":
+                self.np_random.add(name)
+            elif node.module == "numpy.random" and a.name == "default_rng":
+                self.default_rng.add(name)
+            elif node.module == "jax" and a.name == "jit":
+                self.jit.add(name)
+            elif node.module == "functools" and a.name == "partial":
+                self.partial.add(name)
+
+
+def _is_np_call(chain: list[str], imports: _Imports) -> str | None:
+    """np.<op>(...) / numpy.<sub>.<op> -> the first attr after the root."""
+    if len(chain) >= 2 and chain[0] in imports.numpy:
+        return chain[1]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# REX003 static-taint evaluation
+# ---------------------------------------------------------------------------
+
+class _StaticEval:
+    """Is an expression provably a python (trace-static) value inside a
+    traced function?  Conservative: unknown constructs are non-static."""
+
+    def __init__(self, static_names: set[str], local_names: set[str]):
+        self.static = static_names      # params/locals known static
+        self.locals = local_names       # all params + assigned names
+
+    def is_static(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            # non-local names are module globals (constants, functions,
+            # jnp/np modules) — python values at trace time
+            return node.id in self.static or node.id not in self.locals
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True             # tracer.shape etc. are python values
+            return self.is_static(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value) and self.is_static(node.slice)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` are identity tests on the python
+            # object, never concretized — always trace-static
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators):
+                return True
+            return self.is_static(node.left) and \
+                all(self.is_static(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(self.is_static(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.is_static(node.test) and self.is_static(node.body)
+                    and self.is_static(node.orelse))
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            leaf = chain[-1] if chain else None
+            if leaf in _STATIC_ALWAYS_CALLS:
+                return True             # len()/jnp.ndim() of a tracer: int
+            if leaf in _STATIC_IF_ARGS_CALLS:
+                return all(self.is_static(a) for a in node.args)
+            return False
+        return False
+
+
+def _collect_locals(fn: ast.FunctionDef) -> set[str]:
+    names: set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        names.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+    return names
+
+
+def _decorator_statics(fn: ast.FunctionDef, imports: _Imports) -> set[str] | None:
+    """static_argnames declared by a jit decorator, or None if the function
+    is not jit-decorated.  Handles @jax.jit, @jit, @partial(jax.jit, ...)
+    and @functools.partial(jax.jit, ...)."""
+    for dec in fn.decorator_list:
+        target, kwargs = _jit_of(dec, imports)
+        if target is not None:
+            names: set[str] = set()
+            for kw in kwargs:
+                if kw.arg == "static_argnames":
+                    for s in ast.walk(kw.value):
+                        if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                            names.add(s.value)
+            return names
+    return None
+
+
+def _is_jit_ref(node: ast.AST, imports: _Imports) -> bool:
+    chain = _attr_chain(node)
+    return (chain == ["jax", "jit"]
+            or (len(chain) == 2 and chain[0] in imports.jax and chain[1] == "jit")
+            or (len(chain) == 1 and chain[0] in imports.jit))
+
+
+def _jit_of(node: ast.AST, imports: _Imports):
+    """If ``node`` is a jit application, return (inner expr or True, kwargs).
+
+    Recognizes ``jax.jit`` (bare decorator), ``jax.jit(f, ...)`` and
+    ``partial(jax.jit, [f,] ...)``.  Returns (None, []) otherwise."""
+    if _is_jit_ref(node, imports):
+        return True, []
+    if isinstance(node, ast.Call):
+        if _is_jit_ref(node.func, imports):
+            inner = node.args[0] if node.args else True
+            return inner, node.keywords
+        chain = _attr_chain(node.func)
+        is_partial = (chain and chain[-1] == "partial"
+                      and (chain[0] in imports.partial
+                           or chain[0] == "functools"))
+        if is_partial and node.args and _is_jit_ref(node.args[0], imports):
+            inner = node.args[1] if len(node.args) > 1 else True
+            return inner, node.keywords
+    return None, []
+
+
+# ---------------------------------------------------------------------------
+# The per-file linter
+# ---------------------------------------------------------------------------
+
+class _FileLinter:
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.imports = _Imports()
+        self.imports.visit(self.tree)
+        self.suppress_lines, self.suppress_file = _parse_suppressions(text)
+        self.violations: list[Violation] = []
+        # line span of every function def, for def-level suppression
+        self._def_spans: list[tuple[int, int, int]] = []   # (start, end, defline)
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._def_spans.append(
+                    (node.lineno, node.end_lineno or node.lineno, node.lineno))
+
+    # -- emission with suppression ----------------------------------------
+    def _emit(self, rule: str, line: int, msg: str) -> None:
+        if rule in self.suppress_file:
+            return
+        if rule in self.suppress_lines.get(line, set()):
+            return
+        for start, end, defline in self._def_spans:
+            if start <= line <= end and rule in self.suppress_lines.get(
+                    defline, set()):
+                return
+        self.violations.append(Violation(rule, self.path, line, msg))
+
+    def run(self) -> list[Violation]:
+        if _rule_applies("REX001", self.path):
+            self._rex001()
+        if _rule_applies("REX002", self.path):
+            self._rex002()
+        self._rex003()
+        if _rule_applies("REX004", self.path):
+            self._rex004()
+        self._rex005()
+        return self.violations
+
+    def _functions(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.FunctionDef):
+                yield node
+
+    # -- REX001 ------------------------------------------------------------
+    def _rex001(self) -> None:
+        for fn in self._functions():
+            if fn.name not in HOT_PATH_FUNCS:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                op = _is_np_call(chain, self.imports)
+                if op in HEAVY_NP_OPS:
+                    self._emit("REX001", node.lineno,
+                               f"host numpy `{'.'.join(chain)}` inside "
+                               f"hot-path `{fn.name}` — use the jitted "
+                               "device path (or hoist out of the round)")
+
+    # -- REX002 ------------------------------------------------------------
+    def _rex002(self) -> None:
+        imp = self.imports
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            root, leaf = chain[0], chain[-1]
+            is_default_rng = (
+                leaf == "default_rng"
+                and (root in imp.default_rng
+                     or root in imp.np_random
+                     or (len(chain) >= 3 and root in imp.numpy
+                         and chain[1] == "random")))
+            if is_default_rng and not node.args and not node.keywords:
+                self._emit("REX002", node.lineno,
+                           "`default_rng()` without a seed — trace-affecting "
+                           "randomness must derive from an explicit seed")
+                continue
+            is_np_global = leaf in NP_GLOBAL_RNG and (
+                (len(chain) == 2 and root in imp.np_random)
+                or (len(chain) >= 3 and root in imp.numpy
+                    and chain[1] == "random"))
+            if is_np_global:
+                self._emit("REX002", node.lineno,
+                           f"legacy global-RNG `{'.'.join(chain)}` — use a "
+                           "seeded Generator (default_rng(seed))")
+                continue
+            if (len(chain) == 2 and root in imp.stdlib_random
+                    and leaf in STDLIB_RANDOM_FNS):
+                self._emit("REX002", node.lineno,
+                           f"stdlib `{'.'.join(chain)}` uses the process "
+                           "global RNG — use a seeded Generator")
+
+    # -- REX003 ------------------------------------------------------------
+    def _rex003(self) -> None:
+        path = self.path.replace("\\", "/")
+        cfg: dict[str, set[str]] = {}
+        for suffix, fns in TRACED_FUNCTION_STATICS.items():
+            if path.endswith(suffix):
+                cfg.update(fns)
+        for fn in self._functions():
+            dec_statics = _decorator_statics(fn, self.imports)
+            cfg_statics = cfg.get(fn.name)
+            if dec_statics is None and cfg_statics is None:
+                continue
+            statics = (dec_statics or set()) | (cfg_statics or set())
+            self._check_traced_fn(fn, statics)
+
+    def _check_traced_fn(self, fn: ast.FunctionDef, statics: set[str]) -> None:
+        local_names = _collect_locals(fn)
+        known_static = set(statics)
+        ev = _StaticEval(known_static, local_names)
+
+        def note_assign(node):
+            # sequential taint propagation: a local assigned from a
+            # static-only expression is itself static from here on
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                return
+            names = [t.id for tgt in targets for t in ast.walk(tgt)
+                     if isinstance(t, ast.Name)]
+            if ev.is_static(value):
+                known_static.update(names)
+            else:
+                known_static.difference_update(names)
+
+        def flag(test: ast.AST, kind: str):
+            if not ev.is_static(test):
+                self._emit(
+                    "REX003", test.lineno,
+                    f"{kind} on a traced value in `{fn.name}` — branch on "
+                    "static config/shapes or use jnp.where/lax.cond")
+
+        for node in ast.walk(fn):
+            note_assign(node)
+        # second pass flags conditions with the full static set (sequential
+        # order approximated; reassignment to non-static wins above)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                flag(node.test, "`if`/`while`")
+            elif isinstance(node, ast.IfExp):
+                flag(node.test, "conditional expression")
+            elif isinstance(node, ast.Assert):
+                flag(node.test, "`assert`")
+            elif isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain in (["bool"], ["int"], ["float"]) and node.args:
+                    if not all(ev.is_static(a) for a in node.args):
+                        self._emit(
+                            "REX003", node.lineno,
+                            f"`{chain[0]}()` concretizes a traced value in "
+                            f"`{fn.name}`")
+
+    # -- REX004 ------------------------------------------------------------
+    def _rex004(self) -> None:
+        # Set-typed names are tracked PER SCOPE (innermost enclosing
+        # function, else module) — a `keys: set` in one method must not
+        # taint an unrelated `keys` list in another.
+        fns = sorted(self._functions(), key=lambda f: f.lineno)
+
+        def innermost_fn(line: int):
+            best = None
+            for f in fns:
+                if f.lineno <= line <= (f.end_lineno or f.lineno):
+                    if best is None or f.lineno >= best.lineno:
+                        best = f
+            return best
+
+        def set_names_of(scope) -> set[str]:
+            names: set[str] = set()
+            nodes = ast.walk(scope) if scope is not None else (
+                n for n in ast.walk(self.tree) if innermost_fn(
+                    getattr(n, "lineno", 0) or 0) is None)
+            for node in nodes:
+                ann = None
+                if isinstance(node, ast.arg):
+                    ann = node.annotation
+                elif isinstance(node, ast.AnnAssign):
+                    ann = node.annotation
+                if ann is not None and "set" in ast.unparse(ann).lower():
+                    name = node.arg if isinstance(node, ast.arg) else (
+                        node.target.id
+                        if isinstance(node.target, ast.Name) else None)
+                    if name:
+                        names.add(name)
+                if isinstance(node, ast.Assign) and \
+                        self._is_set_expr(node.value):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            names.add(tgt.id)
+            return names
+
+        tables: dict[int, set[str]] = {}     # id of scope fn (or 0) -> names
+
+        def names_for(line: int) -> set[str]:
+            scope = innermost_fn(line)
+            key = id(scope) if scope is not None else 0
+            if key not in tables:
+                tables[key] = set_names_of(scope)
+            return tables[key]
+
+        def iter_is_set(it: ast.AST, set_named: set[str]) -> bool:
+            # unwrap enumerate/list/tuple — they preserve the set's
+            # (arbitrary) order, so they don't launder it
+            if isinstance(it, ast.Call):
+                chain = _attr_chain(it.func)
+                if chain in (["sorted"],):
+                    return False
+                if chain in (["enumerate"], ["list"], ["tuple"]) and it.args:
+                    return iter_is_set(it.args[0], set_named)
+            if self._is_set_expr(it):
+                return True
+            return isinstance(it, ast.Name) and it.id in set_named
+
+        for node in ast.walk(self.tree):
+            iters = []
+            if isinstance(node, ast.For):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            for it in iters:
+                if iter_is_set(it, names_for(it.lineno)):
+                    self._emit(
+                        "REX004", it.lineno,
+                        "iterating a set — order is arbitrary; wrap in "
+                        "sorted(...) before it feeds traces or placement")
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            return chain in (["set"], ["frozenset"])
+        return False
+
+    # -- REX005 ------------------------------------------------------------
+    def _rex005(self) -> None:
+        local_fns = {f.name: f for f in self._functions()}
+
+        def check(fn_node: ast.FunctionDef, kwargs, line: int):
+            declared = any(kw.arg in ("static_argnames", "static_argnums")
+                           for kw in kwargs)
+            if declared:
+                return
+            args = fn_node.args
+            params = [a.arg for a in (args.posonlyargs + args.args
+                                      + args.kwonlyargs)]
+            hits = sorted(set(params) & STATIC_VOCAB)
+            if hits:
+                self._emit(
+                    "REX005", line,
+                    f"jit over `{fn_node.name}` takes static-vocabulary "
+                    f"param(s) {hits} but declares no "
+                    "static_argnames/static_argnums")
+
+        for fn in self._functions():
+            for dec in fn.decorator_list:
+                inner, kwargs = _jit_of(dec, self.imports)
+                if inner is not None:
+                    check(fn, kwargs, dec.lineno)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            inner, kwargs = _jit_of(node, self.imports)
+            if inner is None or inner is True or not isinstance(inner, ast.Name):
+                continue        # jax.jit(shard_map(...)) closures are fine
+            fn_node = local_fns.get(inner.id)
+            if fn_node is not None:
+                check(fn_node, kwargs, node.lineno)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def lint_file(path: str | Path, text: str | None = None,
+              virtual_path: str | None = None) -> list[Violation]:
+    """Lint one file.  ``virtual_path`` overrides the path used for rule
+    scoping and reporting (fixture corpora mirror the source layout)."""
+    path = Path(path)
+    if text is None:
+        text = path.read_text()
+    report_as = virtual_path or str(path)
+    return _FileLinter(report_as, text).run()
+
+
+def lint_paths(roots: list[str | Path],
+               rel_to: str | Path | None = None) -> list[Violation]:
+    """Lint every .py under ``roots`` (files or directories).  Paths are
+    reported (and rule-scoped) relative to ``rel_to`` when given."""
+    out: list[Violation] = []
+    for root in roots:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            rel = str(f.relative_to(rel_to)) if rel_to else str(f)
+            out.extend(lint_file(f, virtual_path=rel))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))

@@ -1,0 +1,58 @@
+"""REPRO_SANITIZE=1 — opt-in runtime sanitizers for local debugging.
+
+Enabled sanitizers:
+
+  * ``jax_debug_nans``: every jit dispatch re-checks outputs for NaNs and
+    re-runs de-optimized to locate the producing primitive.
+  * transport-callback reentrancy assertions: a ``Transport.on_dead``
+    callback must never re-enter the transport it is being fired from
+    (``fetch_async``/``wait_fetch`` during dead-peer dispatch would
+    deadlock a real RPC backend; the in-process fakes would just silently
+    reorder the fault schedule).
+
+This module must stay dependency-light (stdlib + jax only): it is imported
+by ``repro.runtime.transport``, which sits below everything else in the
+runtime stack.
+"""
+from __future__ import annotations
+
+import os
+
+_enabled: bool | None = None   # tri-state: None = read env on first use
+
+
+def _env_on() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+def enabled() -> bool:
+    """Are the sanitizers on?  First call latches the REPRO_SANITIZE env."""
+    global _enabled
+    if _enabled is None:
+        if _env_on():
+            enable()
+        else:
+            _enabled = False
+    return _enabled
+
+
+def enable() -> None:
+    """Turn the sanitizers on for this process (idempotent)."""
+    global _enabled
+    import jax
+    jax.config.update("jax_debug_nans", True)
+    _enabled = True
+
+
+def disable() -> None:
+    """Turn the sanitizers off (tests use this to restore global state)."""
+    global _enabled
+    import jax
+    jax.config.update("jax_debug_nans", False)
+    _enabled = False
+
+
+def maybe_enable_from_env() -> bool:
+    """Latch REPRO_SANITIZE once at process entry (repro.api import time)."""
+    return enabled()

@@ -32,6 +32,14 @@ from repro.runtime.recal import (RecalibrationController,  # noqa: F401
                                  RecalibrationPolicy, visits_window_source)
 from repro.runtime.transport import (FakeRpcTransport, FaultProfile,  # noqa: F401
                                      InProcTransport, Transport)
+from repro.analysis import sanitize as _sanitize
+
+# REPRO_SANITIZE=1 arms the runtime sanitizers for everything built through
+# this facade: jax_debug_nans (NaN fails at the producing op, not 40 rounds
+# later in a ranking) + the transport plane's dead-peer callback reentrancy
+# assertions.  Latched once at import; sanitize.enable()/disable() toggles
+# programmatically.
+_sanitize.maybe_enable_from_env()
 
 
 def profile(visits: Visits, *, time_limit: int | None = None,

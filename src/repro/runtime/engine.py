@@ -65,7 +65,8 @@ from repro.core.policy import (PhaseState, SearchPolicy, admit, advance,
 from repro.kernels import ops as kernel_ops
 from repro.kernels.reid_topk import NEG_INF
 from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
-                                   assemble_round_gallery, pow2)
+                                   assemble_round_gallery, l2_normalize,
+                                   pow2)
 from repro.runtime.stream_store import FrameStore
 from repro.runtime.transport import PrefetchPipeline
 
@@ -243,6 +244,14 @@ class ServingEngine:
         self.recal = None            # attached RecalibrationController
         self._in_round = False       # swap_model atomicity guard
         self._slots = np.zeros(0, np.int64)  # qs-index -> batch-row mapping
+        # high-water marks freezing steady-state jit signatures: the padded
+        # batch and round gallery never shrink below a size already compiled.
+        # Growth-only padding is trace-neutral — padding rows are done/masked
+        # and rank to (NEG_INF, -1) — so a shrinking cohort or gallery reuses
+        # the compiled shape instead of minting a smaller signature every
+        # time it dips (what RecompileGuard would trip on).
+        self._batch_hwm = 1
+        self._gal_rows_hwm = 1
         self._windows = phase_windows(model, cfg.policy)
         # host copies of the exhaustion windows for the skip fast path
         self._w1 = np.asarray(self._windows.w_end1)
@@ -309,8 +318,7 @@ class ServingEngine:
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
         self.queries[qid] = QueryState(
-            qid, feat / max(np.linalg.norm(feat), 1e-9), cam, frame,
-            f_curr=frame + 1)
+            qid, l2_normalize(feat), cam, frame, f_curr=frame + 1)
         self.sightings.append((qid, cam, frame))
 
     def _on_query_done(self, q: QueryState) -> None:
@@ -324,9 +332,11 @@ class ServingEngine:
         occupies.  The single-process engine packs queries densely and pads
         to the next power of two (O(log Q) jit shapes); the sharded fleet
         overrides this to group rows by worker placement, each shard block
-        padded to a shard-uniform power of two."""
+        padded to a shard-uniform power of two.  Both hold the batch at its
+        high-water mark so a shrinking cohort keeps the compiled shape."""
         n = len(qs)
-        return _pow2(n), np.arange(n)
+        self._batch_hwm = max(self._batch_hwm, _pow2(n))
+        return self._batch_hwm, np.arange(n)
 
     def _gather(self, qs: list[QueryState]) -> PhaseState:
         """Engine QueryStates -> one batched PhaseState.  The live frontier
@@ -369,8 +379,7 @@ class ServingEngine:
             j = sl[i]
             if matched[j]:
                 emb = match_emb[j]
-                q.feat = (1 - a) * q.feat + a * emb
-                q.feat /= max(np.linalg.norm(q.feat), 1e-9)
+                q.feat = l2_normalize((1 - a) * q.feat + a * emb)
                 if q.phase >= 2:
                     q.rescued += 1
                     self.rescue_pairs[q.c_q, int(match_cam[j])] += 1
@@ -566,9 +575,7 @@ class ServingEngine:
             keys = to_embed[start:start + self.cfg.max_batch]
             counts = [len(frames[key]) for key in keys]
             crops = [c for key in keys for c in frames[key]]
-            emb = self.embed_fn(np.stack(crops))           # (n, D)
-            emb = emb / np.maximum(
-                np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+            emb = l2_normalize(self.embed_fn(np.stack(crops)))  # (n, D)
             self.frames_processed += len(keys)
             stats["embedded"] += len(keys)
             # keys behind the wall clock are replay re-reads the cache missed
@@ -604,8 +611,9 @@ class ServingEngine:
         if batch_keys:
             # camera-major key order was fixed above; assembly + pow2 pad
             # live in the gallery plane so both engines share one rule
-            gal, gal_cam, gal_frame = assemble_round_gallery(batch_keys,
-                                                             key_emb)
+            gal, gal_cam, gal_frame = assemble_round_gallery(
+                batch_keys, key_emb, min_rows=self._gal_rows_hwm)
+            self._gal_rows_hwm = max(self._gal_rows_hwm, gal.shape[0])
             q_feat = np.zeros((N, gal.shape[1]), np.float32)
             for i, q in enumerate(qs):
                 q_feat[sl[i]] = q.feat

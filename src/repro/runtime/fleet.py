@@ -57,6 +57,38 @@ from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
                                    ShardedGalleryStore)
 
 
+def make_sharded_step_fns(mesh, policy, topk: int):
+    """The fleet's three jitted shard_map step bodies for ``mesh`` — query
+    rows shard over the data axis, model/windows/gallery ride replicated.
+    Module-level (not a method) so the static invariant plane
+    (``repro.analysis``) can trace and audit the EXACT jaxprs the fleet
+    dispatches, on any mesh."""
+    Pd, Pr = P("data"), P()
+
+    def _admit(model, state, geo_adj):
+        return admit(model, policy, state, geo_adj)
+
+    def _rank_advance(windows, state, q_feat, mask, gal, gal_cam, gal_frame):
+        return rank_advance_round(policy, windows, state, q_feat, mask, gal,
+                                  gal_cam, gal_frame, topk)
+
+    def _advance(windows, state):
+        return advance_round(policy, windows, state)
+
+    return (
+        jax.jit(shard_map(_admit, mesh=mesh,
+                          in_specs=(Pr, Pd, Pr), out_specs=Pd,
+                          check_vma=False)),
+        jax.jit(shard_map(_rank_advance, mesh=mesh,
+                          in_specs=(Pr, Pd, Pd, Pd, Pr, Pr, Pr),
+                          out_specs=(Pd,) * 8,
+                          check_vma=False)),
+        jax.jit(shard_map(_advance, mesh=mesh,
+                          in_specs=(Pr, Pd), out_specs=Pd,
+                          check_vma=False)),
+    )
+
+
 class ShardedServingEngine(ServingEngine):
     """A serving fleet: one controller, ``n_shards`` workers, one trace."""
 
@@ -105,6 +137,7 @@ class ShardedServingEngine(ServingEngine):
                                      owned_frames=0, query_rounds=0)
                              for w in self._all_workers}
         self.rebalances = 0
+        self._block_hwm = 1          # per-shard batch rows high-water mark
         # transport dead-peer signal: a fetch whose retry budget exhausts
         # mid-round re-homes the gallery IMMEDIATELY (so the blocked fetch
         # can retry against the new owner) and defers the full mesh
@@ -305,6 +338,11 @@ class ShardedServingEngine(ServingEngine):
         for i, q in enumerate(qs):
             groups[self._shard_of[self._placement[q.qid]]].append(i)
         block = _pow2(max(max((len(g) for g in groups), default=0), 1))
+        # shard-block high-water mark: a shrinking cohort keeps the compiled
+        # per-shard block (padding rows are done), so steady state never
+        # mints a smaller shard_map signature (RecompileGuard's contract)
+        self._block_hwm = max(self._block_hwm, block)
+        block = self._block_hwm
         slots = np.zeros(len(qs), np.int64)
         for s, g in enumerate(groups):
             slots[g] = s * block + np.arange(len(g))
@@ -315,33 +353,8 @@ class ShardedServingEngine(ServingEngine):
         invalidated on every elastic re-mesh).  State rows shard over the
         data axis; model/windows/geo/gallery ride along replicated."""
         if self._sharded_fns is None:
-            mesh, policy, topk = self.mesh, self.policy, self.cfg.topk
-            Pd, Pr = P("data"), P()
-
-            def _admit(model, state, geo_adj):
-                return admit(model, policy, state, geo_adj)
-
-            def _rank_advance(windows, state, q_feat, mask, gal, gal_cam,
-                              gal_frame):
-                return rank_advance_round(policy, windows, state, q_feat,
-                                          mask, gal, gal_cam, gal_frame,
-                                          topk)
-
-            def _advance(windows, state):
-                return advance_round(policy, windows, state)
-
-            self._sharded_fns = (
-                jax.jit(shard_map(_admit, mesh=mesh,
-                                  in_specs=(Pr, Pd, Pr), out_specs=Pd,
-                                  check_vma=False)),
-                jax.jit(shard_map(_rank_advance, mesh=mesh,
-                                  in_specs=(Pr, Pd, Pd, Pd, Pr, Pr, Pr),
-                                  out_specs=(Pd,) * 8,
-                                  check_vma=False)),
-                jax.jit(shard_map(_advance, mesh=mesh,
-                                  in_specs=(Pr, Pd), out_specs=Pd,
-                                  check_vma=False)),
-            )
+            self._sharded_fns = make_sharded_step_fns(
+                self.mesh, self.policy, self.cfg.topk)
         return self._sharded_fns
 
     def _dispatch_admit(self, ps):
@@ -377,7 +390,9 @@ class ShardedServingEngine(ServingEngine):
                      for i in idxs for cam in cams_by_q[i]}
             st["unique_frames"] += len(pairs)
         if isinstance(self.gallery, ShardedGalleryStore):
-            for cam, _f in wanted:
+            # sorted: `wanted` is a set, and owned_frames counts must not
+            # depend on hash-iteration order if this ever feeds placement
+            for cam, _f in sorted(wanted):
                 owner = self.gallery.owner_of(cam)
                 self._shard_stats[owner]["owned_frames"] += 1
 

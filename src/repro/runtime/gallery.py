@@ -44,6 +44,18 @@ def pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+def l2_normalize(a: np.ndarray, eps: float = 1e-9) -> np.ndarray:
+    """Row-unit-normalize 1-D or 2-D embeddings (zero rows stay zero).
+
+    The embedding plane's ONE normalization rule: the engines call this at
+    ingest/update time so the hot round bodies never run host-numpy
+    reductions per round (lint rule REX001)."""
+    a = np.asarray(a, np.float32)
+    if a.ndim == 1:
+        return a / max(float(np.linalg.norm(a)), eps)
+    return a / np.maximum(np.linalg.norm(a, axis=-1, keepdims=True), eps)
+
+
 def _cam_hash(cam: int) -> int:
     """Stable camera hash (Knuth multiplicative) for owner-shard choice —
     spreads consecutive camera ids instead of striping them."""
@@ -374,21 +386,26 @@ class ShardedGalleryStore(GalleryStore):
 
 
 def assemble_round_gallery(batch_keys: list[tuple[int, int]],
-                           key_emb: dict[tuple[int, int], np.ndarray]):
+                           key_emb: dict[tuple[int, int], np.ndarray],
+                           min_rows: int = 1):
     """One round's deduplicated gallery, engine-ready: concatenate the
     per-key embedding blocks IN ``batch_keys`` ORDER (the engines pass
     camera-major sorted keys, which is what keeps the kernel's flat-argmin
     tie-breaking bit-identical to the tracker), tag every row with its
     (camera, frame), and pad rows to a power of two so jit shapes stay
     bounded — padded rows carry cam/frame -1 and rank to (NEG_INF, -1)
-    inside the kernels.  Returns (gallery (Gp, D), gal_cam (Gp,),
+    inside the kernels.  ``min_rows`` lets the engines hold the row count at
+    its high-water mark (growth-only padding, so the jitted rank signature
+    stays frozen when a round's gallery shrinks — padded rows can never win
+    a tie, the kernel's flat argmin always resolves equal scores to the
+    lowest real column).  Returns (gallery (Gp, D), gal_cam (Gp,),
     gal_frame (Gp,))."""
     counts = [len(key_emb[k]) for k in batch_keys]
     gal = np.concatenate([key_emb[k] for k in batch_keys]).astype(np.float32)
     gal_cam = np.repeat([k[0] for k in batch_keys], counts).astype(np.int32)
     gal_frame = np.repeat([k[1] for k in batch_keys], counts).astype(np.int32)
     G = gal.shape[0]
-    Gp = pow2(G)
+    Gp = max(pow2(G), pow2(min_rows))
     if Gp > G:
         gal = np.concatenate(
             [gal, np.zeros((Gp - G, gal.shape[1]), np.float32)])

@@ -163,6 +163,10 @@ class Transport:
         self.remote_fetches = 0
         self.retries = 0
         self.timeouts = 0
+        # True while the on_dead callback runs — the rehome callback must
+        # only re-home bookkeeping; issuing a fetch from inside it can
+        # recurse through _fail_peer.  Asserted under REPRO_SANITIZE=1.
+        self._in_on_dead = False
 
     # -- the contract ------------------------------------------------------
     def fetch_async(self, peer: str, key: Any,
@@ -193,7 +197,22 @@ class Transport:
             return
         self._dead.add(peer)
         if self.on_dead is not None:
-            self.on_dead(peer)
+            self._in_on_dead = True
+            try:
+                self.on_dead(peer)
+            finally:
+                self._in_on_dead = False
+
+    def _check_reentry(self, op: str) -> None:
+        """Under REPRO_SANITIZE=1: refuse fetch-plane entry from inside the
+        dead-peer callback (re-home first, retry after it returns)."""
+        if self._in_on_dead:
+            from repro.analysis import sanitize
+            if sanitize.enabled():
+                raise AssertionError(
+                    f"transport.{op} re-entered from inside the on_dead "
+                    "callback — the rehome callback must not issue fetches "
+                    "(the blocked fetch retries after it returns)")
 
     # -- accounting --------------------------------------------------------
     def _stats(self, peer: str) -> dict:
@@ -218,6 +237,7 @@ class InProcTransport(Transport):
     kind = "inproc"
 
     def fetch_async(self, peer, key, payload_fn):
+        self._check_reentry("fetch_async")
         if peer in self._dead:
             raise PeerDeadError(peer, "fetch issued to a dead peer")
         self.remote_fetches += 1
@@ -226,6 +246,7 @@ class InProcTransport(Transport):
                            payload_fn=payload_fn)
 
     def wait(self, handle):
+        self._check_reentry("wait")
         if handle.peer in self._dead:
             raise PeerDeadError(handle.peer, "peer died while fetch in flight")
         return handle._deliver()
@@ -301,6 +322,7 @@ class FakeRpcTransport(Transport):
                          failed_at=t + self.timeout)
 
     def fetch_async(self, peer, key, payload_fn):
+        self._check_reentry("fetch_async")
         if peer in self._dead:
             raise PeerDeadError(peer, "fetch issued to a dead peer")
         self.remote_fetches += 1
@@ -315,6 +337,7 @@ class FakeRpcTransport(Transport):
             self._sleep(dt)
 
     def wait(self, handle):
+        self._check_reentry("wait")
         if handle.peer in self._dead:
             raise PeerDeadError(handle.peer, "peer died while fetch in flight")
         sched = handle._sched

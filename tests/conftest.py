@@ -511,6 +511,53 @@ def fleet_property_suite(max_examples=6):
     prop()
 
 
+def fleet_case_recompile_guard(shard_counts=(1, 2, 4, 8), n_queries=5,
+                               seed=0, warmup=150, steady=150):
+    """Compile-discipline case (tests/test_analysis.py + the CI fleet step):
+    for every shard count, the serving loop's jit entries — module-level
+    AND the fleet's shard_map step bodies — compile each abstract signature
+    at most ONCE after warmup.  ``RecompileGuard`` raises on steady-state
+    cache misses; warmup absorbs tracing plus the batch/gallery high-water
+    marks' growth phase (the hwm layout keeps shapes monotone, so by steady
+    state the signature set is frozen up to one genuinely-new shape class
+    per entry)."""
+    from repro import api as rexcam
+    from repro.analysis import RecompileGuard
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(max(shard_counts))
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    q_vids = world["q_vids"]
+    for shards in shard_counts:
+        eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                           policy=policy,
+                           geo_adj=world["net"].geo_adjacent, shards=shards)
+        t0 = int(vis.t_out[q_vids].min())
+        eng.t = t0
+        for i, q in enumerate(q_vids):
+            eng.submit_query(i, feats[q], int(vis.cam[q]),
+                             int(vis.t_out[q]))
+
+        def run(ticks, start):
+            for t in range(start, start + ticks):
+                if t < vis.horizon:
+                    frames = {}
+                    for c in range(vis.n_cams):
+                        vids = gal[c, t][gal[c, t] >= 0]
+                        if len(vids):
+                            frames[c] = feats[vids]
+                    eng.ingest(frames)
+                eng.tick()
+
+        run(warmup, t0)
+        with RecompileGuard.for_engine(eng, max_new=1,
+                                       label=f"shards={shards}"):
+            run(steady, t0 + warmup)
+
+
 def _fake_rpc_factory(profiles=None, **kw):
     """Zero-arg factory for a VIRTUAL-clock ``FakeRpcTransport`` — each
     drive gets fresh transport state and injected latency costs no real

@@ -1,0 +1,21 @@
+# Planted REX002 corpus: unseeded / global RNG in trace-affecting code.
+# rex-expect: REX002=3
+import random
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def sample_replay(n):
+    rng = default_rng()                      # planted: unseeded default_rng
+    jitter = np.random.randint(0, 4)         # planted: legacy global RNG
+    coin = random.random()                   # planted: stdlib global RNG
+    keep = random.shuffle                    # bare reference, not a call: fine
+    return rng, jitter, coin, keep
+
+
+def sample_seeded(n, seed):
+    rng = default_rng(seed)                  # seeded: fine
+    noise = default_rng(0).normal(size=n)    # seeded: fine
+    burn = np.random.permutation(n)          # rex: disable=REX002
+    return rng, noise, burn

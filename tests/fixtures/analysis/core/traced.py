@@ -1,0 +1,26 @@
+# Planted REX003 corpus: python control flow on traced values.
+# rex-expect: REX003=2
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rank_static(scores, k):
+    if k > 1:                                # static kwarg: fine
+        scores = scores * 2.0
+    if scores.shape[0] > 4:                  # shapes are python ints: fine
+        scores = scores[:4]
+    if scores > 0:                           # planted: branch on a tracer
+        scores = scores + 1.0
+    return jnp.sort(scores)[:k]
+
+
+@jax.jit
+def concretize(x):
+    lead = len(x)                            # len() of a tracer is an int: fine
+    if x is None:                            # identity test: fine
+        return jnp.zeros(())
+    flag = bool(x)                           # planted: concretizes the tracer
+    return x * (lead + flag)

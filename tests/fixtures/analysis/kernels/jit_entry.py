@@ -1,0 +1,24 @@
+# Planted REX005 corpus: jit entry points without declared statics.
+# rex-expect: REX005=2
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def rank_undeclared(q, g, k):                # planted: `k` must be static
+    return jnp.dot(q, g.T) * k
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def rank_declared(q, g, k, interpret):       # declared: fine
+    return jnp.dot(q, g.T) * k
+
+
+def topk_body(scores, topk):
+    return scores[:topk]
+
+
+ranked = jax.jit(topk_body)                  # planted: `topk` must be static
+ranked_ok = jax.jit(topk_body, static_argnames=("topk",))   # declared: fine

@@ -1,0 +1,21 @@
+# Fully clean fixture: the discipline every rule asks for, in one file.
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.random import default_rng
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rank_round(scores, k):
+    return jnp.sort(scores)[:k]
+
+
+class CleanEngine:
+    def _round_body(self, frames, rng_seed):
+        rng = default_rng(rng_seed)
+        crops = np.stack([np.asarray(f) for f in frames])
+        order = rng.permutation(len(frames))
+        wanted = {int(i) for i in order[:2]}
+        return [crops[i] for i in sorted(wanted)]

@@ -1,0 +1,19 @@
+# Planted REX001 corpus: heavy host-numpy inside hot-path round bodies.
+# rex-expect: REX001=1
+import numpy as np
+
+
+class FakeEngine:
+    def _round_body(self, feats):
+        crops = np.asarray(feats)            # cheap marshalling: fine
+        norms = np.linalg.norm(crops, axis=-1)   # planted: REX001 fires here
+        order = np.sort(norms)               # rex: disable=REX001
+        return crops, order
+
+    def _skip_round(self, scores):  # rex: disable=REX001
+        # def-level suppression covers the whole body
+        return np.argmax(scores)
+
+    def bookkeeping(self, scores):
+        # not a hot-path function name: heavy numpy is allowed here
+        return np.mean(scores)

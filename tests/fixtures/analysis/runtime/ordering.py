@@ -1,0 +1,22 @@
+# Planted REX004 corpus: unordered set iteration feeding placement.
+# rex-expect: REX004=2
+
+
+def place_workers(keys, owners):
+    pending = set(keys)
+    for k in pending:                        # planted: arbitrary order
+        owners[k] = len(owners)
+    for k in sorted(pending):                # sorted: fine
+        owners[k] = len(owners)
+    drained = [c for c in {2, 0, 1}]         # planted: set literal iterated
+    replay = [c for c in sorted({2, 0, 1})]  # sorted: fine
+    for k in enumerate(pending):             # rex: disable=REX004
+        pass
+    return drained, replay
+
+
+def account(rounds: list):
+    # a LIST named like the set above must not be tainted cross-scope
+    pending = [r for r in rounds]
+    for r in pending:                        # list iteration: fine
+        yield r
