@@ -670,3 +670,190 @@ def transport_sweep(scenarios=("duke",), n_queries=16, steps=600, shards=4,
             f"speculation mispredicted: {cp['prefetch_hits']} prefetch " \
             f"hits vs {hits} cache hits"
     return rows
+
+
+# ---------------------------------------------------------------------------
+# query_churn_sweep: per-round cost vs live query count under churn — the
+# consolidation tentpole's headline number.
+# ---------------------------------------------------------------------------
+
+def _churn_trace_key(trace):
+    """Canonical per-round tuple stream (mirrors ``tests/conftest.trace_key``
+    — inlined because benchmarks must stay importable without the test tree):
+    admissions (mask), the match decision, tie-break (gallery row index), raw
+    kernel score, the top-k candidate bands and the model epoch."""
+    return [(r["qid"], r["f_curr"], r["phase"], r["epoch"],
+             tuple(bool(x) for x in r["mask"]), bool(r["matched"]),
+             int(r["match_cam"]), float(r["match_val"]), int(r["match_idx"]),
+             tuple(r["topk"]))
+            for r in trace]
+
+
+def _drive_churn(sc, policy, pool, n_queries, steps, t0, *, wave_at,
+                 shards=None, consolidate=True, guard_after=None):
+    """Churn-capable drive loop: submits HALF the queries up front and the
+    other half mid-sweep (tick ``wave_at``, so the late joiners enter in
+    replay), records the full round trace, and returns per-tick walls so
+    callers can carve out a steady-state window.  ``_drive_serving`` can't
+    express mid-sweep submits, hence the local loop.  Query ``i`` anchors on
+    ``pool[i % len(pool)]`` — cycling a bounded pool of distinct anchor
+    visits is exactly the consolidation-friendly regime the tentpole targets
+    (many live queries, far fewer distinct (cam, frame) demands)."""
+    from repro.analysis import RecompileGuard
+
+    vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
+    wall0 = time.perf_counter()
+    eng = rexcam.serve(sc["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=net.geo_adjacent, shards=shards,
+                       consolidate=consolidate)
+    eng.t = t0
+
+    def submit(lo, hi):
+        for i in range(lo, hi):
+            q = pool[i % len(pool)]
+            eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+
+    first = max(1, n_queries // 2)
+    submit(0, first)
+    trace, tick_lat, matches = [], [], 0
+    guard = None
+    for step_i, t in enumerate(range(t0, min(t0 + steps, vis.horizon))):
+        if step_i == wave_at:
+            submit(first, n_queries)      # mid-sweep churn: the second wave
+        if guard_after is not None and step_i == guard_after:
+            guard = RecompileGuard.for_engine(
+                eng, max_new=1, label=f"churn steady after tick {step_i}")
+            guard.__enter__()
+        frames = {}
+        for c in range(net.n_cams):
+            vids = gal[c, t][gal[c, t] >= 0]
+            if len(vids):
+                frames[c] = feats[vids]
+        eng.ingest(frames)
+        tk0 = time.perf_counter()
+        matches += eng.tick(record_trace=trace)["matches"]
+        tick_lat.append(time.perf_counter() - tk0)
+    if guard is not None:
+        guard.__exit__(None, None, None)
+    return eng, trace, tick_lat, matches, time.perf_counter() - wall0
+
+
+def query_churn_sweep(n_levels=(8, 64, 256), steps=180, shards=8,
+                      pool_size=32):
+    """The consolidation tentpole, measured and asserted: drive N live
+    queries (N in ``n_levels``) over the duke topology with mid-sweep
+    submits (a second wave joins at ``steps//3`` and replays in) and
+    mid-sweep completions (``exit_t`` retires queries while others run),
+    comparing the CONSOLIDATED fleet (one segment-masked ``reid_topk`` call
+    per round over the fleet-global RoundPlan) against the UNCONSOLIDATED
+    single engine (the per-frame reference ranking path).
+
+    Asserted per N: the two are TRACE-IDENTICAL (same rounds, same
+    admissions, same match values/tie-breaks — consolidation is a pure
+    execution-plan change) with equal admitted/unique/embed totals.
+    Asserted across N: fleet-wide embed calls and steady-state wall grow
+    SUBLINEARLY in the live query count — cost at the largest N must stay
+    under (hi/lo)x the second-largest's, because object-level consolidation
+    keys the round's work on unique (camera, frame) demand, not on the
+    query count.  A ``RecompileGuard(max_new=1)`` arms after warmup on the
+    consolidated run: steady state must reuse compiled shapes.
+
+    Shard counts above the visible device count degrade to the device count
+    (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and
+    ``JAX_PLATFORMS=cpu`` to sweep the full 8-way fleet on one host)."""
+    import jax
+
+    sc = duke(60)
+    vis = sc["vis"]
+    # anchor pool: distinct visits all exiting inside one short window, so
+    # every query — including the late second wave — is actively ranking
+    # the same stretch of live stream instead of idling on a far anchor
+    cand = np.flatnonzero((vis.t_out >= 120) & (vis.t_out < 180))
+    pool = cand[np.random.default_rng(7).permutation(len(cand))[:pool_size]]
+    assert len(pool) >= 8, f"anchor window too sparse: {len(pool)} visits"
+    t0 = int(vis.t_out[pool].min())
+    # exit_t counts from the LAST sighting (matches re-anchor the search),
+    # so a moderate horizon retires the pool's quieter entities mid-sweep
+    # while dense-transit ones keep tracking: real completion churn
+    policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                                 exit_t=45)
+    wave_at = steps // 3
+    guard_after = (2 * steps) // 3
+    steady_from = wave_at + 5          # skip the wave's one growth compile
+
+    n_dev = len(jax.devices())
+    S = min(shards, n_dev)
+    rows = []
+    if S < shards:
+        rows.append(("query_churn_sweep/duke/shards", 0.0,
+                     f"degraded: {n_dev} devices visible, fleet runs "
+                     f"shards={S} (set xla_force_host_platform_device_count)"))
+    emb, wall = {}, {}
+    for N in n_levels:
+        eng_c, tr_c, lat_c, m_c, wall_c = _drive_churn(
+            sc, policy, pool, N, steps, t0, wave_at=wave_at, shards=S,
+            consolidate=True, guard_after=guard_after)
+        eng_r, tr_r, lat_r, m_r, wall_r = _drive_churn(
+            sc, policy, pool, N, steps, t0, wave_at=wave_at, shards=None,
+            consolidate=False)
+        assert _churn_trace_key(tr_c) == _churn_trace_key(tr_r), \
+            f"N={N}: consolidated fleet trace diverged from the " \
+            f"unconsolidated single engine"
+        assert eng_c.admitted_steps == eng_r.admitted_steps
+        assert eng_c.unique_frames == eng_r.unique_frames
+        assert eng_c.frames_processed == eng_r.frames_processed, \
+            f"N={N}: consolidation changed the embed-call count"
+        done = sum(q.done for q in eng_c.queries.values())
+        assert done > 0, f"N={N}: no mid-sweep completions (exit_t too big)"
+        assert eng_c.replay_steps > 0, \
+            f"N={N}: second wave never replayed (wave_at too early)"
+        emb[N] = int(eng_c.frames_processed)
+        wall[N] = float(sum(lat_c[steady_from:]))
+        steady_r = float(sum(lat_r[steady_from:]))
+        p50, p99 = _tick_pcts(lat_c)
+        for config, eng, w, steady, lat, m in (
+                ("consolidated_fleet", eng_c, wall_c, wall[N], lat_c, m_c),
+                ("unconsolidated_single", eng_r, wall_r, steady_r, lat_r,
+                 m_r)):
+            cp50, cp99 = _tick_pcts(lat)
+            bench_record("query_churn_sweep", scenario=sc["name"],
+                         config=config, n_queries=N,
+                         shards=S if config == "consolidated_fleet" else 0,
+                         admitted_steps=int(eng.admitted_steps),
+                         unique_frames=int(eng.unique_frames),
+                         embed_calls=int(eng.frames_processed),
+                         replay_steps=int(eng.replay_steps),
+                         wall_s=round(w, 4), steady_wall_s=round(steady, 4),
+                         p50_tick_ms=round(cp50, 3),
+                         p99_tick_ms=round(cp99, 3), matches=int(m),
+                         done=int(done))
+        rows.append((f"query_churn_sweep/{sc['name']}/n{N}/consolidated",
+                     wall[N] * 1e6 / max(N, 1),
+                     f"embed_calls={emb[N]} steady_wall={wall[N]:.3f}s "
+                     f"admitted_steps={eng_c.admitted_steps} "
+                     f"unique_frames={eng_c.unique_frames} "
+                     f"replay_steps={eng_c.replay_steps} done={done}/{N} "
+                     f"matches={m_c} p99_tick={p99:.1f}ms trace=identical"))
+        rows.append((f"query_churn_sweep/{sc['name']}/n{N}/unconsolidated",
+                     steady_r * 1e6 / max(N, 1),
+                     f"steady_wall={steady_r:.3f}s "
+                     f"note=per-frame reference path, same trace"))
+    # --- the acceptance asserts: sublinear in live query count ---------
+    lo, hi = n_levels[-2], n_levels[-1]
+    factor = hi / lo
+    er = emb[hi] / max(emb[lo], 1)
+    wr = wall[hi] / max(wall[lo], 1e-9)
+    assert er < factor, \
+        f"embed calls grew superlinearly: {emb[hi]} @ N={hi} vs " \
+        f"{emb[lo]} @ N={lo} ({er:.2f}x >= {factor:.1f}x)"
+    assert wr < factor, \
+        f"steady wall grew superlinearly: {wall[hi]:.3f}s @ N={hi} vs " \
+        f"{wall[lo]:.3f}s @ N={lo} ({wr:.2f}x >= {factor:.1f}x)"
+    bench_record("query_churn_sweep", scenario=sc["name"],
+                 config="sublinearity", n_lo=lo, n_hi=hi,
+                 embed_ratio=round(er, 3), wall_ratio=round(wr, 3),
+                 bound=factor)
+    rows.append((f"query_churn_sweep/{sc['name']}/sublinearity", 0.0,
+                 f"sublinear=ok embed_n{hi}/n{lo}={er:.2f}x "
+                 f"steady_wall_n{hi}/n{lo}={wr:.2f}x bound={factor:.1f}x"))
+    return rows

@@ -162,9 +162,10 @@ class RecompileGuard:
         from repro.analysis.registry import jit_entry_fns
         entries = jit_entry_fns()
         if hasattr(eng, "_fns"):           # ShardedServingEngine
-            f_admit, f_rank, f_advance = eng._fns()
+            f_admit, f_rank, f_rank_seg, f_advance = eng._fns()
             entries["fleet.admit@shard_map"] = f_admit
             entries["fleet.rank_advance@shard_map"] = f_rank
+            entries["fleet.rank_advance_seg@shard_map"] = f_rank_seg
             entries["fleet.advance@shard_map"] = f_advance
         return cls(entries, max_new=max_new, label=label)
 

@@ -139,7 +139,8 @@ def _bounds_findings() -> list[Violation]:
     from repro.kernels.decode_attention import decode_attention
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.mamba_scan import mamba_scan
-    from repro.kernels.reid_topk import reid_topk, reid_topk_masked
+    from repro.kernels.reid_topk import (reid_topk, reid_topk_masked,
+                                         reid_topk_segments)
 
     rng = np.random.default_rng(3)
     records: list[dict] = []
@@ -159,6 +160,13 @@ def _bounds_findings() -> list[Violation]:
         gc = rng.integers(0, C, G).astype(np.int32)
         gf = rng.integers(0, 9, G).astype(np.int32)
         records += _capture_call(reid_topk_masked, q, qf, adm, g, gc, gf, k)
+        # the segment-ID entry shares the padded call; sweep it over the
+        # same ragged shapes so a divergence in its padding arithmetic
+        # cannot hide behind the frame-tag variant
+        qs = rng.integers(0, 5, Q).astype(np.int32)
+        gs = rng.integers(0, 5, G).astype(np.int32)
+        records += _capture_call(reid_topk_segments, q, qs, adm, g, gc,
+                                 gs, k)
 
     for B, H, S, hd, KV, T in [(2, 4, 256, 64, 2, 512), (1, 2, 512, 32, 2, 256)]:
         q = rng.normal(size=(B, H, S, hd)).astype(np.float32)
@@ -246,6 +254,27 @@ def _sentinel_findings() -> list[Violation]:
     expect(bool((np.asarray(sv) == NEG_INF).all()
                 and (np.asarray(si) == -1).all()),
            "reid_topk_masked: frame-mismatched galleries are not "
+           "(NEG_INF, -1)")
+
+    # the segment-ID entry: an injective relabeling of the frame tags must
+    # be bit-identical to the frame variant (the consolidation plane's
+    # trace-identity contract) ...
+    q_seg = jnp.full((3,), 2, jnp.int32)        # frame 7 -> segment 2
+    g_seg = jnp.full((G,), 2, jnp.int32)
+    ssv, ssi = ops.reid_topk_segments(q, q_seg, adm, g, gc, g_seg, 2,
+                                      interpret=True)
+    msv, msi = ops.reid_topk_masked(q, qf, adm, g, gc, gf, 2,
+                                    interpret=True)
+    expect(bool(np.array_equal(np.asarray(ssv), np.asarray(msv))
+                and np.array_equal(np.asarray(ssi), np.asarray(msi))),
+           "reid_topk_segments: relabeled segment tags diverge from the "
+           "frame-tag variant")
+    # ... and a segment mismatch masks every row to the sentinel
+    ssv, ssi = ops.reid_topk_segments(q, q_seg, jnp.ones((3, C), bool), g,
+                                      gc, g_seg + 1, 2, interpret=True)
+    expect(bool((np.asarray(ssv) == NEG_INF).all()
+                and (np.asarray(ssi) == -1).all()),
+           "reid_topk_segments: segment-mismatched galleries are not "
            "(NEG_INF, -1)")
     return out
 

@@ -60,7 +60,7 @@ class Violation:
 # is explicitly fine — the rule names the expensive offenders.
 HOT_PATH_FUNCS = {
     "_round_body", "_skip_round", "_issue_prefetch", "_gather", "_scatter",
-    "rank_round", "rank_advance_round", "advance_round",
+    "_plan_round", "rank_round", "rank_advance_round", "advance_round",
 }
 HEAVY_NP_OPS = {
     "linalg", "argmin", "argmax", "sort", "argsort", "dot", "matmul",
@@ -100,12 +100,16 @@ TRACED_FUNCTION_STATICS: dict[str, dict[str, set[str]]] = {
     # step bodies both engines dispatch under jit / shard_map
     "runtime/engine.py": {
         "rank_advance_round": {"policy", "k"},
+        "rank_advance_round_seg": {"policy", "k"},
         "advance_round": {"policy"},
+        "_rank_outcome": {"match_thresh"},
     },
     # wrappers run at trace time; kernel bodies run under pallas
     "kernels/reid_topk.py": {
         "reid_topk": {"k", "block_q", "block_g", "interpret"},
         "reid_topk_masked": {"k", "block_q", "block_g", "interpret"},
+        "reid_topk_segments": {"k", "block_q", "block_g", "interpret"},
+        "_segment_masked_call": {"k", "block_q", "block_g", "interpret"},
         "_reid_kernel": {"k", "block_g", "ng", "g_real"},
         "_reid_masked_kernel": {"k", "block_g", "ng", "g_real"},
         "_merge_topk": {"k"},

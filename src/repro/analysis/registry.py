@@ -61,9 +61,17 @@ def _example_world(Q: int = 8, G: int = 24, D: int = 16, C: int = 4):
     gal = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
     gal_cam = jnp.asarray(rng.integers(0, C, G), jnp.int32)
     gal_frame = jnp.asarray(np.repeat(state.f_curr, G // Q + 1)[:G], jnp.int32)
+    # the consolidation plane's round-scoped relabeling: distinct content
+    # frames -> compact segment ids (exactly what RoundPlan builds)
+    segs = {f: s for s, f in
+            enumerate(sorted({int(x) for x in np.asarray(state.f_curr)}))}
+    q_seg = jnp.asarray([segs[int(x)] for x in np.asarray(state.f_curr)],
+                        jnp.int32)
+    gal_seg = jnp.asarray([segs[int(x)] for x in np.asarray(gal_frame)],
+                          jnp.int32)
     return dict(model=model, policy=policy, windows=windows, state=state,
                 q_feat=q_feat, mask=mask, gal=gal, gal_cam=gal_cam,
-                gal_frame=gal_frame)
+                gal_frame=gal_frame, q_seg=q_seg, gal_seg=gal_seg)
 
 
 def jit_entry_fns() -> dict[str, Any]:
@@ -76,9 +84,12 @@ def jit_entry_fns() -> dict[str, Any]:
         "policy.admit": _engine._admit_jit,
         "policy.advance": _engine._advance_round_jit,
         "rank_round": _engine.rank_round,
+        "rank_round_seg": _engine.rank_round_seg,
         "rank_advance_round": _engine._rank_advance_jit,
+        "rank_advance_round_seg": _engine._rank_advance_seg_jit,
         "reid_topk": kernel_ops.reid_topk,
         "reid_topk_masked": kernel_ops.reid_topk_masked,
+        "reid_topk_segments": kernel_ops.reid_topk_segments,
     }
 
 
@@ -101,15 +112,27 @@ def entries(include_fleet: bool = True) -> list[JitEntry]:
                  lambda: ((w["q_feat"], w["state"].f_curr, w["mask"],
                            w["gal"], w["gal_cam"], w["gal_frame"],
                            w["policy"].match_thresh, 2), {})),
+        JitEntry("rank_round_seg", fns["rank_round_seg"],
+                 lambda: ((w["q_feat"], w["q_seg"], w["mask"], w["gal"],
+                           w["gal_cam"], w["gal_frame"], w["gal_seg"],
+                           w["policy"].match_thresh, 2), {})),
         JitEntry("rank_advance_round", fns["rank_advance_round"],
                  lambda: ((w["policy"], w["windows"], w["state"], w["q_feat"],
                            w["mask"], w["gal"], w["gal_cam"], w["gal_frame"]),
                           dict(k=1))),
+        JitEntry("rank_advance_round_seg", fns["rank_advance_round_seg"],
+                 lambda: ((w["policy"], w["windows"], w["state"], w["q_feat"],
+                           w["q_seg"], w["mask"], w["gal"], w["gal_cam"],
+                           w["gal_frame"], w["gal_seg"]), dict(k=1))),
         JitEntry("reid_topk", fns["reid_topk"],
                  lambda: ((w["q_feat"], w["gal"], 2), dict(interpret=True))),
         JitEntry("reid_topk_masked", fns["reid_topk_masked"],
                  lambda: ((w["q_feat"], w["state"].f_curr, w["mask"],
                            w["gal"], w["gal_cam"], w["gal_frame"], 2),
+                          dict(interpret=True))),
+        JitEntry("reid_topk_segments", fns["reid_topk_segments"],
+                 lambda: ((w["q_feat"], w["q_seg"], w["mask"], w["gal"],
+                           w["gal_cam"], w["gal_seg"], 2),
                           dict(interpret=True))),
     ]
     if include_fleet:
@@ -117,7 +140,7 @@ def entries(include_fleet: bool = True) -> list[JitEntry]:
         from repro.runtime.cluster import ElasticMesh
         from repro.runtime.fleet import make_sharded_step_fns
         mesh = ElasticMesh(model_parallel=1).make_mesh([jax.devices()[0]])
-        f_admit, f_rank, f_advance = make_sharded_step_fns(
+        f_admit, f_rank, f_rank_seg, f_advance = make_sharded_step_fns(
             mesh, w["policy"], topk=1)
         out += [
             JitEntry("fleet.admit@shard_map", f_admit,
@@ -126,6 +149,10 @@ def entries(include_fleet: bool = True) -> list[JitEntry]:
                      lambda: ((w["windows"], w["state"], w["q_feat"],
                                w["mask"], w["gal"], w["gal_cam"],
                                w["gal_frame"]), {})),
+            JitEntry("fleet.rank_advance_seg@shard_map", f_rank_seg,
+                     lambda: ((w["windows"], w["state"], w["q_feat"],
+                               w["q_seg"], w["mask"], w["gal"], w["gal_cam"],
+                               w["gal_frame"], w["gal_seg"]), {})),
             JitEntry("fleet.advance@shard_map", f_advance,
                      lambda: ((w["windows"], w["state"]), {})),
         ]

@@ -93,7 +93,7 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
           policy: SearchPolicy = SearchPolicy(), *, max_batch: int = 256,
           retention: int = 600, geo_adj=None, shards: int | None = None,
           devices=None, gallery: str = "auto", topk: int = 1,
-          transport=None, prefetch: bool = False,
+          transport=None, prefetch: bool = False, consolidate: bool = True,
           recalibrate=None, visit_source=None) -> ServingEngine:
     """Live serving engine driving the same vectorized admission plane.
 
@@ -137,6 +137,16 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
                      behind compute; misspeculation falls back to the
                      blocking fetch (exactly accounted as prefetch_wasted).
                      Never changes the trace — only when blocks arrive.
+      consolidate=   cross-query object-level consolidation (default True):
+                     each round builds one fleet-global ``RoundPlan`` keyed
+                     by unique admitted (camera, frame) and ranks EVERY
+                     live query in a single segment-ID kernel call
+                     (``reid_topk_segments``), so per-round embed/rank cost
+                     scales with unique frames, not live queries.  False
+                     keeps the per-frame reference ranking path; the two
+                     are trace-identical (pinned by the consolidation
+                     differential) — the knob only exists as the
+                     reference baseline and an escape hatch.
       recalibrate=   close the §6 drift loop: True (default trigger knobs)
                      or a ``RecalibrationPolicy`` attaches a
                      ``RecalibrationController`` that polls the engine's
@@ -164,7 +174,8 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
                          "gallery has no remote owners to fetch from")
     cfg = EngineConfig(policy=policy, max_batch=max_batch,
                        retention=retention, gallery=gallery, topk=topk,
-                       transport=transport, prefetch=prefetch)
+                       transport=transport, prefetch=prefetch,
+                       consolidate=consolidate)
     if shards is not None or devices is not None:
         eng = ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
                                    shards=shards, devices=devices)

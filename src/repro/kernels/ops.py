@@ -18,6 +18,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.reid_topk import reid_topk as _reid
 from repro.kernels.reid_topk import reid_topk_masked as _reid_masked
+from repro.kernels.reid_topk import reid_topk_segments as _reid_segments
 
 
 def _auto_interpret(interpret):
@@ -56,6 +57,17 @@ def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
     return _reid_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
                         k, block_q=block_q, block_g=block_g,
                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_g", "interpret"))
+def reid_topk_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
+                       k: int, *, block_q: int = 128, block_g: int = 512,
+                       interpret: bool | None = None):
+    """Consolidated-round ranking: one call for ALL live queries, frame
+    tags replaced by round-scoped segment ids (injective per-round map)."""
+    return _reid_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
+                          k, block_q=block_q, block_g=block_g,
+                          interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))

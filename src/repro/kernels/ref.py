@@ -60,6 +60,20 @@ def reid_topk_masked_ref(queries, q_frame, admit, gallery, gal_cam,
     return sv, jnp.where(sv > NEG_INF / 2, si, -1)
 
 
+def reid_topk_segments_ref(queries, q_seg, admit, gallery, gal_cam,
+                           gal_seg, k: int):
+    """Oracle for the consolidated segment-ID variant: query q may only
+    score gallery row g when ``admit[q, gal_cam[g]]`` and ``gal_seg[g] ==
+    q_seg[q]`` — identical math to ``reid_topk_masked_ref`` with the frame
+    tags swapped for round-scoped segment ids."""
+    s = queries.astype(jnp.float32) @ gallery.astype(jnp.float32).T
+    gal_cam = jnp.asarray(gal_cam, jnp.int32)
+    valid = admit[:, gal_cam] & \
+        (jnp.asarray(gal_seg)[None, :] == jnp.asarray(q_seg)[:, None])
+    sv, si = jax.lax.top_k(jnp.where(valid, s, NEG_INF), k)
+    return sv, jnp.where(sv > NEG_INF / 2, si, -1)
+
+
 def mamba_scan_ref(u, dt, Bm, Cm, A, h0):
     """Sequential (step-by-step) selective scan oracle.
 

@@ -167,18 +167,15 @@ def _reid_masked_kernel(q_ref, qf_ref, adm_ref, g_ref, gf_ref, oh_ref,
         si_ref[...] = idx_scr[...]
 
 
-def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
-                     k: int, *, block_q: int = 128, block_g: int = 512,
-                     interpret: bool = False):
-    """Segment-masked gallery ranking over one deduplicated embedding batch.
-
-    queries (Q, D); q_frame (Q,) int32 — the content frame each query's
-    cursor is on; admit (Q, C) bool — the admission mask; gallery (G, D);
-    gal_cam / gal_frame (G,) int32 — which (camera, frame) each gallery row
-    came from.  Query q scores row g only when ``admit[q, gal_cam[g]]`` and
-    ``gal_frame[g] == q_frame[q]``; everything else is NEG_INF.  Returns
-    (scores (Q, k), idx (Q, k)) with fully-masked slots as (NEG_INF, -1).
-    """
+def _segment_masked_call(queries, q_tag, admit, gallery, gal_cam, gal_tag,
+                         k: int, block_q: int, block_g: int, interpret: bool):
+    """Shared padded pallas_call behind the frame-masked and segment-ID
+    entry points.  Query q scores gallery row g only when
+    ``admit[q, gal_cam[g]]`` and ``gal_tag[g] == q_tag[q]`` — the tag is the
+    content frame for ``reid_topk_masked`` and the round-scoped segment id
+    for ``reid_topk_segments``; int equality is the same kernel either way.
+    Padding keeps the tags disjoint (query side -1, gallery side -2) so a
+    padded slot can never pair with anything real or padded."""
     Q, D = queries.shape
     G = gallery.shape[0]
     C = admit.shape[1]
@@ -190,12 +187,12 @@ def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
     nq, ng = Qp // block_q, Gp // block_g
 
     queries = _pad_rows(queries, Qp, 0)
-    q_frame = _pad_rows(jnp.asarray(q_frame, jnp.int32)[:, None], Qp, -1)
+    q_tag = _pad_rows(jnp.asarray(q_tag, jnp.int32)[:, None], Qp, -1)
     admit = _pad_rows(admit.astype(jnp.float32), Qp, 0.0)
     admit = jnp.pad(admit, ((0, 0), (0, Cp - C)))
     gallery = _pad_rows(gallery, Gp, 0)
     gal_cam = _pad_rows(jnp.asarray(gal_cam, jnp.int32), Gp, -1)
-    gal_frame = _pad_rows(jnp.asarray(gal_frame, jnp.int32), Gp, -2)[None, :]
+    gal_tag = _pad_rows(jnp.asarray(gal_tag, jnp.int32), Gp, -2)[None, :]
     # (Cp, Gp) camera one-hot; padded rows (cam -1) match no camera
     onehot = (gal_cam[None, :] == jnp.arange(Cp)[:, None]).astype(jnp.float32)
 
@@ -225,5 +222,41 @@ def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
             pltpu.VMEM((block_q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, q_frame, admit, gallery, gal_frame, onehot)
+    )(queries, q_tag, admit, gallery, gal_tag, onehot)
     return _mask_padded(sv[:Q], si[:Q])
+
+
+def reid_topk_masked(queries, q_frame, admit, gallery, gal_cam, gal_frame,
+                     k: int, *, block_q: int = 128, block_g: int = 512,
+                     interpret: bool = False):
+    """Segment-masked gallery ranking over one deduplicated embedding batch.
+
+    queries (Q, D); q_frame (Q,) int32 — the content frame each query's
+    cursor is on; admit (Q, C) bool — the admission mask; gallery (G, D);
+    gal_cam / gal_frame (G,) int32 — which (camera, frame) each gallery row
+    came from.  Query q scores row g only when ``admit[q, gal_cam[g]]`` and
+    ``gal_frame[g] == q_frame[q]``; everything else is NEG_INF.  Returns
+    (scores (Q, k), idx (Q, k)) with fully-masked slots as (NEG_INF, -1).
+    """
+    return _segment_masked_call(queries, q_frame, admit, gallery, gal_cam,
+                                gal_frame, k, block_q, block_g, interpret)
+
+
+def reid_topk_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
+                       k: int, *, block_q: int = 128, block_g: int = 512,
+                       interpret: bool = False):
+    """Consolidated-round ranking: frame tags replaced by round-scoped
+    segment ids.
+
+    The engine's consolidation plane relabels each round's distinct content
+    frames to compact segment ids (an injective per-round map), tags every
+    query (``q_seg``, (Q,) int32) and gallery row (``gal_seg``, (G,) int32)
+    with its segment, and ranks ALL live queries in one call.  Because the
+    relabeling is injective, ``gal_seg[g] == q_seg[q]`` holds exactly when
+    the underlying frames agree — the masked score matrix, and therefore
+    every flat-argmin tie-break, is bit-identical to per-frame
+    ``reid_topk_masked``.  Returns (scores (Q, k), idx (Q, k)) with
+    fully-masked slots as (NEG_INF, -1).
+    """
+    return _segment_masked_call(queries, q_seg, admit, gallery, gal_cam,
+                                gal_seg, k, block_q, block_g, interpret)

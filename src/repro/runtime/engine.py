@@ -102,6 +102,13 @@ class EngineConfig:
     # transport latency hides behind the rank pass (misspeculation falls
     # back to the blocking fetch, exactly accounted)
     prefetch: bool = False
+    # cross-query object-level consolidation: rank the whole round through
+    # the segment-ID kernel (one ``reid_topk_segments`` call over the
+    # fleet-global ``RoundPlan``, content frames relabeled to compact
+    # per-round segment ids).  False keeps the per-frame reference path —
+    # the two are trace-identical (the relabeling is injective), which the
+    # consolidation differential pins
+    consolidate: bool = True
 
 
 @dataclasses.dataclass
@@ -123,22 +130,13 @@ def _admit_jit(model, policy: SearchPolicy, state: PhaseState, geo_adj=None):
     return admit(model, policy, state, geo_adj)
 
 
-@partial(jax.jit, static_argnames=("match_thresh", "k"))
-def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
-               match_thresh: float, k: int = 1):
-    """One device pass over the round's deduplicated embedding batch.
-
-    ``reid_topk_masked`` scores each query against exactly its admitted
-    galleries; the best (band-0) score converts back to the cosine distance
-    the control plane thresholds on — the argmax match path is unchanged by
-    k > 1, the extra bands only surface candidates.  Returns (matched (Q,),
-    match_cam (Q,), match_emb (Q, D), topk_val (Q, k), topk_idx (Q, k),
-    topk_cam (Q, k), topk_frame (Q, k)) — unmatched rows carry cam 0 and an
-    arbitrary embedding row; padded / fully-masked slots come back as
-    (NEG_INF, -1, -1, -1) in the bands, exactly like the kernels.
-    """
-    sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
-                                         gal_cam, gal_frame, k)
+def _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh):
+    """Shared post-kernel half of both ranking paths: convert the (Q, k)
+    score/index bands into the control plane's match outcome.  The best
+    (band-0) score converts back to the cosine distance the threshold is
+    applied to; unmatched rows carry cam 0 and an arbitrary embedding row;
+    padded / fully-masked slots come back as (NEG_INF, -1, -1, -1) in the
+    bands, exactly like the kernels."""
     best_val, best_idx = sv[:, 0], si[:, 0]
     dist = 1.0 - best_val
     matched = dist < match_thresh
@@ -149,6 +147,38 @@ def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
     topk_cam = jnp.where(valid, gal_cam[idx], -1).astype(jnp.int32)
     topk_frame = jnp.where(valid, gal_frame[idx], -1).astype(jnp.int32)
     return matched, match_cam, gallery[idx0], sv, si, topk_cam, topk_frame
+
+
+@partial(jax.jit, static_argnames=("match_thresh", "k"))
+def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
+               match_thresh: float, k: int = 1):
+    """One device pass over the round's deduplicated embedding batch.
+
+    ``reid_topk_masked`` scores each query against exactly its admitted
+    galleries; the argmax match path is unchanged by k > 1, the extra bands
+    only surface candidates.  Returns (matched (Q,), match_cam (Q,),
+    match_emb (Q, D), topk_val (Q, k), topk_idx (Q, k), topk_cam (Q, k),
+    topk_frame (Q, k)).
+    """
+    sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
+                                         gal_cam, gal_frame, k)
+    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh)
+
+
+@partial(jax.jit, static_argnames=("match_thresh", "k"))
+def rank_round_seg(q_feat, q_seg, mask, gallery, gal_cam, gal_frame, gal_seg,
+                   match_thresh: float, k: int = 1):
+    """Consolidated variant of ``rank_round``: frame tags replaced by the
+    ``RoundPlan``'s compact per-round segment ids (``q_seg`` (Q,) /
+    ``gal_seg`` (G,)).  The relabeling is injective over the round's
+    distinct content frames, so the masked score matrix — and every
+    flat-argmin tie-break behind the (Q, k) bands — is bit-identical to the
+    per-frame path; ``gal_frame`` still rides along so the trace records'
+    top-k bands surface REAL frame ids, not segment ids.
+    """
+    sv, si = kernel_ops.reid_topk_segments(q_feat, q_seg, mask, gallery,
+                                           gal_cam, gal_seg, k)
+    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh)
 
 
 def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
@@ -179,11 +209,36 @@ def advance_round(policy: SearchPolicy, windows, state: PhaseState):
                    jnp.zeros(Q, jnp.int32), _NO_HORIZON)
 
 
+def rank_advance_round_seg(policy: SearchPolicy, windows, state: PhaseState,
+                           q_feat, q_seg, mask, gallery, gal_cam, gal_frame,
+                           gal_seg, k: int = 1):
+    """Consolidated step body: the whole round ranks in ONE segment-ID
+    kernel call (``rank_round_seg``), then the same shared phase machine
+    advances.  Pure over (Q,)-batched inputs like ``rank_advance_round`` —
+    the fleet shard_maps it over the query axis with the gallery (and its
+    cam/frame/segment tags) replicated."""
+    (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
+     topk_frame) = rank_round_seg(q_feat, q_seg, mask, gallery, gal_cam,
+                                  gal_frame, gal_seg, policy.match_thresh, k)
+    nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
+    return (nxt, matched, match_cam, match_emb, topk_val, topk_idx,
+            topk_cam, topk_frame)
+
+
 @partial(jax.jit, static_argnames=("policy", "k"))
 def _rank_advance_jit(policy: SearchPolicy, windows, state: PhaseState,
                       q_feat, mask, gallery, gal_cam, gal_frame, k=1):
     return rank_advance_round(policy, windows, state, q_feat, mask,
                               gallery, gal_cam, gal_frame, k)
+
+
+@partial(jax.jit, static_argnames=("policy", "k"))
+def _rank_advance_seg_jit(policy: SearchPolicy, windows, state: PhaseState,
+                          q_feat, q_seg, mask, gallery, gal_cam, gal_frame,
+                          gal_seg, k=1):
+    return rank_advance_round_seg(policy, windows, state, q_feat, q_seg,
+                                  mask, gallery, gal_cam, gal_frame,
+                                  gal_seg, k)
 
 
 @partial(jax.jit, static_argnames=("policy",))
@@ -192,6 +247,49 @@ def _advance_round_jit(policy: SearchPolicy, windows, state: PhaseState):
 
 
 _pow2 = pow2   # shared with runtime.gallery: one padding rule everywhere
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """One round's fleet-global work queue, keyed by unique admitted
+    (camera, frame).
+
+    Built ONCE per round by ``_plan_round`` on the controller — the fleet's
+    shards all consume the same plan, so no shard re-embeds or re-fetches a
+    frame another shard's query already put in flight.  ``work`` is the
+    camera-major sorted unique (cam, frame) demand (the order that keeps
+    the kernels' flat-argmin tie-breaks bit-identical to the tracker);
+    ``want_count`` records how many (query, camera) admission steps each
+    key serves (the per-step miss convention — ``replay_miss_steps`` —
+    reads it on eviction); ``seg_of_frame``/``q_seg`` carry the round's
+    injective content-frame -> compact-segment relabeling for the
+    consolidated ``reid_topk_segments`` ranking pass.
+    """
+
+    qs: list
+    ps: PhaseState
+    slots: np.ndarray
+    mask: np.ndarray                        # (N, C) admission, host copy
+    admitted: int                           # per-(query, camera) steps
+    cams_by_q: list
+    work: list                              # sorted unique (cam, frame)
+    want_count: dict                        # key -> wanting (q, cam) pairs
+    seg_of_frame: dict                      # content frame -> segment id
+    q_seg: np.ndarray                       # (N,) int32, -1 on padding rows
+
+    def gallery_segments(self, batch_keys: list, key_emb: dict,
+                         rows: int) -> np.ndarray:
+        """Per-row segment tags for the assembled round gallery: each key's
+        embedding block (in ``batch_keys`` order, exactly how
+        ``assemble_round_gallery`` laid the rows out) gets its frame's
+        segment id; padding rows carry -1 like the cam/frame tags."""
+        gal_seg = np.full(rows, -1, np.int32)
+        pos = 0
+        for key in batch_keys:
+            cnt = len(key_emb[key])
+            gal_seg[pos:pos + cnt] = self.seg_of_frame[key[1]]
+            pos += cnt
+        return gal_seg
 
 
 class ServingEngine:
@@ -228,6 +326,9 @@ class ServingEngine:
         self.replay_steps = 0        # content rounds behind the frontier
         self.skipped_steps = 0       # short-circuited sampled-out rounds
         self.replay_misses = 0       # replay reads past the retention window
+        # the same misses in admitted_steps' per-(query, camera) convention:
+        # an evicted key wanted by k queries is k rescue failures, not 1
+        self.replay_miss_steps = 0
         self.ticks = 0
         # (C, C) replay-rescue attribution (phase >= 2 matches, keyed by the
         # anchor camera at match time) — the tracker's rescue_pairs, live:
@@ -312,8 +413,14 @@ class ServingEngine:
 
     def gallery_report(self) -> dict:
         """The embedding plane's own accounting: backend kind plus
-        hit/miss/eviction/put counters and resident memory."""
-        return dict(kind=self.gallery.kind, **self.gallery.counters())
+        hit/miss/eviction/put counters and resident memory.  Rescue-failure
+        cost rides along in BOTH conventions: ``replay_misses`` per unique
+        evicted key, ``replay_miss_steps`` per wanting (query, camera)
+        step (comparable with ``admitted_steps``)."""
+        return dict(kind=self.gallery.kind,
+                    replay_misses=self.replay_misses,
+                    replay_miss_steps=self.replay_miss_steps,
+                    **self.gallery.counters())
 
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
@@ -404,15 +511,45 @@ class ServingEngine:
                                  mask, gallery, gal_cam, gal_frame,
                                  k=self.cfg.topk)
 
+    def _dispatch_rank_advance_seg(self, ps: PhaseState, q_feat, q_seg,
+                                   mask, gallery, gal_cam, gal_frame,
+                                   gal_seg):
+        return _rank_advance_seg_jit(self.policy, self._windows, ps, q_feat,
+                                     q_seg, mask, gallery, gal_cam,
+                                     gal_frame, gal_seg, k=self.cfg.topk)
+
     def _dispatch_advance(self, ps: PhaseState):
         return _advance_round_jit(self.policy, self._windows, ps)
 
-    def _account_round(self, qs: list[QueryState],
-                       cams_by_q: list[np.ndarray],
-                       wanted: set[tuple[int, int]]) -> None:
-        """Per-round accounting hook — ``cams_by_q[i]`` is the camera set
-        query i admitted, ``wanted`` the round's globally-deduplicated
-        (cam, frame) demand (the fleet adds per-shard cost here)."""
+    def _plan_round(self, qs: list[QueryState]) -> RoundPlan:
+        """Gather + admit, then build the round's fleet-global work queue:
+        the deduplicated (cam, frame) demand with per-key want counts, and
+        the injective content-frame -> segment relabeling the consolidated
+        ranking pass tags queries and gallery rows with."""
+        ps = self._gather(qs)
+        sl = self._slots
+        mask = np.asarray(self._dispatch_admit(ps))                  # (N, C)
+        cams_by_q = [np.flatnonzero(mask[sl[i]]) for i in range(len(qs))]
+        want_count: dict[tuple[int, int], int] = {}
+        for i, q in enumerate(qs):
+            for cam in cams_by_q[i]:
+                key = (int(cam), q.f_curr)
+                want_count[key] = want_count.get(key, 0) + 1
+        seg_of_frame = {f: s for s, f in
+                        enumerate(sorted({q.f_curr for q in qs}))}
+        q_seg = np.full(mask.shape[0], -1, np.int32)
+        for i, q in enumerate(qs):
+            q_seg[sl[i]] = seg_of_frame[q.f_curr]
+        return RoundPlan(qs=qs, ps=ps, slots=sl, mask=mask,
+                         admitted=int(mask[sl].sum()), cams_by_q=cams_by_q,
+                         work=sorted(want_count), want_count=want_count,
+                         seg_of_frame=seg_of_frame, q_seg=q_seg)
+
+    def _account_round(self, plan: RoundPlan) -> None:
+        """Per-round accounting hook over the shared ``RoundPlan`` —
+        ``plan.cams_by_q[i]`` is the camera set query i admitted,
+        ``plan.work`` the round's globally-deduplicated (cam, frame) demand
+        (the fleet adds per-shard cost here)."""
 
     # -- per-tick ----------------------------------------------------------
     def ingest(self, frames_by_cam: dict[int, Any]):
@@ -432,7 +569,8 @@ class ServingEngine:
         stats = {"t": self.t, "admitted_steps": 0, "unique_frames": 0,
                  "batched": 0, "embedded": 0, "cache_hits": 0,
                  "replay_embeds": 0, "matches": 0, "replay_misses": 0,
-                 "content_steps": 0, "replay_steps": 0, "skipped_rounds": 0}
+                 "replay_miss_steps": 0, "content_steps": 0,
+                 "replay_steps": 0, "skipped_rounds": 0}
         # Replay pacing: a lagging query earns policy.replay_rate content
         # rounds per wall tick, with the fractional remainder carried across
         # ticks so e.g. replay_speed=1.5 really averages 1.5x, matching the
@@ -461,9 +599,16 @@ class ServingEngine:
             if not qs:
                 break
             for q in qs:
-                # live queries only get 1 content step per wall tick
-                budget[q.qid] -= 1 if q.f_curr < self.t \
-                    else budget[q.qid]
+                if q.f_curr < self.t:
+                    budget[q.qid] -= 1
+                else:
+                    # live queries only get 1 content step per wall tick; a
+                    # replayer that caught up mid-tick banks its unspent
+                    # budget back into replay_credit (the credit was already
+                    # decremented at tick start — forfeiting it here would
+                    # undershoot policy.replay_rate long-run)
+                    q.replay_credit += budget[q.qid] - 1
+                    budget[q.qid] = 0
             self._round(qs, stats, record_trace)
         self.t += 1
         self.ticks += 1
@@ -522,29 +667,24 @@ class ServingEngine:
                         self._issue_prefetch(all_qs)
                     return
 
-        ps = self._gather(qs)
-        sl = self._slots
-        mask = np.asarray(self._dispatch_admit(ps))                  # (N, C)
-        adm = int(mask[sl].sum())
-        stats["admitted_steps"] += adm
-        self.admitted_steps += adm
+        # the round's fleet-global work queue: one plan, every shard's
+        # queries — each admitted (cam, frame) pair embeds/fetches once no
+        # matter how many queries (on whichever shard) want it
+        plan = self._plan_round(qs)
+        ps, sl, mask = plan.ps, plan.slots, plan.mask
+        stats["admitted_steps"] += plan.admitted
+        self.admitted_steps += plan.admitted
+        self._account_round(plan)
+        stats["unique_frames"] += len(plan.work)
+        self.unique_frames += len(plan.work)
 
-        # dedup: each admitted (cam, frame) pair embeds once (fleet batching)
-        cams_by_q = [np.flatnonzero(mask[sl[i]]) for i in range(len(qs))]
-        wanted: set[tuple[int, int]] = set()
-        for i, q in enumerate(qs):
-            for cam in cams_by_q[i]:
-                wanted.add((int(cam), q.f_curr))
-        self._account_round(qs, cams_by_q, wanted)
-        stats["unique_frames"] += len(wanted)
-        self.unique_frames += len(wanted)
-
-        # camera-major key order: ascending gallery index reproduces the
-        # tracker's flat-argmin tie-break within every query's admitted set
+        # camera-major key order (plan.work is sorted): ascending gallery
+        # index reproduces the tracker's flat-argmin tie-break within every
+        # query's admitted set
         batch_keys: list[tuple[int, int]] = []
         frames: dict[tuple[int, int], Any] = {}
         key_emb: dict[tuple[int, int], np.ndarray] = {}
-        for key in sorted(wanted):
+        for key in plan.work:
             if self.cfg.embed_cache:
                 # prefetched blocks first (round N-1 speculated this key);
                 # any misspeculation falls back to the blocking fetch below
@@ -562,8 +702,13 @@ class ServingEngine:
             try:
                 frame = self.store.get(*key)
             except KeyError:            # evicted: cold-storage miss (§5.3)
+                # both conventions: one per unique key, plus one per wanting
+                # (query, camera) step — a key shared by k queries is k
+                # failed rescues at admitted_steps scale
                 self.replay_misses += 1
                 stats["replay_misses"] += 1
+                self.replay_miss_steps += plan.want_count[key]
+                stats["replay_miss_steps"] += plan.want_count[key]
                 continue
             if frame is not None and len(frame):
                 batch_keys.append(key)
@@ -617,9 +762,24 @@ class ServingEngine:
             q_feat = np.zeros((N, gal.shape[1]), np.float32)
             for i, q in enumerate(qs):
                 q_feat[sl[i]] = q.feat
-            ps_next, m, mc, me, tv, ti, tc, tf = self._dispatch_rank_advance(
-                ps, jnp.asarray(q_feat), jnp.asarray(mask), jnp.asarray(gal),
-                jnp.asarray(gal_cam), jnp.asarray(gal_frame))
+            if self.cfg.consolidate:
+                # consolidated path: ONE segment-ID kernel call ranks the
+                # whole round — frames relabeled to the plan's compact
+                # segment ids, gal_frame riding along for the trace bands
+                gal_seg = plan.gallery_segments(batch_keys, key_emb,
+                                                gal.shape[0])
+                (ps_next, m, mc, me, tv, ti, tc,
+                 tf) = self._dispatch_rank_advance_seg(
+                    ps, jnp.asarray(q_feat), jnp.asarray(plan.q_seg),
+                    jnp.asarray(mask), jnp.asarray(gal),
+                    jnp.asarray(gal_cam), jnp.asarray(gal_frame),
+                    jnp.asarray(gal_seg))
+            else:
+                (ps_next, m, mc, me, tv, ti, tc,
+                 tf) = self._dispatch_rank_advance(
+                    ps, jnp.asarray(q_feat), jnp.asarray(mask),
+                    jnp.asarray(gal), jnp.asarray(gal_cam),
+                    jnp.asarray(gal_frame))
             matched = np.asarray(m)
             match_cam = np.asarray(mc)
             match_emb = np.asarray(me)
@@ -664,16 +824,16 @@ class ServingEngine:
         ``PrefetchPipeline.consume`` validates at use time and the round
         falls back to the blocking fetch — the trace cannot change.
         """
-        live = [q for q in qs if not q.done]
-        if not live:
-            return
         # only replay cursors (f_curr behind the live frontier) can read a
         # cache-RESIDENT block — a live-frontier block was ingested this tick
-        # and is not embedded yet, so fetch_async declines it anyway.  Skip
-        # the speculative admit dispatch entirely when nothing is replaying:
-        # this is what keeps the prefetch path's zero-latency overhead
-        # proportional to the replay rounds, not to every round.
-        if all(q.f_curr >= self.t for q in live):
+        # and is not embedded yet, so issuing its key either declines or,
+        # worse, strands a handle that counts as prefetch_wasted when a
+        # concurrent replayer happened to embed the frame.  Filtering to
+        # replay cursors (not just skipping when NOBODY replays) keeps the
+        # waste metric honest in mixed cohorts and keeps the speculative
+        # admit dispatch proportional to the replay rounds.
+        live = [q for q in qs if not q.done and q.f_curr < self.t]
+        if not live:
             return
         ps = self._gather(live)
         sl = self._slots

@@ -51,15 +51,20 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.policy import admit
 from repro.parallel.compat import shard_map
 from repro.runtime.cluster import ElasticMesh, HeartbeatMonitor
-from repro.runtime.engine import (EngineConfig, QueryState, ServingEngine,
-                                  _pow2, advance_round, rank_advance_round)
+from repro.runtime.engine import (EngineConfig, QueryState, RoundPlan,
+                                  ServingEngine, _pow2, advance_round,
+                                  rank_advance_round, rank_advance_round_seg)
 from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
                                    ShardedGalleryStore)
 
 
 def make_sharded_step_fns(mesh, policy, topk: int):
-    """The fleet's three jitted shard_map step bodies for ``mesh`` — query
+    """The fleet's four jitted shard_map step bodies for ``mesh`` — query
     rows shard over the data axis, model/windows/gallery ride replicated.
+    Returned as (admit, rank_advance, rank_advance_seg, advance); the
+    segment variant is the consolidated round's ONE ranking pass, with the
+    per-query segment ids sharding alongside the state rows and the
+    gallery's segment tags replicated like its cam/frame tags.
     Module-level (not a method) so the static invariant plane
     (``repro.analysis``) can trace and audit the EXACT jaxprs the fleet
     dispatches, on any mesh."""
@@ -72,6 +77,12 @@ def make_sharded_step_fns(mesh, policy, topk: int):
         return rank_advance_round(policy, windows, state, q_feat, mask, gal,
                                   gal_cam, gal_frame, topk)
 
+    def _rank_advance_seg(windows, state, q_feat, q_seg, mask, gal, gal_cam,
+                          gal_frame, gal_seg):
+        return rank_advance_round_seg(policy, windows, state, q_feat, q_seg,
+                                      mask, gal, gal_cam, gal_frame, gal_seg,
+                                      topk)
+
     def _advance(windows, state):
         return advance_round(policy, windows, state)
 
@@ -81,6 +92,10 @@ def make_sharded_step_fns(mesh, policy, topk: int):
                           check_vma=False)),
         jax.jit(shard_map(_rank_advance, mesh=mesh,
                           in_specs=(Pr, Pd, Pd, Pd, Pr, Pr, Pr),
+                          out_specs=(Pd,) * 8,
+                          check_vma=False)),
+        jax.jit(shard_map(_rank_advance_seg, mesh=mesh,
+                          in_specs=(Pr, Pd, Pd, Pd, Pd, Pr, Pr, Pr, Pr),
                           out_specs=(Pd,) * 8,
                           check_vma=False)),
         jax.jit(shard_map(_advance, mesh=mesh,
@@ -365,20 +380,24 @@ class ShardedServingEngine(ServingEngine):
         return self._fns()[1](self._windows, ps, q_feat, mask, gallery,
                               gal_cam, gal_frame)
 
+    def _dispatch_rank_advance_seg(self, ps, q_feat, q_seg, mask, gallery,
+                                   gal_cam, gal_frame, gal_seg):
+        return self._fns()[2](self._windows, ps, q_feat, q_seg, mask,
+                              gallery, gal_cam, gal_frame, gal_seg)
+
     def _dispatch_advance(self, ps):
-        return self._fns()[2](self._windows, ps)
+        return self._fns()[3](self._windows, ps)
 
     # -- per-shard cost accounting ----------------------------------------
-    def _account_round(self, qs: list[QueryState],
-                       cams_by_q: list[np.ndarray],
-                       wanted: set[tuple[int, int]]) -> None:
+    def _account_round(self, plan: RoundPlan) -> None:
         """Per-worker view of the round, in BOTH cost conventions the
         gallery plane distinguishes: ``unique_frames`` is the worker's
         shard-LOCAL deduplicated (cam, frame) demand — what it would embed
         if every worker kept a private replicated cache; ``owned_frames``
-        is the worker's slice of ``wanted``, the round's fleet-GLOBAL
+        is the worker's slice of ``plan.work``, the round's fleet-GLOBAL
         dedup set (the frames whose camera it owns in the sharded
         gallery), which tiles the engine's ``unique_frames`` exactly."""
+        qs, cams_by_q = plan.qs, plan.cams_by_q
         by_worker: dict[str, list[int]] = {}
         for i, q in enumerate(qs):
             by_worker.setdefault(self._placement[q.qid], []).append(i)
@@ -390,9 +409,9 @@ class ShardedServingEngine(ServingEngine):
                      for i in idxs for cam in cams_by_q[i]}
             st["unique_frames"] += len(pairs)
         if isinstance(self.gallery, ShardedGalleryStore):
-            # sorted: `wanted` is a set, and owned_frames counts must not
-            # depend on hash-iteration order if this ever feeds placement
-            for cam, _f in sorted(wanted):
+            # plan.work is already camera-major sorted, so owned_frames
+            # counts never depend on hash-iteration order
+            for cam, _f in plan.work:
                 owner = self.gallery.owner_of(cam)
                 self._shard_stats[owner]["owned_frames"] += 1
 

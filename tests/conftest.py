@@ -73,7 +73,7 @@ def make_drifted_world(n_entities=80, t_shift=150, horizon=420, seed=0,
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                         lose_worker=0, extra_ticks=500, gallery="auto",
                         topk=1, embed_fn=None, recalibrate=None,
-                        transport=None, prefetch=False):
+                        transport=None, prefetch=False, consolidate=True):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
@@ -98,6 +98,7 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                        geo_adj=world["net"].geo_adjacent, shards=shards,
                        gallery=gallery, topk=topk, recalibrate=recalibrate,
                        transport=transport, prefetch=prefetch,
+                       consolidate=consolidate,
                        visit_source=rexcam.visits_window_source(vis)
                        if recalibrate is not None else None)
     t0 = int(vis.t_out[q_vids].min())
@@ -143,7 +144,8 @@ def trace_key(trace):
 def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
                                  lose_worker=0, single=None, gallery="auto",
                                  recalibrate=None, transport=None,
-                                 prefetch=False):
+                                 prefetch=False, consolidate=True,
+                                 single_consolidate=True):
     """THE differential assertion: the sharded fleet's rounds are
     bit-identical to the single-process engine's — admissions, match
     indices/values (tie-breaks included), rescue attribution, model-epoch
@@ -157,14 +159,15 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
     from repro.runtime.gallery import ShardedGalleryStore
 
     if single is None:
-        _, ref_trace, ref_sum = drive_serving_trace(world, policy,
-                                                    recalibrate=recalibrate)
+        _, ref_trace, ref_sum = drive_serving_trace(
+            world, policy, recalibrate=recalibrate,
+            consolidate=single_consolidate)
         single = (ref_trace, ref_sum)
     ref_trace, ref_sum = single
     eng, fl_trace, fl_sum = drive_serving_trace(
         world, policy, shards=shards, lose_at=lose_at,
         lose_worker=lose_worker, gallery=gallery, recalibrate=recalibrate,
-        transport=transport, prefetch=prefetch)
+        transport=transport, prefetch=prefetch, consolidate=consolidate)
     assert trace_key(fl_trace) == trace_key(ref_trace), \
         f"fleet (shards={shards}) trace diverged from the single engine"
     assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
@@ -248,6 +251,46 @@ def fleet_case_worker_loss(shards=4, lose_worker=1, lose_at=50,
     # worker owns no cameras anymore (fleet default gallery is sharded)
     assert eng.gallery.kind == "sharded"
     assert lost not in set(eng.gallery._owner.values())
+
+
+def fleet_case_consolidation(shard_counts=(1, 2, 4, 8), n_queries=5, seed=3,
+                             lose_at=50, lose_worker=1):
+    """The tentpole differential: the consolidated segment-ID path (one
+    ``reid_topk_segments`` call over the fleet-global RoundPlan) is
+    trace-identical to the UNCONSOLIDATED per-frame reference engine — the
+    reference single run here uses ``consolidate=False`` so the assertion
+    crosses both the fleet/single boundary AND the segment/frame-tag kernel
+    boundary in one differential.  Covers a query count not divisible by any
+    shard count > 1 (ragged shard padding) plus a mid-run worker-loss leg."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(max(shard_counts))
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    single = None
+    for shards in shard_counts:
+        _, single = assert_fleet_trace_identical(
+            world, policy, shards, single=single,
+            consolidate=True, single_consolidate=False)
+    # consolidated single engine against the same unconsolidated reference
+    _, c_trace, c_sum = drive_serving_trace(world, policy, consolidate=True)
+    ref_trace, ref_sum = single
+    assert trace_key(c_trace) == trace_key(ref_trace), \
+        "consolidated single engine diverged from the per-frame path"
+    assert c_sum["per_query"] == ref_sum["per_query"]
+    assert c_sum["admitted_steps"] == ref_sum["admitted_steps"]
+    assert c_sum["unique_frames"] == ref_sum["unique_frames"]
+    assert c_sum["content_steps"] == ref_sum["content_steps"]
+    assert c_sum["replay_steps"] == ref_sum["replay_steps"]
+    np.testing.assert_array_equal(c_sum["rescue_pairs"],
+                                  ref_sum["rescue_pairs"])
+    # worker loss mid-run with the consolidated fleet path
+    world2 = make_serving_world(seed=seed + 1, n_queries=7)
+    eng, _ = assert_fleet_trace_identical(
+        world2, policy, max(shard_counts) // 2, lose_at=lose_at,
+        lose_worker=lose_worker, consolidate=True, single_consolidate=False)
+    assert eng.rebalances == 1
 
 
 def fleet_case_recalibration(shard_counts=(2, 4, 8), n_queries=8, seed=0):

@@ -274,6 +274,42 @@ def test_fleet_load_counters_track_completions():
     assert eng._load("w0") == 0
 
 
+def test_replay_miss_conventions_per_key_and_per_step():
+    """Satellite: an evicted (cam, frame) key wanted by k queries is ONE
+    cold-storage miss in the per-key convention (``replay_misses``) but k
+    failed rescue steps in admitted_steps' per-(query, camera) convention
+    (``replay_miss_steps``) — both surface in ``gallery_report()``.  Pinned
+    with 3 same-anchor queries replaying into a fully-evicted window: every
+    round misses C keys but 3C steps."""
+    from repro import api as rexcam
+    from repro.core.policy import SearchPolicy
+    from conftest import make_serving_world
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    C = world["model"].n_cams
+    p = SearchPolicy(scheme="all", exit_t=60, replay_speed=1)
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=p,
+                       retention=4)
+    eng.t = 50
+    # one fresh frame per camera pushes every horizon past the replay window
+    eng.ingest({c: np.ones((2, 16), np.float32) for c in range(C)})
+    eng.t = 51
+    for qid in range(3):
+        eng.submit_query(qid, np.ones(16, np.float32), 0, 0)
+    R = 10
+    for _ in range(R):
+        stats = eng.tick()
+        # per tick: one round, all 3 cursors on one frame, C admitted keys
+        assert stats["replay_misses"] == C
+        assert stats["replay_miss_steps"] == 3 * C
+    assert eng.replay_misses == C * R
+    assert eng.replay_miss_steps == 3 * C * R
+    rep = eng.gallery_report()
+    assert rep["replay_misses"] == C * R
+    assert rep["replay_miss_steps"] == 3 * C * R
+
+
 # -- top-k candidate bands ---------------------------------------------------
 
 def test_topk_bands_surface_without_changing_argmax():

@@ -104,6 +104,49 @@ def test_reid_topk_masked_matches_ref():
     np.testing.assert_array_equal(si, ri)
 
 
+def test_reid_topk_segments_matches_ref():
+    """Segment-ID variant == oracle on a mixed (cam, segment) batch."""
+    rng = np.random.default_rng(13)
+    Q, G, C, D, k = 11, 83, 6, 32, 4
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
+    q_seg = jnp.asarray(rng.integers(0, 4, Q), jnp.int32)
+    gal_cam = jnp.asarray(rng.integers(0, C, G), jnp.int32)
+    gal_seg = jnp.asarray(rng.integers(0, 4, G), jnp.int32)
+    adm = jnp.asarray(rng.random((Q, C)) < 0.5)
+    sv, si = ops.reid_topk_segments(q, q_seg, adm, g, gal_cam, gal_seg, k)
+    rv, ri = ref.reid_topk_segments_ref(q, q_seg, adm, g, gal_cam, gal_seg, k)
+    np.testing.assert_allclose(sv, rv, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(si, ri)
+
+
+def test_reid_topk_segments_relabel_bit_identical_to_masked():
+    """An injective frame -> segment relabeling changes NOTHING: same
+    masked score matrix in, so the kernel's tie-breaks produce bit-identical
+    (values, indices).  This is the consolidation plane's trace-identity
+    contract — integer-valued features force exact float32 ties so the
+    comparison is bit-for-bit, not allclose."""
+    rng = np.random.default_rng(29)
+    Q, G, C, D, k = 17, 131, 5, 8, 3
+    q = jnp.asarray(rng.integers(0, 2, (Q, D)), jnp.float32)
+    g = jnp.asarray(rng.integers(0, 2, (G, D)), jnp.float32)
+    frames = np.array([3, 11, 40, 97], np.int32)       # sparse frame ids
+    q_frame = frames[rng.integers(0, 4, Q)]
+    gal_frame = frames[rng.integers(0, 4, G)]
+    gal_cam = jnp.asarray(rng.integers(0, C, G), jnp.int32)
+    adm = jnp.asarray(rng.random((Q, C)) < 0.6)
+    # the RoundPlan relabeling: sorted unique frames -> compact segment ids
+    seg_of = {int(f): s for s, f in enumerate(sorted(set(frames)))}
+    q_seg = np.array([seg_of[int(f)] for f in q_frame], np.int32)
+    gal_seg = np.array([seg_of[int(f)] for f in gal_frame], np.int32)
+    msv, msi = ops.reid_topk_masked(
+        q, jnp.asarray(q_frame), adm, g, gal_cam, jnp.asarray(gal_frame), k)
+    ssv, ssi = ops.reid_topk_segments(
+        q, jnp.asarray(q_seg), adm, g, gal_cam, jnp.asarray(gal_seg), k)
+    np.testing.assert_array_equal(np.asarray(msv), np.asarray(ssv))
+    np.testing.assert_array_equal(np.asarray(msi), np.asarray(ssi))
+
+
 @settings(max_examples=12, deadline=None)
 @given(st.integers(1, 24), st.integers(0, 70), st.integers(2, 5),
        st.integers(1, 4), st.booleans())
@@ -150,6 +193,17 @@ def test_reid_rank_parity_property(Q, G, C, k, ties):
             jnp.asarray(gf), jnp.asarray(gal_cam), jnp.asarray(gal_frame), kk)
         np.testing.assert_allclose(msv, rmv, rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(msi, rmi)
+        # the segment-ID entry under the round-scoped relabeling is
+        # bit-identical to the frame-tag variant (consolidation contract)
+        seg_of = {f: s for s, f in enumerate(sorted(set(q_frame) |
+                                                    set(gal_frame)))}
+        ssv, ssi = ops.reid_topk_segments(
+            jnp.asarray(qf),
+            jnp.asarray([seg_of[f] for f in q_frame], jnp.int32),
+            jnp.asarray(adm), jnp.asarray(gf), jnp.asarray(gal_cam),
+            jnp.asarray([seg_of[f] for f in gal_frame], jnp.int32), kk)
+        np.testing.assert_array_equal(np.asarray(msv), np.asarray(ssv))
+        np.testing.assert_array_equal(np.asarray(msi), np.asarray(ssi))
 
     (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
      topk_frame) = (

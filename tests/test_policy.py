@@ -372,6 +372,44 @@ def test_engine_replay_miss_past_retention():
     assert len(eng.queries[0].matches) == 0
 
 
+@pytest.mark.parametrize("replay_speed", [3, 2.5])
+def test_engine_replay_pacing_conserves_budget_on_midtick_catchup(
+        replay_speed):
+    """Regression (§5.3 pacing): a replayer that catches up MID-TICK runs
+    its frontier round with replay budget still unspent — the engine must
+    bank that remainder back into ``replay_credit`` instead of forfeiting
+    it, or the realized content-rounds/tick undershoot ``replay_rate``
+    long-run.  Conservation over a 200-tick always-lagging query: earned
+    credit == spent content rounds + the credit still banked, within one
+    round (the old code leaked ~1 round per catch-up tick, a deficit of
+    dozens here)."""
+    vis, gal, feats, model = _rare_path_world()
+    q_vid = len(vis) - 2
+    p = SearchPolicy(scheme="all", exit_t=100_000,
+                     replay_speed=replay_speed)
+    eng = rexcam.serve(model, embed_fn=lambda x: x, policy=p)
+    eng.t = 5
+    eng.submit_query(0, feats[q_vid], int(vis.cam[q_vid]), 0)
+    q = eng.queries[0]
+    T, shallow_ticks = 200, 0
+    for step in range(T):
+        # keep the query strictly lagging at every tick start (so credit is
+        # never zeroed by the caught-up branch): shallow lag makes the
+        # cursor catch the frontier mid-tick with budget to spare — the
+        # forfeiture case — while a periodic deep jump drains the banked
+        # credit as ordinary replay rounds
+        lag = 50 if step % 5 == 4 else 1
+        eng.t = max(eng.t, q.f_curr + lag)
+        shallow_ticks += (eng.t - q.f_curr) < p.replay_rate
+        eng.tick()
+    assert not q.done
+    assert shallow_ticks > 0, "no tick could catch up mid-round — inert"
+    earned = p.replay_rate * T
+    assert abs(earned - eng.content_steps - q.replay_credit) <= 1, \
+        (f"pacing leak: earned {earned} rounds, realized "
+         f"{eng.content_steps} + {q.replay_credit:.3f} banked")
+
+
 def _drive_world(eng, vis, gal, feats):
     for t in range(vis.horizon):
         frames = {}

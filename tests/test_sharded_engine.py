@@ -59,6 +59,15 @@ def test_fleet_worker_loss_rebalances_without_divergence():
     _fleet_case("fleet_case_worker_loss")
 
 
+def test_fleet_consolidated_path_trace_identical():
+    """The consolidation tentpole differential: the segment-ID ranking path
+    (one ``reid_topk_segments`` call over the fleet-global RoundPlan) is
+    bit-identical to the UNCONSOLIDATED per-frame reference engine across
+    shard counts {1, 2, 4, 8}, a non-divisible query count, and a mid-run
+    worker loss."""
+    _fleet_case("fleet_case_consolidation")
+
+
 def test_fleet_random_streams_property():
     """Satellite property test: random scheme/seed/shard-count/skip draws
     stay bit-identical (deterministic via tests/_hypothesis_fallback.py

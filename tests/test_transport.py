@@ -345,6 +345,66 @@ def test_prefetch_sweep_drops_stale_handles():
     assert fs.gallery.prefetch_wasted == 1
 
 
+def test_prefetch_issues_only_replay_cursor_keys_in_mixed_cohorts():
+    """Regression: with a MIXED cohort (replayers + live-frontier queries in
+    the same tick), ``_issue_prefetch`` must filter the speculated keys down
+    to replay cursors (``f_curr < t``) — a live-frontier block was ingested
+    this tick and is not embedded yet, so issuing its key strands a handle
+    that shows up as ``prefetch_wasted`` when a concurrent replayer embeds
+    the frame.  The old guard only skipped the all-live cohort, so mixed
+    cohorts leaked frontier keys.  Pin: every issued key sits strictly
+    behind the wall clock, and waste stays exactly 0 when nothing is ever
+    evicted (zero misspeculation)."""
+    from conftest import make_serving_world
+    from repro import api as rexcam
+    from repro.core.policy import SearchPolicy
+
+    world = make_serving_world(n_entities=80, horizon=300, seed=2,
+                               n_queries=5)
+    vis, gal, feats = world["vis"], world["gal"], world["feats"]
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60, replay_speed=2)
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x, policy=policy,
+                       geo_adj=world["net"].geo_adjacent, prefetch=True)
+    issued = []
+    real_issue = eng._prefetch.issue
+
+    def spy(keys):
+        issued.append((sorted(keys), eng.t))
+        return real_issue(keys)
+
+    eng._prefetch.issue = spy
+    q_vids = world["q_vids"]
+    t0 = int(vis.t_out[q_vids].min())
+    eng.t = t0
+    for i, q in enumerate(q_vids):
+        eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    mixed_ticks = 0
+    for t in range(t0, vis.horizon + 500):
+        if t < vis.horizon:
+            frames = {}
+            for c in range(vis.n_cams):
+                vids = gal[c, t][gal[c, t] >= 0]
+                if len(vids):
+                    frames[c] = feats[vids]
+            eng.ingest(frames)
+        live = [q for q in eng.queries.values() if not q.done]
+        mixed_ticks += (any(q.f_curr < eng.t for q in live)
+                        and any(q.f_curr >= eng.t for q in live))
+        eng.tick()
+        if all(q.done for q in eng.queries.values()):
+            break
+    assert mixed_ticks > 0, "cohorts never mixed — the scenario is inert"
+    assert issued, "prefetch never issued a key"
+    for keys, t in issued:
+        assert all(f < t for _c, f in keys), \
+            f"prefetch issued live-frontier keys {keys} at t={t}"
+    rep = eng.gallery_report()
+    assert rep["prefetch_wasted"] == 0, rep
+    assert rep["prefetch_hits"] > 0, \
+        "prefetch never served a block — the pipeline is inert here"
+
+
 def test_counters_have_transport_era_keys_everywhere():
     """Every GalleryStore reports the transport-era keys (zeros without a
     transport) so reports are shape-stable across backends."""
