@@ -148,7 +148,8 @@ def policy_sweep(scenarios=("duke", "porto130")):
 
 def _drive_serving(sc, policy, n_queries, steps, shards=None,
                    gallery="auto", transport=None, prefetch=False,
-                   guard_steady_after=None):
+                   guard_steady_after=None, tile_grid=0, model=None,
+                   topk_rerank=False, prime_gal=0):
     """The one engine-driving loop every serving benchmark shares: build the
     engine (fleet when ``shards``), submit the scenario's queries, replay the
     live stream tick by tick.  Returns (engine, matches, wall seconds
@@ -157,6 +158,12 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
     ``transport=``/``prefetch=`` pass straight through to ``rexcam.serve`` —
     the transport_sweep drives the same loop with a ``FakeRpcTransport`` so
     its walls are comparable against every other serving row.
+
+    ``tile_grid=T > 0`` serves through the sub-frame spatial admission plane
+    (per-detection tile labels from the scenario's ground-truth positions
+    ride along with every ingest); ``model=`` overrides the scenario's
+    profile — tile_sweep passes a tile-carrying re-profile of the same
+    visits.  ``topk_rerank=`` turns on §5.2 confidence re-ranking.
 
     ``guard_steady_after=N`` arms a ``RecompileGuard`` over every registered
     jit entry (plus the fleet's shard_map jits) once tick N is reached: the
@@ -167,15 +174,32 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
 
     vis, gal, feats, net = sc["vis"], sc["gal"], sc["feats"], sc["net"]
     q_vids = sc["q_vids"][:n_queries]
+    vis_tiles = None
+    if tile_grid > 0:
+        from repro.core.simulate import tile_index
+        vis_tiles = tile_index(vis.tile_xy, tile_grid)
     wall0 = time.perf_counter()
-    eng = rexcam.serve(sc["model"], embed_fn=lambda x: x, policy=policy,
+    eng = rexcam.serve(sc["model"] if model is None else model,
+                       embed_fn=lambda x: x, policy=policy,
                        geo_adj=net.geo_adjacent, shards=shards,
                        gallery=gallery, transport=transport,
-                       prefetch=prefetch)
+                       prefetch=prefetch, tile_grid=tile_grid,
+                       topk_rerank=topk_rerank)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
     for i, q in enumerate(q_vids):
         eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
+    # pre-size the padded batch: round cohorts form lazily (a 3-query
+    # cohort may first appear hundreds of ticks in), and every pow2 growth
+    # mints a jit signature — priming moves them all into warmup so the
+    # RecompileGuard-ed steady half compiles nothing
+    eng.prime_batch(len(q_vids))
+    if prime_gal:
+        # the gallery side has the same lazy-growth problem: a late phase-2
+        # rescue can admit the largest round gallery yet — callers that
+        # guard their steady state pass the high-water mark of an unguarded
+        # warmup drive so the rank signature is minted once, up front
+        eng.prime_gallery(prime_gal)
     matches = 0
     tick_lat = []
     guard = None
@@ -187,18 +211,42 @@ def _drive_serving(sc, policy, n_queries, steps, shards=None,
             guard = RecompileGuard.for_engine(
                 eng, max_new=1, label=f"steady after tick {step_i}")
             guard.__enter__()
-        frames = {}
+        frames, tiles = {}, {}
         for c in range(net.n_cams):
             vids = gal[c, t][gal[c, t] >= 0]
             if len(vids):
                 frames[c] = feats[vids]
-        eng.ingest(frames)
+                if vis_tiles is not None:
+                    tiles[c] = vis_tiles[vids]
+        if tile_grid > 0:
+            eng.ingest(frames, tiles)
+        else:
+            eng.ingest(frames)
         tk0 = time.perf_counter()
         matches += eng.tick()["matches"]
         tick_lat.append(time.perf_counter() - tk0)
     if guard is not None:
         guard.__exit__(None, None, None)
     return eng, matches, time.perf_counter() - wall0, tick_lat
+
+
+def _match_delay(eng) -> float:
+    """Mean ticks from submit to the first confirmed match (the Fig. 15
+    detection-delay metric) over the queries that ever matched; -1 when
+    none did."""
+    d = [q.first_match_t - q.submit_t for q in eng.queries.values()
+         if q.first_match_t >= 0]
+    return float(np.mean(d)) if d else -1.0
+
+
+#: §5.3 replay catch-up modes for the Fig. 15-style serving rows: real-time
+#: replay, fast-forward (parallelism — extra content rounds per wall tick)
+#: and frame-skip (sample every k-th content frame while behind).
+REPLAY_MODES = (
+    ("base", {}),
+    ("ff", dict(replay_speed=4.0)),
+    ("skip", dict(replay_skip=4)),
+)
 
 
 def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
@@ -208,7 +256,13 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
     tracker's cost and ``policy_sweep``'s savings multipliers) and
     ``unique_frames`` (deduplicated inference load), plus the multipliers
     the serving plane adds on top: cross-query dedup and the FrameStore
-    embedding-cache hit rate on replay re-reads."""
+    embedding-cache hit rate on replay re-reads.
+
+    A second block of rows replays Fig. 15 ON THE SERVING PLANE: the rexcam
+    scheme under each §5.3 replay catch-up mode (real-time, fast-forward,
+    frame-skip), reporting cost (admitted/content/replay steps) against the
+    detection delay (mean ticks from submit to first confirmed match) —
+    one ``BENCH_serving_sweep.json`` record per replay mode."""
     builders = {"duke": lambda: duke(60)}
     rows = []
     for sc_name in scenarios:
@@ -238,6 +292,169 @@ def serving_sweep(scenarios=("duke",), n_queries=16, steps=400):
                          f"unique_frames={eng.unique_frames} "
                          f"dedup={dedup:.1f}x replay_cache_hot={hot:.2f} "
                          f"matches={matches}"))
+        # Fig. 15 on the serving plane: cost vs detection delay per §5.3
+        # replay mode (ff buys delay with extra content rounds per tick,
+        # skip buys cost by sampling every k-th content frame while behind)
+        for mode, knobs in REPLAY_MODES:
+            policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05,
+                                         t_thresh=.02, **knobs)
+            eng, matches, wall, lat = _drive_serving(
+                sc, policy, n_q, steps, guard_steady_after=steps // 2)
+            delay = _match_delay(eng)
+            p50, p99 = _tick_pcts(lat)
+            bench_record("serving_sweep", scenario=sc["name"],
+                         policy="rexcam", replay_mode=mode,
+                         replay_speed=float(policy.replay_speed),
+                         replay_skip=int(policy.replay_skip),
+                         admitted_steps=int(eng.admitted_steps),
+                         content_steps=int(eng.content_steps),
+                         replay_steps=int(eng.replay_steps),
+                         skipped_steps=int(eng.skipped_steps),
+                         detection_delay_ticks=round(delay, 2),
+                         matches=int(matches), wall_s=round(wall, 4),
+                         p50_tick_ms=round(p50, 3),
+                         p99_tick_ms=round(p99, 3))
+            rows.append((f"serving_sweep/{sc['name']}/replay_{mode}",
+                         wall * 1e6 / max(n_q, 1),
+                         f"delay={delay:.1f}ticks "
+                         f"admitted_steps={eng.admitted_steps} "
+                         f"content_steps={eng.content_steps} "
+                         f"replay_steps={eng.replay_steps} "
+                         f"skipped={eng.skipped_steps} matches={matches}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# tile_sweep: sub-frame spatial admission — tile-granular pixel load vs the
+# camera-granular baseline, at equal recall.
+# ---------------------------------------------------------------------------
+
+def tile_sweep(n_queries=16, steps=400, tile_grid=8, tile_keep=1.0):
+    """The sub-frame spatial admission tentpole, measured and asserted on
+    duke:
+
+    * DIFFERENTIAL — serving with ``tile_grid=T`` over the scenario's
+      tile-less profile (the engine synthesizes the all-tiles-admitted
+      tensor) must reproduce the camera-granular baseline exactly: same
+      admitted_steps / unique_frames / matches, with
+      ``admitted_tiles == T*T * admitted_steps`` (the tile plane is a pure
+      refinement — asserted end to end, mirroring the fleet differential);
+    * LEARNED MASKS — re-profiling the same visits with
+      ``profile(..., tile_grid=T)`` learns per (src, dst) camera-pair
+      entry-region masks; serving through them must cut the admitted
+      pixel-load proxy (tiles actually scored, vs the camera-granular T*T
+      ceiling at the same admissions) by >= 2x at recall no worse than the
+      baseline's — both ASSERTED, the acceptance gate the CI smoke greps.
+
+    The pixel-load convention: a camera-granular admitted step decodes/
+    scores all T*T tiles of the frame; a tile-granular step touches only
+    the fused cells the model admits.  ``unique_tiles`` is the same under
+    the deduplicated convention (per-key tile unions vs T*T per unique
+    frame)."""
+    sc = duke(60)
+    vis = sc["vis"]
+    n_q = min(n_queries, len(sc["q_vids"]))
+    q_vids, gt_vids = sc["q_vids"][:n_q], sc["gt_vids"][:n_q]
+    T, TT = tile_grid, tile_grid * tile_grid
+    policy = rexcam.SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02)
+    rows = []
+
+    # unguarded warmup drive: learns the round-gallery row high-water mark
+    # (gallery shapes grow lazily — the largest round gallery can first
+    # appear deep in the run) so the three guarded drives below can prime
+    # both sides of every jit signature up front and compile nothing in
+    # their steady halves
+    warm, _, _, _ = _drive_serving(sc, policy, n_q, steps)
+    gal_rows = warm.padded_gallery_rows
+
+    # camera-granular baseline
+    base, m_base, wall_b, lat_b = _drive_serving(
+        sc, policy, n_q, steps, guard_steady_after=steps // 2,
+        prime_gal=gal_rows)
+    recall_b = _serving_recall(base, vis, q_vids, gt_vids)
+    p50_b, p99_b = _tick_pcts(lat_b)
+    bench_record("tile_sweep", scenario=sc["name"], config="camera",
+                 tile_grid=0, admitted_steps=int(base.admitted_steps),
+                 unique_frames=int(base.unique_frames),
+                 admitted_tiles=TT * int(base.admitted_steps),
+                 recall=round(recall_b, 4), matches=int(m_base),
+                 wall_s=round(wall_b, 4), p50_tick_ms=round(p50_b, 3),
+                 p99_tick_ms=round(p99_b, 3))
+    rows.append((f"tile_sweep/{sc['name']}/camera",
+                 wall_b * 1e6 / max(n_q, 1),
+                 f"recall={recall_b:.2f} "
+                 f"admitted_steps={base.admitted_steps} "
+                 f"pixel_load={TT * base.admitted_steps}tiles "
+                 f"matches={m_base}"))
+
+    # all-tiles-admitted differential: the tile execution path over the
+    # SAME tile-less model must change nothing but the counters' units
+    alladm, m_all, wall_a, lat_a = _drive_serving(
+        sc, policy, n_q, steps, tile_grid=T, guard_steady_after=steps // 2,
+        prime_gal=gal_rows)
+    assert alladm.admitted_steps == base.admitted_steps, \
+        "tile path changed admitted_steps under all-admitted tiles"
+    assert alladm.unique_frames == base.unique_frames, \
+        "tile path changed unique_frames under all-admitted tiles"
+    assert m_all == m_base, "tile path changed match outcomes"
+    assert alladm.admitted_tiles == TT * alladm.admitted_steps
+    assert alladm.unique_tiles == TT * alladm.unique_frames
+    p50_a, p99_a = _tick_pcts(lat_a)
+    bench_record("tile_sweep", scenario=sc["name"], config="all_admitted",
+                 tile_grid=T, admitted_steps=int(alladm.admitted_steps),
+                 unique_frames=int(alladm.unique_frames),
+                 admitted_tiles=int(alladm.admitted_tiles),
+                 unique_tiles=int(alladm.unique_tiles),
+                 recall=round(recall_b, 4), matches=int(m_all),
+                 wall_s=round(wall_a, 4), p50_tick_ms=round(p50_a, 3),
+                 p99_tick_ms=round(p99_a, 3))
+    rows.append((f"tile_sweep/{sc['name']}/all_admitted",
+                 wall_a * 1e6 / max(n_q, 1),
+                 f"differential=ok admitted_tiles={alladm.admitted_tiles} "
+                 f"(=TT*admitted_steps) matches={m_all} "
+                 f"wall={wall_a:.2f}s vs camera {wall_b:.2f}s"))
+
+    # learned entry-region masks, profiled on the scenario's own profile
+    # partition (same time_limit as the camera model)
+    tile_model = rexcam.profile(vis, time_limit=3000, tile_grid=T,
+                                tile_keep=tile_keep)
+    learned, m_t, wall_t, lat_t = _drive_serving(
+        sc, policy, n_q, steps, tile_grid=T, model=tile_model,
+        guard_steady_after=steps // 2, prime_gal=gal_rows)
+    recall_t = _serving_recall(learned, vis, q_vids, gt_vids)
+    pixel_base = TT * base.admitted_steps
+    reduction = pixel_base / max(learned.admitted_tiles, 1)
+    dedup_red = (TT * learned.unique_frames) / max(learned.unique_tiles, 1)
+    p50_t, p99_t = _tick_pcts(lat_t)
+    bench_record("tile_sweep", scenario=sc["name"], config="learned",
+                 tile_grid=T, tile_keep=tile_keep,
+                 admitted_steps=int(learned.admitted_steps),
+                 unique_frames=int(learned.unique_frames),
+                 admitted_tiles=int(learned.admitted_tiles),
+                 unique_tiles=int(learned.unique_tiles),
+                 pixel_reduction=round(reduction, 2),
+                 recall=round(recall_t, 4), matches=int(m_t),
+                 wall_s=round(wall_t, 4), p50_tick_ms=round(p50_t, 3),
+                 p99_tick_ms=round(p99_t, 3))
+    rows.append((f"tile_sweep/{sc['name']}/learned",
+                 wall_t * 1e6 / max(n_q, 1),
+                 f"pixel_reduction={reduction:.1f}x "
+                 f"admitted_tiles={learned.admitted_tiles} "
+                 f"of {pixel_base} camera-granular "
+                 f"dedup_reduction={dedup_red:.1f}x "
+                 f"recall={recall_t:.2f} (camera {recall_b:.2f}) "
+                 f"matches={m_t} wall={wall_t:.2f}s"))
+
+    # --- the acceptance asserts ----------------------------------------
+    assert reduction >= 2.0, \
+        f"tile_sweep: learned masks cut pixel load only {reduction:.2f}x " \
+        f"({learned.admitted_tiles} of {pixel_base} tiles) — need >= 2x"
+    assert recall_t >= recall_b, \
+        f"tile_sweep: tile recall {recall_t:.3f} dropped below the " \
+        f"camera-granular baseline's {recall_b:.3f}"
+    rows.append((f"tile_sweep/{sc['name']}/acceptance", 0.0,
+                 f"tile_gate=ok reduction={reduction:.1f}x>=2x "
+                 f"recall_delta={recall_t - recall_b:+.3f}"))
     return rows
 
 

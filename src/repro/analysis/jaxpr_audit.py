@@ -162,11 +162,14 @@ class RecompileGuard:
         from repro.analysis.registry import jit_entry_fns
         entries = jit_entry_fns()
         if hasattr(eng, "_fns"):           # ShardedServingEngine
-            f_admit, f_rank, f_rank_seg, f_advance = eng._fns()
+            (f_admit, f_rank, f_rank_seg, f_advance, f_admit_tiles,
+             f_rank_tiles) = eng._fns()
             entries["fleet.admit@shard_map"] = f_admit
             entries["fleet.rank_advance@shard_map"] = f_rank
             entries["fleet.rank_advance_seg@shard_map"] = f_rank_seg
             entries["fleet.advance@shard_map"] = f_advance
+            entries["fleet.admit_tiles@shard_map"] = f_admit_tiles
+            entries["fleet.rank_advance_tiles@shard_map"] = f_rank_tiles
         return cls(entries, max_new=max_new, label=label)
 
     @staticmethod

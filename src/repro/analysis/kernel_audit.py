@@ -140,7 +140,7 @@ def _bounds_findings() -> list[Violation]:
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.mamba_scan import mamba_scan
     from repro.kernels.reid_topk import (reid_topk, reid_topk_masked,
-                                         reid_topk_segments)
+                                         reid_topk_segments, reid_topk_tiles)
 
     rng = np.random.default_rng(3)
     records: list[dict] = []
@@ -166,6 +166,15 @@ def _bounds_findings() -> list[Violation]:
         qs = rng.integers(0, 5, Q).astype(np.int32)
         gs = rng.integers(0, 5, G).astype(np.int32)
         records += _capture_call(reid_topk_segments, q, qs, adm, g, gc,
+                                 gs, k)
+        # the tile-granular entry widens the admission axis to C*T*T fused
+        # cells; sweep it over the same ragged shapes (plus unlabeled -1
+        # rows) so its CT-axis round_up padding is proved alongside
+        TT = 4
+        adm_ct = rng.integers(0, 2, (Q, C * TT)).astype(bool)
+        g_ct = np.where(rng.random(G) < 0.1, -1,
+                        gc * TT + rng.integers(0, TT, G)).astype(np.int32)
+        records += _capture_call(reid_topk_tiles, q, qs, adm_ct, g, g_ct,
                                  gs, k)
 
     for B, H, S, hd, KV, T in [(2, 4, 256, 64, 2, 512), (1, 2, 512, 32, 2, 256)]:
@@ -276,6 +285,38 @@ def _sentinel_findings() -> list[Violation]:
                 and (np.asarray(ssi) == -1).all()),
            "reid_topk_segments: segment-mismatched galleries are not "
            "(NEG_INF, -1)")
+
+    # the tile-granular entry: with EVERY tile admitted the fused
+    # (camera, tile) cells reduce to camera admission, so the kernel must
+    # be bit-identical to the segment variant (the tile differential's
+    # trace-identity contract) ...
+    TT = 4
+    g_tile = jnp.asarray(rng.integers(0, TT, G), jnp.int32)
+    g_ct = gc * TT + g_tile
+    adm_ct = jnp.repeat(adm, TT, axis=1)        # admit_ct[q, c*TT+t]=adm[q,c]
+    tsv, tsi = ops.reid_topk_tiles(q, q_seg, adm_ct, g, g_ct, g_seg, 2,
+                                   interpret=True)
+    expect(bool(np.array_equal(np.asarray(tsv), np.asarray(msv))
+                and np.array_equal(np.asarray(tsi), np.asarray(msi))),
+           "reid_topk_tiles: all-tiles-admitted diverges from the "
+           "segment variant")
+    # ... an admitted camera whose TILE is masked ranks to the sentinel
+    adm_wrong = jnp.zeros((3, C * TT), bool).at[:, 0].set(True)
+    off_cell0 = jnp.where(g_ct == 0, 1, g_ct)   # no row sits in cell 0
+    tsv, tsi = ops.reid_topk_tiles(q, q_seg, adm_wrong, g, off_cell0,
+                                   g_seg, 2, interpret=True)
+    expect(bool((np.asarray(tsv) == NEG_INF).all()
+                and (np.asarray(tsi) == -1).all()),
+           "reid_topk_tiles: tile-mismatched galleries are not "
+           "(NEG_INF, -1)")
+    # ... and unlabeled gallery rows (cell -1) match nothing even under
+    # an all-admitted mask
+    tsv, tsi = ops.reid_topk_tiles(q, q_seg, jnp.ones((3, C * TT), bool),
+                                   g, jnp.full((G,), -1, jnp.int32),
+                                   g_seg, 2, interpret=True)
+    expect(bool((np.asarray(tsv) == NEG_INF).all()
+                and (np.asarray(tsi) == -1).all()),
+           "reid_topk_tiles: unlabeled (cell -1) rows are not (NEG_INF, -1)")
     return out
 
 

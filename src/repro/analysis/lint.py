@@ -102,7 +102,7 @@ TRACED_FUNCTION_STATICS: dict[str, dict[str, set[str]]] = {
         "rank_advance_round": {"policy", "k"},
         "rank_advance_round_seg": {"policy", "k"},
         "advance_round": {"policy"},
-        "_rank_outcome": {"match_thresh"},
+        "_rank_outcome": {"match_thresh", "n_cams", "topk_rerank"},
     },
     # wrappers run at trace time; kernel bodies run under pallas
     "kernels/reid_topk.py": {

@@ -69,9 +69,30 @@ def _example_world(Q: int = 8, G: int = 24, D: int = 16, C: int = 4):
                         jnp.int32)
     gal_seg = jnp.asarray([segs[int(x)] for x in np.asarray(gal_frame)],
                           jnp.int32)
+    # the sub-frame spatial admission plane at a tiny T=2 grid: a tile-
+    # carrying model clone, the fused (camera, tile) admission, and
+    # per-row fused cell tags (one unlabeled row exercises the -1 path)
+    import dataclasses as _dc
+    T = 2
+    TT = T * T
+    model_tiles = _dc.replace(
+        model, tile_admit=jnp.asarray(rng.integers(0, 2, (C, C, TT)), bool),
+        tile_grid=T, tile_learned=True)
+    mask_ct = jnp.asarray(rng.integers(0, 2, (Q, C * TT)), bool)
+    # per-query last-matched tiles for the learned self-follow column; one
+    # -1 row exercises the no-match-yet (admit-everything) path
+    tile_q = jnp.asarray(
+        np.where(np.arange(Q) % 3 == 0, -1, rng.integers(0, TT, Q)),
+        jnp.int32)
+    gal_ct = jnp.asarray(
+        np.where(np.arange(G) == G - 1, -1,
+                 np.asarray(gal_cam) * TT + rng.integers(0, TT, G)),
+        jnp.int32)
     return dict(model=model, policy=policy, windows=windows, state=state,
                 q_feat=q_feat, mask=mask, gal=gal, gal_cam=gal_cam,
-                gal_frame=gal_frame, q_seg=q_seg, gal_seg=gal_seg)
+                gal_frame=gal_frame, q_seg=q_seg, gal_seg=gal_seg,
+                model_tiles=model_tiles, mask_ct=mask_ct, gal_ct=gal_ct,
+                tile_q=tile_q, n_cams=C)
 
 
 def jit_entry_fns() -> dict[str, Any]:
@@ -82,14 +103,18 @@ def jit_entry_fns() -> dict[str, Any]:
     from repro.runtime import engine as _engine
     return {
         "policy.admit": _engine._admit_jit,
+        "policy.admit_tiles": _engine._admit_tiles_jit,
         "policy.advance": _engine._advance_round_jit,
         "rank_round": _engine.rank_round,
         "rank_round_seg": _engine.rank_round_seg,
+        "rank_round_tiles": _engine.rank_round_tiles,
         "rank_advance_round": _engine._rank_advance_jit,
         "rank_advance_round_seg": _engine._rank_advance_seg_jit,
+        "rank_advance_round_tiles": _engine._rank_advance_tiles_jit,
         "reid_topk": kernel_ops.reid_topk,
         "reid_topk_masked": kernel_ops.reid_topk_masked,
         "reid_topk_segments": kernel_ops.reid_topk_segments,
+        "reid_topk_tiles": kernel_ops.reid_topk_tiles,
     }
 
 
@@ -134,14 +159,32 @@ def entries(include_fleet: bool = True) -> list[JitEntry]:
                  lambda: ((w["q_feat"], w["q_seg"], w["mask"], w["gal"],
                            w["gal_cam"], w["gal_seg"], 2),
                           dict(interpret=True))),
+        JitEntry("policy.admit_tiles", fns["policy.admit_tiles"],
+                 lambda: ((w["model_tiles"], w["policy"], w["state"], None,
+                           w["tile_q"]), {})),
+        JitEntry("rank_round_tiles", fns["rank_round_tiles"],
+                 lambda: ((w["q_feat"], w["q_seg"], w["mask_ct"], w["gal"],
+                           w["gal_ct"], w["gal_cam"], w["gal_frame"],
+                           w["gal_seg"], w["policy"].match_thresh, 2,
+                           w["n_cams"]), {})),
+        JitEntry("rank_advance_round_tiles", fns["rank_advance_round_tiles"],
+                 lambda: ((w["policy"], w["windows"], w["state"], w["q_feat"],
+                           w["q_seg"], w["mask_ct"], w["gal"], w["gal_ct"],
+                           w["gal_cam"], w["gal_frame"], w["gal_seg"]),
+                          dict(k=1, n_cams=w["n_cams"]))),
+        JitEntry("reid_topk_tiles", fns["reid_topk_tiles"],
+                 lambda: ((w["q_feat"], w["q_seg"], w["mask_ct"], w["gal"],
+                           w["gal_ct"], w["gal_seg"], 2),
+                          dict(interpret=True))),
     ]
     if include_fleet:
         import jax
         from repro.runtime.cluster import ElasticMesh
         from repro.runtime.fleet import make_sharded_step_fns
         mesh = ElasticMesh(model_parallel=1).make_mesh([jax.devices()[0]])
-        f_admit, f_rank, f_rank_seg, f_advance = make_sharded_step_fns(
-            mesh, w["policy"], topk=1)
+        (f_admit, f_rank, f_rank_seg, f_advance, f_admit_tiles,
+         f_rank_tiles) = make_sharded_step_fns(mesh, w["policy"], topk=1,
+                                               n_cams=w["n_cams"])
         out += [
             JitEntry("fleet.admit@shard_map", f_admit,
                      lambda: ((w["model"], w["state"], None), {})),
@@ -155,5 +198,13 @@ def entries(include_fleet: bool = True) -> list[JitEntry]:
                                w["gal_frame"], w["gal_seg"]), {})),
             JitEntry("fleet.advance@shard_map", f_advance,
                      lambda: ((w["windows"], w["state"]), {})),
+            JitEntry("fleet.admit_tiles@shard_map", f_admit_tiles,
+                     lambda: ((w["model_tiles"], w["state"], None,
+                               w["tile_q"]), {})),
+            JitEntry("fleet.rank_advance_tiles@shard_map", f_rank_tiles,
+                     lambda: ((w["windows"], w["state"], w["q_feat"],
+                               w["q_seg"], w["mask_ct"], w["gal"],
+                               w["gal_ct"], w["gal_cam"], w["gal_frame"],
+                               w["gal_seg"]), {})),
         ]
     return out

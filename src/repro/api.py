@@ -44,7 +44,8 @@ _sanitize.maybe_enable_from_env()
 
 def profile(visits: Visits, *, time_limit: int | None = None,
             n_bins: int = 256, bin_width: int = 1,
-            sample_every: int = 1, epoch: int = 0) -> SpatioTemporalModel:
+            sample_every: int = 1, epoch: int = 0, tile_grid: int = 0,
+            tile_keep: float = 1.0) -> SpatioTemporalModel:
     """Offline profiling (paper §6): historical visits -> spatio-temporal
     model M.
 
@@ -62,11 +63,22 @@ def profile(visits: Visits, *, time_limit: int | None = None,
                      timestamps (§8.4's cheaper-profiling degradation).
       epoch=         model version stamp (0 = offline profile; the
                      recalibration loop bumps it on every hot-swap).
+      tile_grid=     T > 0 additionally learns per (src, dst) camera-pair
+                     entry-region masks over a T x T sub-frame tile grid
+                     (CrossRoI-style spatial admission) from the visits'
+                     normalized ``tile_xy`` positions — serving with
+                     ``serve(..., tile_grid=T)`` then admits only those
+                     tiles.  Requires ``visits.tile_xy``; 0 (default) skips
+                     the spatial plane entirely.
+      tile_keep=     fraction of each pair's observed entry mass the learned
+                     mask must cover before the 3x3 dilation halo (1.0 keeps
+                     every observed tile — the recall-safe default).
     """
     return build_model(visits.ent, visits.cam, visits.t_in, visits.t_out,
                        visits.n_cams, n_bins=n_bins, bin_width=bin_width,
                        sample_every=sample_every, time_limit=time_limit,
-                       epoch=epoch)
+                       epoch=epoch, tile_xy=visits.tile_xy,
+                       tile_grid=tile_grid, tile_keep=tile_keep)
 
 
 def track(model: SpatioTemporalModel, visits: Visits, gallery, feats,
@@ -94,6 +106,7 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
           retention: int = 600, geo_adj=None, shards: int | None = None,
           devices=None, gallery: str = "auto", topk: int = 1,
           transport=None, prefetch: bool = False, consolidate: bool = True,
+          tile_grid: int = 0, topk_rerank: bool = False,
           recalibrate=None, visit_source=None) -> ServingEngine:
     """Live serving engine driving the same vectorized admission plane.
 
@@ -147,6 +160,23 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
                      are trace-identical (pinned by the consolidation
                      differential) — the knob only exists as the
                      reference baseline and an escape hatch.
+      tile_grid=     sub-frame spatial admission (default 0 = off): T > 0
+                     refines camera admission to a T x T tile grid — each
+                     round ranks through the tile-masked ``reid_topk_tiles``
+                     kernel, scoring only gallery detections inside the
+                     model's learned per-(src, dst) entry-region tiles
+                     (``profile(..., tile_grid=T)``).  A model without tile
+                     data serves all-tiles-admitted, which is
+                     trace-identical to camera-granular serving (pinned by
+                     the tile differential).  Tile mode makes per-detection
+                     tile labels MANDATORY at ingest:
+                     ``engine.ingest(frames_by_cam, tiles_by_cam)``.
+      topk_rerank=   §5.2 top-k confidence re-ranking (default False): the
+                     candidate bands that pass the match threshold vote by
+                     summed score per camera and the match re-anchors to the
+                     winning camera's best band.  Bit-identical to the
+                     argmax path at topk=1 (pinned by the k=1 equivalence
+                     regression).
       recalibrate=   close the §6 drift loop: True (default trigger knobs)
                      or a ``RecalibrationPolicy`` attaches a
                      ``RecalibrationController`` that polls the engine's
@@ -175,7 +205,8 @@ def serve(model: SpatioTemporalModel, embed_fn: Callable,
     cfg = EngineConfig(policy=policy, max_batch=max_batch,
                        retention=retention, gallery=gallery, topk=topk,
                        transport=transport, prefetch=prefetch,
-                       consolidate=consolidate)
+                       consolidate=consolidate, tile_grid=tile_grid,
+                       topk_rerank=topk_rerank)
     if shards is not None or devices is not None:
         eng = ShardedServingEngine(model, embed_fn, cfg, geo_adj=geo_adj,
                                    shards=shards, devices=devices)

@@ -42,6 +42,23 @@ class SpatioTemporalModel:
     # recompiles the jitted admission/ranking paths; trace records carry it
     # so the differential harness can pin swap timing across the fleet.
     epoch: int = 0
+    # CrossRoI-style sub-frame admission: tile_admit[c_s, c_d, t] says
+    # whether tile t of camera c_d's T x T grid ever receives c_s -> c_d
+    # handoff traffic (smoothed + thresholded entry-region histogram).  A
+    # data field so recalibration hot-swaps carry it without recompiling;
+    # tile_grid is static (it shapes every tile-path jaxpr).  tile_grid=0
+    # means "no tile plane" — camera-granular admission only.
+    tile_admit: jnp.ndarray | None = None   # (C, C, T*T) bool, or None
+    tile_grid: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # True iff tile_admit was LEARNED from profiled positions (vs the
+    # engine-synthesized all-tiles-admitted tensor a tile-less model gets).
+    # Static because it selects the admission jaxpr: a learned model also
+    # activates the self-camera follow neighborhood (the query's last
+    # matched tile +- a 1-tile halo instead of the whole frame), which a
+    # synthesized model must NOT — the tile differential pins the
+    # synthesized path bit-identical to camera-granular serving.
+    tile_learned: bool = dataclasses.field(metadata=dict(static=True),
+                                           default=False)
 
     @property
     def n_cams(self) -> int:

@@ -267,6 +267,75 @@ def admit(model: "SpatioTemporalModel", policy: SearchPolicy, state: PhaseState,
     return mask & process[:, None] & (~state.done)[:, None]
 
 
+def tile_follow_mask(tile_q: jnp.ndarray, T: int) -> jnp.ndarray:
+    """(Q, T*T) bool: the 3x3 neighborhood of each query's last-matched
+    tile on the T x T grid (clipped at frame edges) — the same 1-tile halo
+    the profiler dilates its entry-region masks by, covering per-frame
+    jitter and slow in-FOV motion.  ``tile_q < 0`` (no match yet: the
+    anchor detection carries no tile) admits every tile."""
+    cells = jnp.arange(T * T, dtype=jnp.int32)
+    cy, cx = cells // T, cells % T
+    qy, qx = (tile_q[:, None] // T), (tile_q[:, None] % T)
+    near = (jnp.abs(cy[None, :] - qy) <= 1) & (jnp.abs(cx[None, :] - qx) <= 1)
+    return near | (tile_q < 0)[:, None]
+
+
+def tile_admission(model: "SpatioTemporalModel", policy: SearchPolicy,
+                   state: PhaseState,
+                   tile_q: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(Q, C, T*T) bool: which sub-frame tiles of each destination camera a
+    query searches, from the profiled entry-region masks
+    ``model.tile_admit[c_q]``.
+
+    Recall-preserving relaxations mirror the camera plane's: the relaxed
+    replay and exhaustive phases (phase >= 2) admit every tile — a rescue
+    pass must not re-apply the spatial prior whose miss it is rescuing —
+    and pairs the profiler never observed are already all-True in the
+    tensor itself.
+
+    The self camera (the follow window) is where entry-region priors say
+    nothing: an entity mid-FOV is wherever it was last seen, not at a
+    portal.  With a LEARNED model (``model.tile_learned``) and per-query
+    last-matched tiles ``tile_q``, the self column narrows to
+    ``tile_follow_mask`` — the last tile +- a 1-tile halo, all tiles until
+    the first match.  A synthesized (tile-less) model keeps the whole
+    frame, preserving the bit-identity with camera-granular serving the
+    tile differential pins."""
+    C = model.S.shape[0]
+    tiles = model.tile_admit[state.c_q]                  # (Q, C, TT)
+    self_cam = jax.nn.one_hot(state.c_q, C, dtype=jnp.bool_)
+    if model.tile_learned and tile_q is not None:
+        # inside the follow window the self column narrows to the follow
+        # mask (a missed novel re-entry is phase 2's to rescue, all tiles);
+        # outside it, self admission only comes from observed self-transit
+        # correlation, so the learned diagonal (re-entry portals) applies
+        follow = tile_follow_mask(tile_q, model.tile_grid)   # (Q, TT)
+        diag = model.tile_admit[state.c_q, state.c_q]        # (Q, TT)
+        self_col = jnp.where((state.elapsed <= policy.self_window)[:, None],
+                             follow, diag)
+        tiles = jnp.where(self_cam[:, :, None], self_col[:, None, :], tiles)
+    else:
+        self_mask = self_cam & (state.elapsed <= policy.self_window)[:, None]
+        tiles = tiles | self_mask[:, :, None]
+    return tiles | (state.phase >= 2)[:, None, None]
+
+
+def admit_tiles(model: "SpatioTemporalModel", policy: SearchPolicy,
+                state: PhaseState, geo_adj=None, tile_q=None):
+    """Tile-granular admission: the (Q, C) camera mask (identical to
+    ``admit`` — the tile plane refines, never changes, WHICH cameras are
+    searched) plus the fused (Q, C*T*T) per-(camera, tile) admission the
+    tile kernel consumes: ``mask_ct[q, c*T*T + t] = mask[q, c] AND
+    tile_admission[q, c, t]``.  ``tile_q`` (Q,) int32 is each query's
+    last-matched tile (-1 before the first match) — only consulted for a
+    learned model's self-camera follow column."""
+    mask = admit(model, policy, state, geo_adj)
+    tiles = tile_admission(model, policy, state, tile_q)
+    Q = mask.shape[0]
+    mask_ct = (mask[:, :, None] & tiles).reshape(Q, -1)
+    return mask, mask_ct
+
+
 # ---------------------------------------------------------------------------
 # advance — the one phase-machine transition.
 # ---------------------------------------------------------------------------

@@ -63,24 +63,99 @@ def transitions_from_visits(ent, cam, t_in, t_out):
     return src, dst, dt, c[is_last], c[is_first]
 
 
+def tile_admit_from_visits(ent, cam, t_in, tile_xy, n_cams: int,
+                           tile_grid: int, tile_keep: float = 1.0):
+    """Learn per directed camera-pair entry-region masks on a T x T grid.
+
+    For every consecutive-visit transition (c_s -> c_d) the DESTINATION
+    visit's tile is histogrammed into ``hist[c_s, c_d, tile]``; each pair's
+    histogram is thresholded to the smallest tile set covering ``tile_keep``
+    of its observed mass, then dilated by one tile in every direction (a 3x3
+    halo) so detections that jitter across a tile boundary stay admitted.
+    Pairs with NO profiled transitions admit every tile — never-observed
+    does not mean never-possible, and whole-camera admission already
+    gates them spatially/temporally.
+
+    Returns a (C, C, T*T) bool ndarray.
+    """
+    from repro.core.simulate import tile_index
+
+    C, T = n_cams, tile_grid
+    order = np.lexsort((np.asarray(t_in), np.asarray(ent)))
+    e = np.asarray(ent)[order]
+    c = np.asarray(cam)[order]
+    same = e[1:] == e[:-1]
+    src = c[:-1][same]
+    dst = c[1:][same]
+    dst_tile = tile_index(np.asarray(tile_xy)[order][1:][same], T)
+
+    hist = np.zeros((C, C, T * T), np.float64)
+    np.add.at(hist, (src, dst, dst_tile), 1.0)
+
+    total = hist.sum(-1)                         # (C, C) transitions per pair
+    admit = np.ones((C, C, T * T), bool)         # unobserved pairs: admit all
+    observed = np.argwhere(total > 0)
+    for s, d in observed:
+        h = hist[s, d]
+        # smallest tile set covering tile_keep of the pair's observed mass
+        ranked = np.argsort(-h, kind="stable")
+        cum = np.cumsum(h[ranked])
+        n_keep = int(np.searchsorted(cum, tile_keep * total[s, d] - 1e-9)) + 1
+        core = np.zeros(T * T, bool)
+        core[ranked[:n_keep]] = h[ranked[:n_keep]] > 0
+        # 3x3 dilation halo on the T x T grid
+        g = core.reshape(T, T)
+        out = g.copy()
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                ys = slice(max(dy, 0), T + min(dy, 0))
+                yd = slice(max(-dy, 0), T + min(-dy, 0))
+                xs = slice(max(dx, 0), T + min(dx, 0))
+                xd = slice(max(-dx, 0), T + min(-dx, 0))
+                out[yd, xd] |= g[ys, xs]
+        admit[s, d] = out.reshape(T * T)
+    return admit
+
+
 def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
                 bin_width: int = 1, sample_every: int = 1,
                 time_limit: int | None = None,
-                epoch: int = 0) -> SpatioTemporalModel:
+                epoch: int = 0, tile_xy=None, tile_grid: int = 0,
+                tile_keep: float = 1.0) -> SpatioTemporalModel:
     """Profile a visit table into a SpatioTemporalModel.
 
     ``time_limit`` restricts profiling to visits starting before it (paper
     §8.4 profiles on a prefix partition of the data).  ``epoch`` stamps the
     model version (0 = the offline profile; ``runtime.recal`` bumps it on
-    every recalibration hot-swap).
+    every recalibration hot-swap).  ``tile_grid=T`` with per-visit
+    normalized positions ``tile_xy`` additionally learns the CrossRoI-style
+    (C, C, T*T) entry-region admit tensor (``tile_admit_from_visits``);
+    ``tile_keep`` is that pass's mass-coverage threshold.
     """
     ent, cam, t_in, t_out = map(np.asarray, (ent, cam, t_in, t_out))
+    if tile_xy is not None:
+        tile_xy = np.asarray(tile_xy)
     if time_limit is not None:
         keep = t_in < time_limit
         ent, cam, t_in, t_out = ent[keep], cam[keep], t_in[keep], t_out[keep]
+        if tile_xy is not None:
+            tile_xy = tile_xy[keep]
+    if sample_every > 1 and tile_xy is not None:
+        # keep the tile labels in lockstep with the frame-sampled visit
+        # filter (same `seen` predicate subsample_visits applies)
+        k = sample_every
+        tile_xy = tile_xy[((t_in + k - 1) // k) * k <= t_out]
     ent, cam, t_in, t_out = subsample_visits(ent, cam, t_in, t_out, sample_every)
 
     src, dst, dt, exit_cams, entry_cams = transitions_from_visits(ent, cam, t_in, t_out)
+
+    tile_admit = None
+    if tile_grid > 0:
+        if tile_xy is None:
+            raise ValueError("tile_grid > 0 requires per-visit tile_xy "
+                             "positions (Visits.tile_xy)")
+        tile_admit = tile_admit_from_visits(ent, cam, t_in, tile_xy, n_cams,
+                                            tile_grid, tile_keep)
 
     C, NB = n_cams, n_bins
     counts = np.zeros((C, C), np.float64)
@@ -117,6 +192,9 @@ def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
         counts=jnp.asarray(counts, jnp.float32),
         bin_width=bin_width,
         epoch=epoch,
+        tile_admit=None if tile_admit is None else jnp.asarray(tile_admit),
+        tile_grid=tile_grid,
+        tile_learned=tile_admit is not None,
     )
 
 

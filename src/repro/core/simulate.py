@@ -49,9 +49,23 @@ class Visits:
     t_out: np.ndarray   # (V,) last visible step (inclusive)
     horizon: int        # total simulated steps
     n_cams: int
+    # normalized sub-frame detection position in [0, 1)^2, one per visit —
+    # grid-agnostic, so one simulated world serves every tile_grid choice
+    # (``tile_index`` quantizes at consumption time).  None = no spatial
+    # labels (tile-granular admission degrades to whole-camera).
+    tile_xy: np.ndarray | None = None   # (V, 2) float32 (x, y)
 
     def __len__(self):
         return len(self.ent)
+
+
+def tile_index(tile_xy: np.ndarray, tile_grid: int) -> np.ndarray:
+    """Quantize normalized (x, y) detection positions onto a T x T grid:
+    flat tile id = floor(y*T)*T + floor(x*T), int32 in [0, T*T)."""
+    xy = np.clip(np.asarray(tile_xy, np.float64), 0.0, np.nextafter(1.0, 0.0))
+    tx = np.floor(xy[..., 0] * tile_grid).astype(np.int32)
+    ty = np.floor(xy[..., 1] * tile_grid).astype(np.int32)
+    return ty * np.int32(tile_grid) + tx
 
 
 # ---------------------------------------------------------------------------
@@ -190,12 +204,15 @@ def concat_visits(a: Visits, b: Visits, t_offset: int) -> Visits:
     shifted world from ``t_offset`` on."""
     assert a.n_cams == b.n_cams
     e_off = int(a.ent.max()) + 1 if len(a) else 0
+    tiles = None
+    if a.tile_xy is not None and b.tile_xy is not None:
+        tiles = np.concatenate([a.tile_xy, b.tile_xy])
     return Visits(
         np.concatenate([a.ent, b.ent + e_off]),
         np.concatenate([a.cam, b.cam]),
         np.concatenate([a.t_in, b.t_in + t_offset]),
         np.concatenate([a.t_out, b.t_out + t_offset]),
-        max(a.horizon, t_offset + b.horizon), a.n_cams)
+        max(a.horizon, t_offset + b.horizon), a.n_cams, tiles)
 
 
 def restrict_network(net: CameraNetwork, cams: np.ndarray) -> CameraNetwork:
@@ -218,16 +235,49 @@ def restrict_network(net: CameraNetwork, cams: np.ndarray) -> CameraNetwork:
 # trajectory simulation
 # ---------------------------------------------------------------------------
 
+# entry portals are a property of the camera PAIR geometry, not of any one
+# simulation run: the doorway c7 feeds into c6 through sits at the same spot
+# in every video.  Centers are drawn per directed (src, dst) pair from a
+# dedicated generator seeded by the pair itself, so every seed/world over the
+# same network shares them (what lets a model profiled on one world admit
+# correctly on another).
+_PORTAL_SALT = 0x7E11E5
+
+
+def _portal_center(src: int, dst: int) -> np.ndarray:
+    """Deterministic sub-frame entry region center for the directed camera
+    pair (src -> dst), in [0.1, 0.9)^2 (portals sit inside the frame)."""
+    g = np.random.default_rng([src, dst, _PORTAL_SALT])
+    return g.uniform(0.1, 0.9, 2)
+
+
+# detections scatter around the portal center by this much (normalized frame
+# units).  At tile_grid=8 a tile is 0.125 wide, so ~95% of detections land
+# within one tile of the center — the profiler's 3x3 smoothing halo covers
+# the tail.
+_PORTAL_JITTER = 0.03
+
+
 def simulate_network(net: CameraNetwork, n_entities: int, horizon: int,
                      seed: int = 0) -> Visits:
-    """Sample entity trajectories through the network -> visit table."""
+    """Sample entity trajectories through the network -> visit table.
+
+    Each visit also carries a normalized sub-frame position ``tile_xy``:
+    network entries appear anywhere (uniform), while cross-camera handoffs
+    appear near the directed pair's entry portal — the stable spatial
+    structure CrossRoI-style tile admission learns and exploits."""
     rng = np.random.default_rng(seed)
-    ents, cams, tins, touts = [], [], [], []
+    # spatial labels are an overlay on the visit process, not part of it:
+    # they draw from their OWN generator so adding tile_xy left every
+    # pre-existing world (visit order, dwell, transitions) bit-identical
+    rng_xy = np.random.default_rng([seed, _PORTAL_SALT])
+    ents, cams, tins, touts, xys = [], [], [], [], []
     C = net.n_cams
     enter_times = rng.uniform(0, horizon * 0.95, n_entities).astype(np.int64)
     for e in range(n_entities):
         t = int(enter_times[e])
         c = int(rng.choice(C, p=net.entry))
+        xy = rng_xy.uniform(0.0, 1.0, 2)       # network entry: anywhere
         while t < horizon:
             dwell = max(2, int(rng.exponential(net.dwell_mean)))
             t_out = min(t + dwell, horizon - 1)
@@ -235,6 +285,7 @@ def simulate_network(net: CameraNetwork, n_entities: int, horizon: int,
             cams.append(c)
             tins.append(t)
             touts.append(t_out)
+            xys.append(xy)
             if t_out >= horizon - 1:
                 break
             nxt = int(rng.choice(C + 1, p=net.trans[c]))
@@ -242,10 +293,14 @@ def simulate_network(net: CameraNetwork, n_entities: int, horizon: int,
                 break  # exits the network
             travel = max(1, int(rng.normal(net.travel_mean[c, nxt],
                                            net.travel_std[c, nxt])))
+            xy = np.clip(_portal_center(c, nxt)
+                         + rng_xy.normal(0.0, _PORTAL_JITTER, 2),
+                         0.0, np.nextafter(1.0, 0.0))
             t = t_out + travel
             c = nxt
     return Visits(np.array(ents), np.array(cams), np.array(tins),
-                  np.array(touts), horizon, C)
+                  np.array(touts), horizon, C,
+                  np.asarray(xys, np.float32).reshape(len(ents), 2))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.reid_topk import reid_topk as _reid
 from repro.kernels.reid_topk import reid_topk_masked as _reid_masked
 from repro.kernels.reid_topk import reid_topk_segments as _reid_segments
+from repro.kernels.reid_topk import reid_topk_tiles as _reid_tiles
 
 
 def _auto_interpret(interpret):
@@ -68,6 +69,18 @@ def reid_topk_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
     return _reid_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
                           k, block_q=block_q, block_g=block_g,
                           interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_g", "interpret"))
+def reid_topk_tiles(queries, q_tag, admit_ct, gallery, gal_ct, gal_tag,
+                    k: int, *, block_q: int = 128, block_g: int = 512,
+                    interpret: bool | None = None):
+    """Tile-granular consolidated ranking: camera admission refined to fused
+    (camera, tile) cells; all-tiles-admitted is bit-identical to
+    ``reid_topk_segments`` (the camera-granular differential oracle)."""
+    return _reid_tiles(queries, q_tag, admit_ct, gallery, gal_ct, gal_tag,
+                       k, block_q=block_q, block_g=block_g,
+                       interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))

@@ -74,6 +74,21 @@ def reid_topk_segments_ref(queries, q_seg, admit, gallery, gal_cam,
     return sv, jnp.where(sv > NEG_INF / 2, si, -1)
 
 
+def reid_topk_tiles_ref(queries, q_tag, admit_ct, gallery, gal_ct, gal_tag,
+                        k: int):
+    """Oracle for the tile-granular variant: query q may only score gallery
+    row g when ``admit_ct[q, gal_ct[g]]`` (the fused (camera, tile) cell is
+    admitted; unlabeled rows carry gal_ct = -1 and match nothing) and
+    ``gal_tag[g] == q_tag[q]``.  Identical math to the segment oracle with
+    the camera axis widened to C*T*T cells."""
+    s = queries.astype(jnp.float32) @ gallery.astype(jnp.float32).T
+    gal_ct = jnp.asarray(gal_ct, jnp.int32)
+    valid = jnp.where(gal_ct >= 0, admit_ct[:, gal_ct], False) & \
+        (jnp.asarray(gal_tag)[None, :] == jnp.asarray(q_tag)[:, None])
+    sv, si = jax.lax.top_k(jnp.where(valid, s, NEG_INF), k)
+    return sv, jnp.where(sv > NEG_INF / 2, si, -1)
+
+
 def mamba_scan_ref(u, dt, Bm, Cm, A, h0):
     """Sequential (step-by-step) selective scan oracle.
 

@@ -260,3 +260,132 @@ def reid_topk_segments(queries, q_seg, admit, gallery, gal_cam, gal_seg,
     """
     return _segment_masked_call(queries, q_seg, admit, gallery, gal_cam,
                                 gal_seg, k, block_q, block_g, interpret)
+
+
+def _reid_tiles_kernel(q_ref, qt_ref, adm_ref, g_ref, gt_ref, oh_ref,
+                       live_ref, sv_ref, si_ref, val_scr, idx_scr, *,
+                       k: int, block_g: int, ng: int, g_real: int):
+    """The segment-masked kernel body over the fused (camera x tile) axis,
+    with a per-(q-block, g-block) liveness predicate: when no query row of
+    this block admits any (camera, tile) cell present in this gallery block,
+    the GEMM + merge are skipped entirely.  Skipping is provably free: every
+    score the skipped block would contribute is NEG_INF, and ``_merge_topk``
+    resolves NEG_INF ties in favor of the existing scratch entries — the
+    scratch is bit-identical either way."""
+    gi = pl.program_id(1)
+
+    @pl.when(gi == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, NEG_INF)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    @pl.when(live_ref[0, 0] > 0)
+    def _score():
+        q = q_ref[...].astype(jnp.float32)                # (block_q, D)
+        g = g_ref[...].astype(jnp.float32)                # (block_g, D)
+        s = jax.lax.dot_general(q, g, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # (cam, tile) admission via one-hot GEMM over the fused axis —
+        # same MXU shape as camera admission, just C*T*T columns
+        ct_ok = jax.lax.dot_general(
+            adm_ref[...].astype(jnp.float32), oh_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32) > 0.5
+        tag_ok = qt_ref[...] == gt_ref[...]               # (block_q, block_g)
+        base = gi * block_g
+        cols = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(ct_ok & tag_ok & (cols < g_real), s, NEG_INF)
+        _merge_topk(s, cols, val_scr, idx_scr, k)
+
+    @pl.when(gi == ng - 1)
+    def _finalize():
+        sv_ref[...] = val_scr[...]
+        si_ref[...] = idx_scr[...]
+
+
+def reid_topk_tiles(queries, q_tag, admit_ct, gallery, gal_ct, gal_tag,
+                    k: int, *, block_q: int = 128, block_g: int = 512,
+                    interpret: bool = False):
+    """Tile-granular gallery ranking: camera admission refined to sub-frame
+    (camera, tile) cells, structurally the segment-masked kernel over a
+    bigger "camera" axis.
+
+    queries (Q, D); q_tag (Q,) int32 round-scoped segment ids; admit_ct
+    (Q, C*T*T) bool — ``admit_ct[q, c*T*T + t]`` fuses camera admission AND
+    the learned tile-admit mask; gallery (G, D); gal_ct (G,) int32 — each
+    row's fused cell id ``gal_cam*T*T + gal_tile`` (rows with no tile label
+    may carry -1: they match nothing); gal_tag (G,) int32 segment ids.
+    Eligibility = ``admit_ct[q, gal_ct[g]]`` AND ``gal_tag[g] == q_tag[q]``.
+
+    With every tile admitted, ``admit_ct[q, gal_ct[g]] == admit[q, gal_cam[g]]``
+    for all rows, so the masked score matrix — and therefore every
+    flat-argmin tie-break and (NEG_INF, -1) sentinel — is bit-identical to
+    ``reid_topk_segments``: the camera-granular path is this kernel's
+    differential oracle.
+
+    The grid additionally skips dead (q-block, g-block) pairs: a block
+    liveness table (any admitted (cam, tile) cell of the q-block present in
+    the g-block) gates the GEMM + top-k merge per block, so compute scales
+    with the admitted tile area, not the gallery.  Returns
+    (scores (Q, k), idx (Q, k)) with fully-masked slots as (NEG_INF, -1).
+    """
+    Q, D = queries.shape
+    G = gallery.shape[0]
+    CT = admit_ct.shape[1]
+    if Q == 0 or G == 0:
+        return _empty(Q, k)
+    block_q, Qp = _blocks(Q, block_q, 8)
+    block_g, Gp = _blocks(G, block_g, 128)
+    CTp = _round_up(CT, 8)
+    nq, ng = Qp // block_q, Gp // block_g
+
+    queries = _pad_rows(queries, Qp, 0)
+    q_tag = _pad_rows(jnp.asarray(q_tag, jnp.int32)[:, None], Qp, -1)
+    admit_ct = _pad_rows(admit_ct.astype(jnp.float32), Qp, 0.0)
+    admit_ct = jnp.pad(admit_ct, ((0, 0), (0, CTp - CT)))
+    gallery = _pad_rows(gallery, Gp, 0)
+    gal_ct = _pad_rows(jnp.asarray(gal_ct, jnp.int32), Gp, -1)
+    gal_tag = _pad_rows(jnp.asarray(gal_tag, jnp.int32), Gp, -2)[None, :]
+    # (CTp, Gp) fused-cell one-hot; unlabeled/padded rows (cell -1) match
+    # no admission column
+    onehot = (gal_ct[None, :] == jnp.arange(CTp)[:, None]).astype(jnp.float32)
+
+    # block liveness: does ANY query row of q-block qi admit ANY fused cell
+    # present in g-block gi?  (Q-block any) x (cell-in-g-block any) — a tiny
+    # (nq, CTp) @ (CTp, ng) product computed once per call, outside the grid.
+    q_any = (admit_ct.reshape(nq, block_q, CTp).max(axis=1) > 0.0)
+    g_has = (onehot.reshape(CTp, ng, block_g).max(axis=2) > 0.0)
+    block_live = jax.lax.dot_general(
+        q_any.astype(jnp.float32), g_has.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) > 0.0
+    block_live = block_live.astype(jnp.int32)             # (nq, ng)
+
+    kernel = functools.partial(_reid_tiles_kernel, k=k, block_g=block_g,
+                               ng=ng, g_real=G)
+    sv, si = pl.pallas_call(
+        kernel,
+        grid=(nq, ng),
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, 1), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, CTp), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_g, D), lambda qi, gi: (gi, 0)),
+            pl.BlockSpec((1, block_g), lambda qi, gi: (0, gi)),
+            pl.BlockSpec((CTp, block_g), lambda qi, gi: (0, gi)),
+            pl.BlockSpec((1, 1), lambda qi, gi: (qi, gi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, gi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, q_tag, admit_ct, gallery, gal_tag, onehot, block_live)
+    return _mask_padded(sv[:Q], si[:Q])

@@ -58,6 +58,16 @@ def main():
                     help="surface the k best (value, cam, frame) candidate "
                          "bands per round in trace records (argmax path "
                          "unchanged)")
+    ap.add_argument("--topk-rerank", action="store_true",
+                    help="§5.2 top-k confidence re-ranking: passing bands "
+                         "vote by summed score per camera and the match "
+                         "re-anchors to the winning camera's best band "
+                         "(bit-identical to argmax at --topk 1)")
+    ap.add_argument("--tile-grid", type=int, default=0,
+                    help="sub-frame spatial admission: T > 0 profiles per "
+                         "camera-pair entry-region masks on a TxT tile grid "
+                         "and serves through the tile-masked kernel, "
+                         "scoring only detections inside admitted tiles")
     ap.add_argument("--transport", default="none",
                     choices=["none", "inproc", "fake"],
                     help="gallery fetch plane (fleet only): none (direct "
@@ -93,7 +103,7 @@ def main():
     net = duke_like_network()
     vis = simulate_network(net, 1500, 3000, seed=0)
     gal, _ = build_gallery(vis, 24)
-    model = rexcam.profile(vis, time_limit=2000)
+    model = rexcam.profile(vis, time_limit=2000, tile_grid=args.tile_grid)
     feats, _ = make_features(vis, 1500, FeatureParams())
     q_vids, _ = rexcam.make_queries(vis, args.queries, seed=1)
 
@@ -113,6 +123,8 @@ def main():
                        geo_adj=net.geo_adjacent, shards=args.shards,
                        gallery=args.gallery, topk=args.topk,
                        transport=transport, prefetch=args.prefetch,
+                       tile_grid=args.tile_grid,
+                       topk_rerank=args.topk_rerank,
                        recalibrate=recal,
                        visit_source=rexcam.visits_window_source(vis)
                        if args.recalibrate else None)
@@ -121,16 +133,25 @@ def main():
     for i, q in enumerate(q_vids):
         eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
 
+    if args.tile_grid > 0:
+        from repro.core.simulate import tile_index
+        vis_tiles = tile_index(vis.tile_xy, args.tile_grid)
     wall0 = time.time()
     matches = 0
     for t in range(t0, min(t0 + args.steps, vis.horizon)):
         frames = {}
+        tiles = {}
         for c in range(net.n_cams):
             vids = gal[c, t]
             vids = vids[vids >= 0]
             if len(vids):
                 frames[c] = feats[vids]
-        eng.ingest(frames)
+                if args.tile_grid > 0:
+                    tiles[c] = vis_tiles[vids]
+        if args.tile_grid > 0:
+            eng.ingest(frames, tiles)
+        else:
+            eng.ingest(frames)
         stats = eng.tick()
         matches += stats["matches"]
     wall = time.time() - wall0
@@ -149,6 +170,15 @@ def main():
           f"dedup {eng.admitted_steps/max(eng.unique_frames,1):.1f}x; "
           f"naive per-camera: {naive_frames}; "
           f"savings {naive_frames/max(eng.frames_processed,1):.1f}x)")
+    if args.tile_grid > 0:
+        TT = args.tile_grid * args.tile_grid
+        base_tiles = TT * eng.admitted_steps
+        print(f"spatial plane [T={args.tile_grid}]: {eng.admitted_tiles} "
+              f"admitted tiles of {base_tiles} camera-granular "
+              f"(pixel-load savings "
+              f"{base_tiles/max(eng.admitted_tiles,1):.1f}x; "
+              f"{eng.unique_tiles} deduplicated of "
+              f"{TT * eng.unique_frames})")
     print(f"matches flagged: {matches} "
           f"(replay rescues: {sum(q.rescued for q in eng.queries.values())}, "
           f"replay misses past retention: {eng.replay_misses})")

@@ -109,6 +109,19 @@ class EngineConfig:
     # the two are trace-identical (the relabeling is injective), which the
     # consolidation differential pins
     consolidate: bool = True
+    # sub-frame spatial admission (CrossRoI-style): T > 0 refines camera
+    # admission to a T x T tile grid — the round ranks through the
+    # tile-masked ``reid_topk_tiles`` kernel over the fused (camera, tile)
+    # admission ``policy.admit_tiles`` builds from the model's learned
+    # ``tile_admit`` tensor.  0 (default) keeps camera-granular admission;
+    # a model without tile data gets an all-tiles-admitted tensor, which is
+    # trace-identical to the camera path (the tile differential's oracle)
+    tile_grid: int = 0
+    # §5.2 top-k confidence re-ranking: the k best candidate bands vote by
+    # summed passing score per camera and the match re-anchors to the
+    # winning camera's best band.  Bit-identical to the argmax path at
+    # topk=1 (pinned by the k=1 equivalence regression)
+    topk_rerank: bool = False
 
 
 @dataclasses.dataclass
@@ -123,6 +136,13 @@ class QueryState:
     matches: list = dataclasses.field(default_factory=list)
     rescued: int = 0       # matches made during replay (phase >= 2)
     replay_credit: float = 0.0  # fractional replay-round carry (ff pacing)
+    submit_t: int = 0      # engine wall tick the query was submitted at
+    first_match_t: int = -1  # wall tick of the first confirmed match (delay)
+    # tile mode only: the fused-cell tile of the last confirmed match (-1
+    # before the first match — the anchor detection carries no tile).  A
+    # LEARNED tile model narrows the self-camera follow window to this
+    # tile's 3x3 neighborhood (policy.tile_follow_mask)
+    tile_q: int = -1
 
 
 @partial(jax.jit, static_argnames=("policy",))
@@ -130,44 +150,77 @@ def _admit_jit(model, policy: SearchPolicy, state: PhaseState, geo_adj=None):
     return admit(model, policy, state, geo_adj)
 
 
-def _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh):
-    """Shared post-kernel half of both ranking paths: convert the (Q, k)
+@partial(jax.jit, static_argnames=("policy",))
+def _admit_tiles_jit(model, policy: SearchPolicy, state: PhaseState,
+                     geo_adj=None, tile_q=None):
+    from repro.core.policy import admit_tiles
+    return admit_tiles(model, policy, state, geo_adj, tile_q)
+
+
+def _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh,
+                  n_cams: int = 0, topk_rerank: bool = False):
+    """Shared post-kernel half of every ranking path: convert the (Q, k)
     score/index bands into the control plane's match outcome.  The best
     (band-0) score converts back to the cosine distance the threshold is
     applied to; unmatched rows carry cam 0 and an arbitrary embedding row;
     padded / fully-masked slots come back as (NEG_INF, -1, -1, -1) in the
-    bands, exactly like the kernels."""
-    best_val, best_idx = sv[:, 0], si[:, 0]
-    dist = 1.0 - best_val
-    matched = dist < match_thresh
-    idx0 = jnp.maximum(best_idx, 0)
-    match_cam = jnp.where(matched, gal_cam[idx0], 0).astype(jnp.int32)
+    bands, exactly like the kernels.
+
+    ``topk_rerank`` (§5.2): instead of committing to band 0's camera, the
+    bands that pass the match threshold vote by summed score per camera and
+    the match re-anchors to the winning camera's best band.  ``matched`` is
+    unchanged (the bands are score-sorted, so "any band passes" == "band 0
+    passes"), and at k=1 only band 0 can vote — the whole path is
+    bit-identical to the argmax path, which the k=1 equivalence regression
+    pins."""
     valid = si >= 0
     idx = jnp.maximum(si, 0)
     topk_cam = jnp.where(valid, gal_cam[idx], -1).astype(jnp.int32)
     topk_frame = jnp.where(valid, gal_frame[idx], -1).astype(jnp.int32)
+    if topk_rerank:
+        passing = valid & ((1.0 - sv) < match_thresh)
+        matched = passing.any(axis=1)
+        # per-camera summed passing score; one_hot(-1) is all-zero, so
+        # invalid bands contribute nothing
+        oh = jax.nn.one_hot(topk_cam, n_cams, dtype=jnp.float32)
+        votes = jnp.einsum("qk,qkc->qc", jnp.where(passing, sv, 0.0), oh)
+        rerank_cam = jnp.argmax(votes, axis=1).astype(jnp.int32)
+        # the winning camera's best (lowest) passing band supplies the
+        # matched embedding
+        j = jnp.argmax(passing & (topk_cam == rerank_cam[:, None]), axis=1)
+        best_idx = jnp.take_along_axis(si, j[:, None], axis=1)[:, 0]
+        match_cam = jnp.where(matched, rerank_cam, 0).astype(jnp.int32)
+    else:
+        best_val, best_idx = sv[:, 0], si[:, 0]
+        matched = (1.0 - best_val) < match_thresh
+        match_cam = jnp.where(matched, gal_cam[jnp.maximum(best_idx, 0)],
+                              0).astype(jnp.int32)
+    idx0 = jnp.maximum(best_idx, 0)
     return matched, match_cam, gallery[idx0], sv, si, topk_cam, topk_frame
 
 
-@partial(jax.jit, static_argnames=("match_thresh", "k"))
+@partial(jax.jit, static_argnames=("match_thresh", "k", "topk_rerank"))
 def rank_round(q_feat, q_frame, mask, gallery, gal_cam, gal_frame,
-               match_thresh: float, k: int = 1):
+               match_thresh: float, k: int = 1, topk_rerank: bool = False):
     """One device pass over the round's deduplicated embedding batch.
 
     ``reid_topk_masked`` scores each query against exactly its admitted
     galleries; the argmax match path is unchanged by k > 1, the extra bands
-    only surface candidates.  Returns (matched (Q,), match_cam (Q,),
+    only surface candidates (unless ``topk_rerank`` turns on the §5.2
+    confidence vote).  Returns (matched (Q,), match_cam (Q,),
     match_emb (Q, D), topk_val (Q, k), topk_idx (Q, k), topk_cam (Q, k),
     topk_frame (Q, k)).
     """
     sv, si = kernel_ops.reid_topk_masked(q_feat, q_frame, mask, gallery,
                                          gal_cam, gal_frame, k)
-    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh)
+    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh,
+                         mask.shape[1], topk_rerank)
 
 
-@partial(jax.jit, static_argnames=("match_thresh", "k"))
+@partial(jax.jit, static_argnames=("match_thresh", "k", "topk_rerank"))
 def rank_round_seg(q_feat, q_seg, mask, gallery, gal_cam, gal_frame, gal_seg,
-                   match_thresh: float, k: int = 1):
+                   match_thresh: float, k: int = 1,
+                   topk_rerank: bool = False):
     """Consolidated variant of ``rank_round``: frame tags replaced by the
     ``RoundPlan``'s compact per-round segment ids (``q_seg`` (Q,) /
     ``gal_seg`` (G,)).  The relabeling is injective over the round's
@@ -178,11 +231,32 @@ def rank_round_seg(q_feat, q_seg, mask, gallery, gal_cam, gal_frame, gal_seg,
     """
     sv, si = kernel_ops.reid_topk_segments(q_feat, q_seg, mask, gallery,
                                            gal_cam, gal_seg, k)
-    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh)
+    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh,
+                         mask.shape[1], topk_rerank)
+
+
+@partial(jax.jit, static_argnames=("match_thresh", "k", "n_cams",
+                                   "topk_rerank"))
+def rank_round_tiles(q_feat, q_seg, mask_ct, gallery, gal_ct, gal_cam,
+                     gal_frame, gal_seg, match_thresh: float, k: int = 1,
+                     n_cams: int = 0, topk_rerank: bool = False):
+    """Tile-granular variant of ``rank_round_seg``: camera admission refined
+    to the fused (camera, tile) mask ``mask_ct`` (Q, C*T*T) and per-row
+    fused cell tags ``gal_ct`` (G,), ranked through ``reid_topk_tiles``.
+    With every tile admitted the kernel's masked score matrix is
+    bit-identical to ``reid_topk_segments`` — the camera-granular path is
+    the differential oracle.  ``gal_cam``/``gal_frame`` ride along for the
+    match outcome and trace bands exactly as in the segment path.
+    """
+    sv, si = kernel_ops.reid_topk_tiles(q_feat, q_seg, mask_ct, gallery,
+                                        gal_ct, gal_seg, k)
+    return _rank_outcome(sv, si, gallery, gal_cam, gal_frame, match_thresh,
+                         n_cams, topk_rerank)
 
 
 def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
-                       q_feat, mask, gallery, gal_cam, gal_frame, k: int = 1):
+                       q_feat, mask, gallery, gal_cam, gal_frame, k: int = 1,
+                       topk_rerank: bool = False):
     """The ONE serving step body both the single-process engine and the
     sharded fleet dispatch: rank the round's deduplicated gallery, then run
     the shared phase machine.  Pure over (Q,)-batched inputs, so the fleet
@@ -195,7 +269,7 @@ def rank_advance_round(policy: SearchPolicy, windows, state: PhaseState,
     """
     (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
      topk_frame) = rank_round(q_feat, state.f_curr, mask, gallery, gal_cam,
-                              gal_frame, policy.match_thresh, k)
+                              gal_frame, policy.match_thresh, k, topk_rerank)
     nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
     return (nxt, matched, match_cam, match_emb, topk_val, topk_idx,
             topk_cam, topk_frame)
@@ -211,7 +285,7 @@ def advance_round(policy: SearchPolicy, windows, state: PhaseState):
 
 def rank_advance_round_seg(policy: SearchPolicy, windows, state: PhaseState,
                            q_feat, q_seg, mask, gallery, gal_cam, gal_frame,
-                           gal_seg, k: int = 1):
+                           gal_seg, k: int = 1, topk_rerank: bool = False):
     """Consolidated step body: the whole round ranks in ONE segment-ID
     kernel call (``rank_round_seg``), then the same shared phase machine
     advances.  Pure over (Q,)-batched inputs like ``rank_advance_round`` —
@@ -219,26 +293,62 @@ def rank_advance_round_seg(policy: SearchPolicy, windows, state: PhaseState,
     cam/frame/segment tags) replicated."""
     (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
      topk_frame) = rank_round_seg(q_feat, q_seg, mask, gallery, gal_cam,
-                                  gal_frame, gal_seg, policy.match_thresh, k)
+                                  gal_frame, gal_seg, policy.match_thresh, k,
+                                  topk_rerank)
     nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
     return (nxt, matched, match_cam, match_emb, topk_val, topk_idx,
             topk_cam, topk_frame)
 
 
-@partial(jax.jit, static_argnames=("policy", "k"))
+def rank_advance_round_tiles(policy: SearchPolicy, windows,
+                             state: PhaseState, q_feat, q_seg, mask_ct,
+                             gallery, gal_ct, gal_cam, gal_frame, gal_seg,
+                             k: int = 1, n_cams: int = 0,
+                             topk_rerank: bool = False):
+    """Tile-granular step body: the whole round ranks in ONE tile-masked
+    segment-ID kernel call (``rank_round_tiles``), then the same shared
+    phase machine advances.  ``mask_ct`` (Q, C*T*T) is the fused
+    (camera, tile) admission from ``policy.admit_tiles``; with every tile
+    admitted this body is bit-identical to ``rank_advance_round_seg`` (the
+    tile differential's oracle).  Pure over (Q,)-batched inputs — the fleet
+    shard_maps it over the query axis with the gallery (and its
+    cam/frame/segment/cell tags) replicated."""
+    (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
+     topk_frame) = rank_round_tiles(q_feat, q_seg, mask_ct, gallery, gal_ct,
+                                    gal_cam, gal_frame, gal_seg,
+                                    policy.match_thresh, k, n_cams,
+                                    topk_rerank)
+    nxt = advance(policy, windows, state, matched, match_cam, _NO_HORIZON)
+    return (nxt, matched, match_cam, match_emb, topk_val, topk_idx,
+            topk_cam, topk_frame)
+
+
+@partial(jax.jit, static_argnames=("policy", "k", "topk_rerank"))
 def _rank_advance_jit(policy: SearchPolicy, windows, state: PhaseState,
-                      q_feat, mask, gallery, gal_cam, gal_frame, k=1):
+                      q_feat, mask, gallery, gal_cam, gal_frame, k=1,
+                      topk_rerank=False):
     return rank_advance_round(policy, windows, state, q_feat, mask,
-                              gallery, gal_cam, gal_frame, k)
+                              gallery, gal_cam, gal_frame, k, topk_rerank)
 
 
-@partial(jax.jit, static_argnames=("policy", "k"))
+@partial(jax.jit, static_argnames=("policy", "k", "topk_rerank"))
 def _rank_advance_seg_jit(policy: SearchPolicy, windows, state: PhaseState,
                           q_feat, q_seg, mask, gallery, gal_cam, gal_frame,
-                          gal_seg, k=1):
+                          gal_seg, k=1, topk_rerank=False):
     return rank_advance_round_seg(policy, windows, state, q_feat, q_seg,
                                   mask, gallery, gal_cam, gal_frame,
-                                  gal_seg, k)
+                                  gal_seg, k, topk_rerank)
+
+
+@partial(jax.jit, static_argnames=("policy", "k", "n_cams", "topk_rerank"))
+def _rank_advance_tiles_jit(policy: SearchPolicy, windows, state: PhaseState,
+                            q_feat, q_seg, mask_ct, gallery, gal_ct, gal_cam,
+                            gal_frame, gal_seg, k=1, n_cams=0,
+                            topk_rerank=False):
+    return rank_advance_round_tiles(policy, windows, state, q_feat, q_seg,
+                                    mask_ct, gallery, gal_ct, gal_cam,
+                                    gal_frame, gal_seg, k, n_cams,
+                                    topk_rerank)
 
 
 @partial(jax.jit, static_argnames=("policy",))
@@ -276,6 +386,9 @@ class RoundPlan:
     want_count: dict                        # key -> wanting (q, cam) pairs
     seg_of_frame: dict                      # content frame -> segment id
     q_seg: np.ndarray                       # (N,) int32, -1 on padding rows
+    # tile mode only: the fused (camera, tile) admission (N, C*T*T) the
+    # tile-masked ranking pass consumes; None under camera-granular serving
+    mask_ct: np.ndarray | None = None
 
     def gallery_segments(self, batch_keys: list, key_emb: dict,
                          rows: int) -> np.ndarray:
@@ -298,6 +411,9 @@ class ServingEngine:
         if cfg.topk < 1:
             raise ValueError(f"topk={cfg.topk} must be >= 1 (band 0 is the "
                              f"argmax match path)")
+        self.tile_grid = int(cfg.tile_grid)
+        if self.tile_grid > 0:
+            model = self._resolve_tiles(model)
         self.model = model
         self.embed_fn = embed_fn
         self.cfg = cfg
@@ -322,6 +438,11 @@ class ServingEngine:
         self.replay_embeds = 0       # replay re-reads the cache missed
         self.admitted_steps = 0      # per-query camera-steps (tracker scale)
         self.unique_frames = 0       # deduplicated (cam, frame) pairs
+        # tile mode only: per-(query, camera, tile) admission steps, and the
+        # per-key unions of admitted tiles (the sub-frame pixel-load proxy —
+        # camera-granular serving loads T*T tiles per admitted step / key)
+        self.admitted_tiles = 0
+        self.unique_tiles = 0
         self.content_steps = 0       # per-query content rounds charged
         self.replay_steps = 0        # content rounds behind the frontier
         self.skipped_steps = 0       # short-circuited sampled-out rounds
@@ -359,6 +480,24 @@ class ServingEngine:
         self._w2 = np.asarray(self._windows.w_end2)
 
     # -- the correlation model (the control plane's only persistent state) --
+    def _resolve_tiles(self, model: SpatioTemporalModel) -> SpatioTemporalModel:
+        """Reconcile a model with the engine's ``cfg.tile_grid``: a model
+        profiled WITHOUT tile data gets the all-tiles-admitted tensor
+        (trace-identical to camera-granular serving — the tile
+        differential's oracle); a model profiled at a different grid is a
+        config error, not something to resample silently."""
+        if model.tile_grid not in (0, self.tile_grid):
+            raise ValueError(
+                f"tile_grid mismatch: engine serves T={self.tile_grid} but "
+                f"the model was profiled at T={model.tile_grid} — re-profile "
+                f"with profile(..., tile_grid={self.tile_grid})")
+        if model.tile_admit is None or model.tile_grid == 0:
+            C, TT = model.n_cams, self.tile_grid * self.tile_grid
+            model = dataclasses.replace(
+                model, tile_admit=jnp.ones((C, C, TT), bool),
+                tile_grid=self.tile_grid, tile_learned=False)
+        return model
+
     def swap_model(self, model: SpatioTemporalModel) -> int:
         """Hot-swap the spatio-temporal model M without dropping in-flight
         queries (§6 recalibration): the next round admits/ranks under the new
@@ -383,6 +522,18 @@ class ServingEngine:
                 f"swap_model shape mismatch: engine serves C={self.C}, "
                 f"NB={self.model.n_bins}; got C={model.n_cams}, "
                 f"NB={model.n_bins} (re-profile with the same n_bins)")
+        if self.tile_grid > 0:
+            # epoch-versioned tile carry: a recalibration that re-profiled
+            # WITHOUT tile data keeps serving the incumbent learned masks
+            # (they ride the swap forward); a re-profile WITH tile data at
+            # the serving grid hot-swaps them like every other model array
+            if model.tile_admit is None or model.tile_grid == 0:
+                model = dataclasses.replace(
+                    model, tile_admit=self.model.tile_admit,
+                    tile_grid=self.tile_grid,
+                    tile_learned=self.model.tile_learned)
+            else:
+                model = self._resolve_tiles(model)
         self.model_epoch += 1
         if int(model.epoch) != self.model_epoch:
             model = dataclasses.replace(model, epoch=self.model_epoch)
@@ -425,7 +576,8 @@ class ServingEngine:
     # -- query lifecycle --------------------------------------------------
     def submit_query(self, qid: int, feat: np.ndarray, cam: int, frame: int):
         self.queries[qid] = QueryState(
-            qid, l2_normalize(feat), cam, frame, f_curr=frame + 1)
+            qid, l2_normalize(feat), cam, frame, f_curr=frame + 1,
+            submit_t=self.t)
         self.sightings.append((qid, cam, frame))
 
     def _on_query_done(self, q: QueryState) -> None:
@@ -444,6 +596,34 @@ class ServingEngine:
         n = len(qs)
         self._batch_hwm = max(self._batch_hwm, _pow2(n))
         return self._batch_hwm, np.arange(n)
+
+    def prime_batch(self, n_queries: int) -> None:
+        """Pre-size the padded batch for an expected peak of ``n_queries``
+        live queries.  Round cohorts grow lazily (a 3-query cohort may
+        first form hundreds of ticks in), and each pow2 growth mints a new
+        jit signature — pre-sizing moves all of them into warmup, so a
+        RecompileGuard-ed steady state compiles nothing.  Trace-neutral by
+        the hwm layout rule: padding rows are done/masked and rank to
+        (NEG_INF, -1)."""
+        self._batch_hwm = max(self._batch_hwm, _pow2(max(int(n_queries), 1)))
+
+    def prime_gallery(self, rows: int) -> None:
+        """Pre-size the padded round gallery for an expected peak of
+        ``rows`` embedding rows.  The gallery side of the rank signature
+        has the same lazy-growth problem as the batch side: a phase-2
+        rescue hundreds of ticks in can admit the largest round gallery
+        yet, and each pow2 growth of ``_gal_rows_hwm`` mints a new rank
+        signature.  Trace-neutral: padded rows carry cam/frame -1 and rank
+        to (NEG_INF, -1) inside the kernels."""
+        self._gal_rows_hwm = max(self._gal_rows_hwm,
+                                 _pow2(max(int(rows), 1)))
+
+    @property
+    def padded_gallery_rows(self) -> int:
+        """Current round-gallery row high-water mark (pow2-padded) — feed
+        it back through ``prime_gallery`` on a fresh engine to replay the
+        same workload without mid-run shape growth."""
+        return self._gal_rows_hwm
 
     def _gather(self, qs: list[QueryState]) -> PhaseState:
         """Engine QueryStates -> one batched PhaseState.  The live frontier
@@ -487,6 +667,8 @@ class ServingEngine:
             if matched[j]:
                 emb = match_emb[j]
                 q.feat = l2_normalize((1 - a) * q.feat + a * emb)
+                if q.first_match_t < 0:   # detection delay (Fig. 15 metric)
+                    q.first_match_t = self.t
                 if q.phase >= 2:
                     q.rescued += 1
                     self.rescue_pairs[q.c_q, int(match_cam[j])] += 1
@@ -505,18 +687,33 @@ class ServingEngine:
     def _dispatch_admit(self, ps: PhaseState):
         return _admit_jit(self.model, self.policy, ps, self._geo_adj)
 
+    def _dispatch_admit_tiles(self, ps: PhaseState, tile_q):
+        return _admit_tiles_jit(self.model, self.policy, ps, self._geo_adj,
+                                tile_q)
+
     def _dispatch_rank_advance(self, ps: PhaseState, q_feat, mask, gallery,
                                gal_cam, gal_frame):
         return _rank_advance_jit(self.policy, self._windows, ps, q_feat,
                                  mask, gallery, gal_cam, gal_frame,
-                                 k=self.cfg.topk)
+                                 k=self.cfg.topk,
+                                 topk_rerank=self.cfg.topk_rerank)
 
     def _dispatch_rank_advance_seg(self, ps: PhaseState, q_feat, q_seg,
                                    mask, gallery, gal_cam, gal_frame,
                                    gal_seg):
         return _rank_advance_seg_jit(self.policy, self._windows, ps, q_feat,
                                      q_seg, mask, gallery, gal_cam,
-                                     gal_frame, gal_seg, k=self.cfg.topk)
+                                     gal_frame, gal_seg, k=self.cfg.topk,
+                                     topk_rerank=self.cfg.topk_rerank)
+
+    def _dispatch_rank_advance_tiles(self, ps: PhaseState, q_feat, q_seg,
+                                     mask_ct, gallery, gal_ct, gal_cam,
+                                     gal_frame, gal_seg):
+        return _rank_advance_tiles_jit(self.policy, self._windows, ps,
+                                       q_feat, q_seg, mask_ct, gallery,
+                                       gal_ct, gal_cam, gal_frame, gal_seg,
+                                       k=self.cfg.topk, n_cams=self.C,
+                                       topk_rerank=self.cfg.topk_rerank)
 
     def _dispatch_advance(self, ps: PhaseState):
         return _advance_round_jit(self.policy, self._windows, ps)
@@ -528,7 +725,19 @@ class ServingEngine:
         ranking pass tags queries and gallery rows with."""
         ps = self._gather(qs)
         sl = self._slots
-        mask = np.asarray(self._dispatch_admit(ps))                  # (N, C)
+        mask_ct = None
+        if self.tile_grid > 0:
+            # one fused admit pass: the (N, C) camera mask (identical to
+            # _dispatch_admit by construction — mask_ct reduces to it over
+            # the tile axis) plus the (N, C*T*T) tile-refined admission.
+            # tile_q rides along padded like every batch column (-1 =
+            # unknown, which admits every self tile)
+            tq = np.full(ps.f_q.shape[0], -1, np.int32)
+            tq[sl] = [q.tile_q for q in qs]
+            m, m_ct = self._dispatch_admit_tiles(ps, jnp.asarray(tq))
+            mask, mask_ct = np.asarray(m), np.asarray(m_ct)
+        else:
+            mask = np.asarray(self._dispatch_admit(ps))              # (N, C)
         cams_by_q = [np.flatnonzero(mask[sl[i]]) for i in range(len(qs))]
         want_count: dict[tuple[int, int], int] = {}
         for i, q in enumerate(qs):
@@ -543,7 +752,8 @@ class ServingEngine:
         return RoundPlan(qs=qs, ps=ps, slots=sl, mask=mask,
                          admitted=int(mask[sl].sum()), cams_by_q=cams_by_q,
                          work=sorted(want_count), want_count=want_count,
-                         seg_of_frame=seg_of_frame, q_seg=q_seg)
+                         seg_of_frame=seg_of_frame, q_seg=q_seg,
+                         mask_ct=mask_ct)
 
     def _account_round(self, plan: RoundPlan) -> None:
         """Per-round accounting hook over the shared ``RoundPlan`` —
@@ -552,10 +762,32 @@ class ServingEngine:
         (the fleet adds per-shard cost here)."""
 
     # -- per-tick ----------------------------------------------------------
-    def ingest(self, frames_by_cam: dict[int, Any]):
-        """New live frames at the current step (frame = detector crops)."""
+    def ingest(self, frames_by_cam: dict[int, Any],
+               tiles_by_cam: dict[int, Any] | None = None):
+        """New live frames at the current step (frame = detector crops).
+
+        Tile mode (``cfg.tile_grid > 0``) additionally requires per-camera
+        flat tile ids, one per detection crop (``tiles_by_cam[cam][i]`` =
+        ``ty * T + tx`` for crop i — ``core.simulate.tile_index`` maps
+        normalized positions to them).  Labels are MANDATORY: a gallery row
+        without a tile cell would either silently match nothing or need a
+        wildcard that breaks the all-admitted <-> camera-path equivalence,
+        so a missing/mismatched label set raises instead."""
         for cam, frame in frames_by_cam.items():
-            self.store.append(cam, self.t, frame)
+            tile = None
+            if self.tile_grid > 0:
+                tile = None if tiles_by_cam is None else tiles_by_cam.get(cam)
+                if tile is None:
+                    raise ValueError(
+                        f"tile_grid={self.tile_grid} serving requires per-"
+                        f"detection tile labels: ingest(frames_by_cam, "
+                        f"tiles_by_cam) got none for camera {cam}")
+                if len(tile) != len(frame):
+                    raise ValueError(
+                        f"camera {cam}: {len(tile)} tile labels for "
+                        f"{len(frame)} detections at t={self.t}")
+                tile = np.asarray(tile, np.int32)
+            self.store.append(cam, self.t, frame, tile=tile)
 
     def tick(self, record_trace: list | None = None) -> dict:
         """One admission+inference round over all live queries at once.
@@ -570,7 +802,8 @@ class ServingEngine:
                  "batched": 0, "embedded": 0, "cache_hits": 0,
                  "replay_embeds": 0, "matches": 0, "replay_misses": 0,
                  "replay_miss_steps": 0, "content_steps": 0,
-                 "replay_steps": 0, "skipped_rounds": 0}
+                 "replay_steps": 0, "skipped_rounds": 0,
+                 "admitted_tiles": 0, "unique_tiles": 0}
         # Replay pacing: a lagging query earns policy.replay_rate content
         # rounds per wall tick, with the fractional remainder carried across
         # ticks so e.g. replay_speed=1.5 really averages 1.5x, matching the
@@ -677,6 +910,29 @@ class ServingEngine:
         self._account_round(plan)
         stats["unique_frames"] += len(plan.work)
         self.unique_frames += len(plan.work)
+        if self.tile_grid > 0:
+            # both cost conventions, tile-refined: admitted_tiles is
+            # per-(query, camera, tile) steps (camera-granular serving
+            # would charge T*T per admitted step); unique_tiles is the
+            # per-key UNION of admitted tiles (the deduplicated sub-frame
+            # pixel-load proxy — camera-granular loads T*T per unique key)
+            TT = self.tile_grid * self.tile_grid
+            adm_tiles = int(plan.mask_ct[sl].sum())
+            stats["admitted_tiles"] += adm_tiles
+            self.admitted_tiles += adm_tiles
+            tiles_by_key: dict[tuple[int, int], np.ndarray] = {}
+            for i, q in enumerate(qs):
+                row = plan.mask_ct[sl[i]]
+                for cam in plan.cams_by_q[i]:
+                    key = (int(cam), q.f_curr)
+                    seg = row[key[0] * TT:(key[0] + 1) * TT]
+                    if key in tiles_by_key:
+                        tiles_by_key[key] |= seg
+                    else:
+                        tiles_by_key[key] = seg.copy()
+            uniq_tiles = sum(int(v.sum()) for v in tiles_by_key.values())
+            stats["unique_tiles"] += uniq_tiles
+            self.unique_tiles += uniq_tiles
 
         # camera-major key order (plan.work is sorted): ascending gallery
         # index reproduces the tracker's flat-argmin tie-break within every
@@ -762,7 +1018,38 @@ class ServingEngine:
             q_feat = np.zeros((N, gal.shape[1]), np.float32)
             for i, q in enumerate(qs):
                 q_feat[sl[i]] = q.feat
-            if self.cfg.consolidate:
+            if self.tile_grid > 0:
+                # tile path: ONE tile-masked segment-ID kernel call ranks
+                # the whole round regardless of cfg.consolidate (the
+                # relabeling is injective, so consolidation cannot change
+                # the outcome — pinned by the tile differential).  Every
+                # gallery row carries its fused (camera, tile) cell from
+                # the ingest-time labels.
+                TT = self.tile_grid * self.tile_grid
+                gal_ct = np.full(gal.shape[0], -1, np.int32)
+                pos = 0
+                for key in batch_keys:
+                    cnt = len(key_emb[key])
+                    tiles_k = self.store.get_tile(*key)
+                    if tiles_k is None or len(tiles_k) != cnt:
+                        # ingest enforces labels, so this is a bookkeeping
+                        # bug (eviction raced a replay read), not user error
+                        raise RuntimeError(
+                            f"tile labels missing/mismatched for {key}: "
+                            f"got {None if tiles_k is None else len(tiles_k)}"
+                            f" for {cnt} gallery rows")
+                    gal_ct[pos:pos + cnt] = key[0] * TT + \
+                        np.asarray(tiles_k, np.int32)
+                    pos += cnt
+                gal_seg = plan.gallery_segments(batch_keys, key_emb,
+                                                gal.shape[0])
+                (ps_next, m, mc, me, tv, ti, tc,
+                 tf) = self._dispatch_rank_advance_tiles(
+                    ps, jnp.asarray(q_feat), jnp.asarray(plan.q_seg),
+                    jnp.asarray(plan.mask_ct), jnp.asarray(gal),
+                    jnp.asarray(gal_ct), jnp.asarray(gal_cam),
+                    jnp.asarray(gal_frame), jnp.asarray(gal_seg))
+            elif self.cfg.consolidate:
                 # consolidated path: ONE segment-ID kernel call ranks the
                 # whole round — frames relabeled to the plan's compact
                 # segment ids, gal_frame riding along for the trace bands
@@ -788,6 +1075,26 @@ class ServingEngine:
             topk_cam = np.asarray(tc)
             topk_frame = np.asarray(tf)
             stats["matches"] += int(matched[sl].sum())
+            if self.tile_grid > 0:
+                # follow-window state: a confirmed match pins the query to
+                # the matched gallery row's tile (gal_ct carries the fused
+                # cell; % T*T recovers the tile) — the next round's learned
+                # self-camera admission narrows around it
+                TT = self.tile_grid * self.tile_grid
+                for i, q in enumerate(qs):
+                    j = sl[i]
+                    if not matched[j]:
+                        continue
+                    mi = int(topk_idx[j, 0])
+                    if self.cfg.topk_rerank:
+                        # re-ranked matches re-anchor to the winning
+                        # camera's best band, not band 0
+                        for b in range(K):
+                            if topk_cam[j, b] == match_cam[j]:
+                                mi = int(topk_idx[j, b])
+                                break
+                    if mi >= 0 and gal_ct[mi] >= 0:
+                        q.tile_q = int(gal_ct[mi]) % TT
         else:
             ps_next = self._dispatch_advance(ps)
 

@@ -48,23 +48,28 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.policy import admit
+from repro.core.policy import admit, admit_tiles
 from repro.parallel.compat import shard_map
 from repro.runtime.cluster import ElasticMesh, HeartbeatMonitor
 from repro.runtime.engine import (EngineConfig, QueryState, RoundPlan,
                                   ServingEngine, _pow2, advance_round,
-                                  rank_advance_round, rank_advance_round_seg)
+                                  rank_advance_round, rank_advance_round_seg,
+                                  rank_advance_round_tiles)
 from repro.runtime.gallery import (GalleryStore, LocalGalleryStore,
                                    ShardedGalleryStore)
 
 
-def make_sharded_step_fns(mesh, policy, topk: int):
-    """The fleet's four jitted shard_map step bodies for ``mesh`` — query
+def make_sharded_step_fns(mesh, policy, topk: int, topk_rerank: bool = False,
+                          n_cams: int = 0):
+    """The fleet's six jitted shard_map step bodies for ``mesh`` — query
     rows shard over the data axis, model/windows/gallery ride replicated.
-    Returned as (admit, rank_advance, rank_advance_seg, advance); the
-    segment variant is the consolidated round's ONE ranking pass, with the
-    per-query segment ids sharding alongside the state rows and the
-    gallery's segment tags replicated like its cam/frame tags.
+    Returned as (admit, rank_advance, rank_advance_seg, advance,
+    admit_tiles, rank_advance_tiles); the segment variant is the
+    consolidated round's ONE ranking pass, with the per-query segment ids
+    sharding alongside the state rows and the gallery's segment tags
+    replicated like its cam/frame tags; the tile pair refines camera
+    admission to fused (camera, tile) cells — the (Q, C*T*T) mask shards
+    with the state rows, the gallery's cell tags replicate.
     Module-level (not a method) so the static invariant plane
     (``repro.analysis``) can trace and audit the EXACT jaxprs the fleet
     dispatches, on any mesh."""
@@ -73,15 +78,25 @@ def make_sharded_step_fns(mesh, policy, topk: int):
     def _admit(model, state, geo_adj):
         return admit(model, policy, state, geo_adj)
 
+    def _admit_tiles(model, state, geo_adj, tile_q):
+        return admit_tiles(model, policy, state, geo_adj, tile_q)
+
     def _rank_advance(windows, state, q_feat, mask, gal, gal_cam, gal_frame):
         return rank_advance_round(policy, windows, state, q_feat, mask, gal,
-                                  gal_cam, gal_frame, topk)
+                                  gal_cam, gal_frame, topk, topk_rerank)
 
     def _rank_advance_seg(windows, state, q_feat, q_seg, mask, gal, gal_cam,
                           gal_frame, gal_seg):
         return rank_advance_round_seg(policy, windows, state, q_feat, q_seg,
                                       mask, gal, gal_cam, gal_frame, gal_seg,
-                                      topk)
+                                      topk, topk_rerank)
+
+    def _rank_advance_tiles(windows, state, q_feat, q_seg, mask_ct, gal,
+                            gal_ct, gal_cam, gal_frame, gal_seg):
+        return rank_advance_round_tiles(policy, windows, state, q_feat,
+                                        q_seg, mask_ct, gal, gal_ct, gal_cam,
+                                        gal_frame, gal_seg, topk, n_cams,
+                                        topk_rerank)
 
     def _advance(windows, state):
         return advance_round(policy, windows, state)
@@ -100,6 +115,13 @@ def make_sharded_step_fns(mesh, policy, topk: int):
                           check_vma=False)),
         jax.jit(shard_map(_advance, mesh=mesh,
                           in_specs=(Pr, Pd), out_specs=Pd,
+                          check_vma=False)),
+        jax.jit(shard_map(_admit_tiles, mesh=mesh,
+                          in_specs=(Pr, Pd, Pr, Pd), out_specs=(Pd, Pd),
+                          check_vma=False)),
+        jax.jit(shard_map(_rank_advance_tiles, mesh=mesh,
+                          in_specs=(Pr, Pd, Pd, Pd, Pd, Pr, Pr, Pr, Pr, Pr),
+                          out_specs=(Pd,) * 8,
                           check_vma=False)),
     )
 
@@ -363,17 +385,29 @@ class ShardedServingEngine(ServingEngine):
             slots[g] = s * block + np.arange(len(g))
         return len(self._workers) * block, slots
 
+    def prime_batch(self, n_queries: int) -> None:
+        """Fleet variant of the single engine's ``prime_batch``: pre-size
+        the per-shard block for ``n_queries`` spread over the current
+        workers (balanced placement; a later imbalance can still grow the
+        block, which the guard's one-new-signature allowance covers)."""
+        per = -(-max(int(n_queries), 1) // max(len(self._workers), 1))
+        self._block_hwm = max(self._block_hwm, _pow2(per))
+
     def _fns(self):
         """shard_map-wrapped step bodies for the CURRENT mesh (lazily built;
         invalidated on every elastic re-mesh).  State rows shard over the
         data axis; model/windows/geo/gallery ride along replicated."""
         if self._sharded_fns is None:
             self._sharded_fns = make_sharded_step_fns(
-                self.mesh, self.policy, self.cfg.topk)
+                self.mesh, self.policy, self.cfg.topk,
+                topk_rerank=self.cfg.topk_rerank, n_cams=self.C)
         return self._sharded_fns
 
     def _dispatch_admit(self, ps):
         return self._fns()[0](self.model, ps, self._geo_adj)
+
+    def _dispatch_admit_tiles(self, ps, tile_q):
+        return self._fns()[4](self.model, ps, self._geo_adj, tile_q)
 
     def _dispatch_rank_advance(self, ps, q_feat, mask, gallery, gal_cam,
                                gal_frame):
@@ -384,6 +418,12 @@ class ShardedServingEngine(ServingEngine):
                                    gal_cam, gal_frame, gal_seg):
         return self._fns()[2](self._windows, ps, q_feat, q_seg, mask,
                               gallery, gal_cam, gal_frame, gal_seg)
+
+    def _dispatch_rank_advance_tiles(self, ps, q_feat, q_seg, mask_ct,
+                                     gallery, gal_ct, gal_cam, gal_frame,
+                                     gal_seg):
+        return self._fns()[5](self._windows, ps, q_feat, q_seg, mask_ct,
+                              gallery, gal_ct, gal_cam, gal_frame, gal_seg)
 
     def _dispatch_advance(self, ps):
         return self._fns()[3](self._windows, ps)

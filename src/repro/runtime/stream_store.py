@@ -44,6 +44,9 @@ class FrameStore:
         self.gallery = gallery if gallery is not None \
             else LocalGalleryStore(n_cams, retention)
         self._buf: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
+        # per-detection flat tile ids riding alongside each frame (the
+        # sub-frame admission plane's labels) — evicted in lockstep
+        self._tiles: list[dict[int, Any]] = [dict() for _ in range(n_cams)]
         self._keys: list[collections.deque] = [collections.deque()
                                                for _ in range(n_cams)]
         self._latest = np.full(n_cams, -1, np.int64)
@@ -53,16 +56,19 @@ class FrameStore:
 
     def _evict(self, cam: int) -> None:
         horizon = self._horizon(cam)
-        keys, buf = self._keys[cam], self._buf[cam]
+        keys, buf, tiles = self._keys[cam], self._buf[cam], self._tiles[cam]
         while keys and keys[0] < horizon:
             key = keys.popleft()
             buf.pop(key, None)
+            tiles.pop(key, None)
             self.gallery.drop(cam, key)   # embeddings never outlive frames
 
-    def append(self, cam: int, t: int, frame: Any) -> None:
+    def append(self, cam: int, t: int, frame: Any, tile: Any = None) -> None:
         if t not in self._buf[cam]:
             self._keys[cam].append(t)
         self._buf[cam][t] = frame
+        if tile is not None:
+            self._tiles[cam][t] = tile
         if t > self._latest[cam]:
             self._latest[cam] = t
         self._evict(cam)
@@ -71,6 +77,16 @@ class FrameStore:
         if t < self._horizon(cam):
             raise KeyError(f"frame ({cam}, {t}) evicted (retention {self.retention})")
         return self._buf[cam].get(t)
+
+    def get_tile(self, cam: int, t: int) -> Any:
+        """Per-detection flat tile ids for a retained (cam, t) frame, or
+        None when the frame carried no tile labels (tile-mode ingest makes
+        labels mandatory, so a None here past ingest is a bookkeeping bug
+        the engine surfaces as a RuntimeError — unlabeled gallery rows
+        would carry cell -1 and silently match nothing)."""
+        if t < self._horizon(cam):
+            return None
+        return self._tiles[cam].get(t)
 
     def range(self, cam: int, t0: int, t1: int) -> list[tuple[int, Any]]:
         """Frames in [t0, t1] still retained (replay read)."""

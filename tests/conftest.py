@@ -73,7 +73,8 @@ def make_drifted_world(n_entities=80, t_shift=150, horizon=420, seed=0,
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                         lose_worker=0, extra_ticks=500, gallery="auto",
                         topk=1, embed_fn=None, recalibrate=None,
-                        transport=None, prefetch=False, consolidate=True):
+                        transport=None, prefetch=False, consolidate=True,
+                        tile_grid=0, topk_rerank=False, model=None):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
@@ -84,21 +85,30 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
     ``transport`` routes the fleet's gallery fetches through a
     ``runtime.transport.Transport`` — pass a zero-arg FACTORY (callable or
     class) so every drive gets fresh transport state; ``prefetch`` turns on
-    the double-buffered speculative fetch pipeline."""
+    the double-buffered speculative fetch pipeline.  ``tile_grid=T > 0``
+    serves through the sub-frame spatial admission plane (per-detection
+    tile labels from the world's ground-truth positions ride along with
+    every ingest); ``model`` overrides the world's profile (e.g. a
+    tile-carrying re-profile of the same visits)."""
     from repro import api as rexcam
 
     vis, gal, feats = world["vis"], world["gal"], world["feats"]
     q_vids = world["q_vids"]
     if callable(transport):
         transport = transport()
-    eng = rexcam.serve(world["model"],
+    vis_tiles = None
+    if tile_grid > 0:
+        from repro.core.simulate import tile_index
+        vis_tiles = tile_index(vis.tile_xy, tile_grid)
+    eng = rexcam.serve(world["model"] if model is None else model,
                        embed_fn=embed_fn if embed_fn is not None
                        else lambda x: x,
                        policy=policy,
                        geo_adj=world["net"].geo_adjacent, shards=shards,
                        gallery=gallery, topk=topk, recalibrate=recalibrate,
                        transport=transport, prefetch=prefetch,
-                       consolidate=consolidate,
+                       consolidate=consolidate, tile_grid=tile_grid,
+                       topk_rerank=topk_rerank,
                        visit_source=rexcam.visits_window_source(vis)
                        if recalibrate is not None else None)
     t0 = int(vis.t_out[q_vids].min())
@@ -110,12 +120,17 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
         if lose_at is not None and step == lose_at and shards is not None:
             eng.lose_worker(lose_worker)
         if t < vis.horizon:
-            frames = {}
+            frames, tiles = {}, {}
             for c in range(vis.n_cams):
                 vids = gal[c, t][gal[c, t] >= 0]
                 if len(vids):
                     frames[c] = feats[vids]
-            eng.ingest(frames)
+                    if vis_tiles is not None:
+                        tiles[c] = vis_tiles[vids]
+            if tile_grid > 0:
+                eng.ingest(frames, tiles)
+            else:
+                eng.ingest(frames)
         eng.tick(record_trace=trace)
         if all(q.done for q in eng.queries.values()):
             break
@@ -291,6 +306,100 @@ def fleet_case_consolidation(shard_counts=(1, 2, 4, 8), n_queries=5, seed=3,
         world2, policy, max(shard_counts) // 2, lose_at=lose_at,
         lose_worker=lose_worker, consolidate=True, single_consolidate=False)
     assert eng.rebalances == 1
+
+
+def fleet_case_tiles(shard_counts=(1, 2, 4, 8), T=4, n_queries=5, seed=3,
+                     lose_at=50, lose_worker=1):
+    """The sub-frame spatial admission differential: serving with
+    ``tile_grid=T`` over a model WITHOUT tile data (the engine synthesizes
+    the all-tiles-admitted tensor) is trace-identical to camera-granular
+    serving — admissions, match indices/values (tie-breaks included),
+    rescue attribution, both cost conventions — for the single engine AND
+    every shard count, plus a mid-run worker-loss leg.  All-admitted tile
+    accounting must tile exactly: T*T tiles per admitted camera-step and
+    per unique frame (the camera-granular pixel-load ceiling the learned
+    masks are measured against)."""
+    from repro.core.policy import SearchPolicy
+
+    _require_devices(max(shard_counts))
+    TT = T * T
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    _, ref_trace, ref_sum = drive_serving_trace(world, policy)
+    for shards in (None,) + tuple(shard_counts):
+        eng, tr, sm = drive_serving_trace(world, policy, shards=shards,
+                                          tile_grid=T)
+        assert trace_key(tr) == trace_key(ref_trace), \
+            f"tile path (shards={shards}) diverged from the camera path"
+        for f in ("admitted_steps", "unique_frames", "content_steps",
+                  "replay_steps", "model_epoch", "per_query"):
+            assert sm[f] == ref_sum[f], f"tile path changed {f}"
+        np.testing.assert_array_equal(sm["rescue_pairs"],
+                                      ref_sum["rescue_pairs"])
+        assert eng.admitted_tiles == TT * eng.admitted_steps, \
+            "all-admitted tile accounting does not tile admitted_steps"
+        assert eng.unique_tiles == TT * eng.unique_frames, \
+            "all-admitted tile dedup does not tile unique_frames"
+    # worker loss mid-run on the tile path
+    world2 = make_serving_world(seed=seed + 1, n_queries=7)
+    _, r2_trace, r2_sum = drive_serving_trace(world2, policy)
+    eng, tr, sm = drive_serving_trace(
+        world2, policy, shards=max(shard_counts) // 2, lose_at=lose_at,
+        lose_worker=lose_worker, tile_grid=T)
+    assert trace_key(tr) == trace_key(r2_trace), \
+        "tile fleet diverged from the camera path across a worker loss"
+    assert sm["per_query"] == r2_sum["per_query"]
+    assert eng.rebalances == 1
+    assert eng.admitted_tiles == TT * eng.admitted_steps
+
+
+def fleet_case_plan_conservation(shard_counts=(1, 2, 4, 8), n_queries=5,
+                                 seed=4):
+    """Satellite regression: every RoundPlan conserves admission mass.  Per
+    round, ``sum(want_count.values())`` (how many (query, camera) steps
+    each unique (cam, frame) key serves) must equal ``plan.admitted`` (the
+    admission mask's popcount over live rows) and the per-query camera
+    lists; ``work`` must be exactly the sorted key set; and the per-plan
+    admitted sum over a whole run must reproduce the engine's
+    ``admitted_steps`` total — across consolidate on/off and every shard
+    count, because dedup/consolidation is an execution-plan change that may
+    never create or lose an admission step."""
+    from repro.core.policy import SearchPolicy
+    from repro.runtime.engine import ServingEngine
+
+    _require_devices(max(shard_counts))
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    world = make_serving_world(seed=seed, n_queries=n_queries)
+    orig = ServingEngine._plan_round
+    total = [0]
+
+    def checked(self, qs):
+        plan = orig(self, qs)
+        per_key = sum(plan.want_count.values())
+        assert per_key == plan.admitted == int(plan.mask[plan.slots].sum()), \
+            f"plan lost admission mass: {per_key} keyed vs {plan.admitted}"
+        assert plan.work == sorted(plan.want_count), \
+            "work queue is not exactly the sorted want_count key set"
+        assert plan.admitted == sum(len(c) for c in plan.cams_by_q), \
+            "per-query camera lists do not tile the admitted count"
+        total[0] += plan.admitted
+        return plan
+
+    ServingEngine._plan_round = checked
+    try:
+        for consolidate in (True, False):
+            for shards in (None,) + tuple(shard_counts):
+                total[0] = 0
+                eng, _, _ = drive_serving_trace(world, policy, shards=shards,
+                                                consolidate=consolidate)
+                assert total[0] == eng.admitted_steps, \
+                    (f"consolidate={consolidate} shards={shards}: per-plan "
+                     f"admitted {total[0]} != engine admitted_steps "
+                     f"{eng.admitted_steps}")
+    finally:
+        ServingEngine._plan_round = orig
 
 
 def fleet_case_recalibration(shard_counts=(2, 4, 8), n_queries=8, seed=0):

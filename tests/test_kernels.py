@@ -147,6 +147,89 @@ def test_reid_topk_segments_relabel_bit_identical_to_masked():
     np.testing.assert_array_equal(np.asarray(msi), np.asarray(ssi))
 
 
+def test_reid_topk_tiles_matches_ref():
+    """Tile-masked variant == oracle on a mixed (segment, fused-cell) batch
+    — including unlabeled gallery rows (``gal_ct == -1``), which must match
+    nothing rather than wrap into cell C*T*T - 1."""
+    rng = np.random.default_rng(41)
+    Q, G, C, T, D, k = 11, 83, 6, 3, 32, 4
+    TT = T * T
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
+    q_seg = jnp.asarray(rng.integers(0, 4, Q), jnp.int32)
+    gal_seg = jnp.asarray(rng.integers(0, 4, G), jnp.int32)
+    gal_cam = rng.integers(0, C, G)
+    gal_ct = jnp.asarray(
+        np.where(rng.random(G) < 0.15, -1,
+                 gal_cam * TT + rng.integers(0, TT, G)), jnp.int32)
+    adm_ct = jnp.asarray(rng.random((Q, C * TT)) < 0.4)
+    sv, si = ops.reid_topk_tiles(q, q_seg, adm_ct, g, gal_ct, gal_seg, k)
+    rv, ri = ref.reid_topk_tiles_ref(q, q_seg, adm_ct, g, gal_ct, gal_seg, k)
+    np.testing.assert_allclose(sv, rv, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(si, ri)
+    # every unlabeled row stayed invisible: no claimed index points at one
+    unlabeled = set(np.flatnonzero(np.asarray(gal_ct) == -1).tolist())
+    assert not (set(np.asarray(si).ravel().tolist()) - {-1}) & unlabeled
+
+
+def test_reid_topk_tiles_all_admitted_bit_identical_to_segments():
+    """The tile plane's trace-identity contract: with every tile of every
+    admitted camera open (``admit_ct = repeat(admit, T*T)``) the tile kernel
+    is BIT-identical to ``reid_topk_segments`` — same flat-argmin
+    tie-breaks, same (NEG_INF, -1) sentinels.  Integer-valued features force
+    exact float32 ties so the comparison is bit-for-bit, not allclose."""
+    rng = np.random.default_rng(53)
+    Q, G, C, T, D, k = 17, 131, 5, 4, 8, 3
+    TT = T * T
+    q = jnp.asarray(rng.integers(0, 2, (Q, D)), jnp.float32)
+    g = jnp.asarray(rng.integers(0, 2, (G, D)), jnp.float32)
+    q_seg = jnp.asarray(rng.integers(0, 4, Q), jnp.int32)
+    gal_seg = jnp.asarray(rng.integers(0, 4, G), jnp.int32)
+    gal_cam = rng.integers(0, C, G)
+    gal_tile = rng.integers(0, TT, G)
+    gal_ct = jnp.asarray(gal_cam * TT + gal_tile, jnp.int32)
+    adm = rng.random((Q, C)) < 0.6
+    adm_ct = jnp.asarray(np.repeat(adm, TT, axis=1))
+    ssv, ssi = ops.reid_topk_segments(
+        q, q_seg, jnp.asarray(adm), g, jnp.asarray(gal_cam, jnp.int32),
+        gal_seg, k)
+    tsv, tsi = ops.reid_topk_tiles(q, q_seg, adm_ct, g, gal_ct, gal_seg, k)
+    np.testing.assert_array_equal(np.asarray(ssv), np.asarray(tsv))
+    np.testing.assert_array_equal(np.asarray(ssi), np.asarray(tsi))
+    # and closing one camera's tiles is exactly closing the camera: the
+    # fused-cell mask degrades to the camera mask it was built from
+    adm2 = adm.copy()
+    adm2[:, 2] = False
+    adm_ct2 = np.repeat(adm, TT, axis=1)
+    adm_ct2[:, 2 * TT:3 * TT] = False
+    s2 = ops.reid_topk_segments(q, q_seg, jnp.asarray(adm2), g,
+                                jnp.asarray(gal_cam, jnp.int32), gal_seg, k)
+    t2 = ops.reid_topk_tiles(q, q_seg, jnp.asarray(adm_ct2), g, gal_ct,
+                             gal_seg, k)
+    np.testing.assert_array_equal(np.asarray(s2[0]), np.asarray(t2[0]))
+    np.testing.assert_array_equal(np.asarray(s2[1]), np.asarray(t2[1]))
+
+
+def test_reid_topk_tiles_fully_masked_surfaces_sentinels():
+    """All-closed admission and all-unlabeled galleries both rank every row
+    to the kernels' (NEG_INF, -1) padding convention."""
+    rng = np.random.default_rng(59)
+    Q, G, C, T, D, k = 5, 37, 4, 2, 16, 2
+    TT = T * T
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
+    q_seg = jnp.zeros(Q, jnp.int32)
+    gal_seg = jnp.zeros(G, jnp.int32)
+    gal_ct = jnp.asarray(rng.integers(0, C * TT, G), jnp.int32)
+    closed = jnp.zeros((Q, C * TT), bool)
+    sv, si = ops.reid_topk_tiles(q, q_seg, closed, g, gal_ct, gal_seg, k)
+    assert (np.asarray(si) == -1).all() and (np.asarray(sv) < -1e29).all()
+    open_ct = jnp.ones((Q, C * TT), bool)
+    unlabeled = jnp.full(G, -1, jnp.int32)
+    sv, si = ops.reid_topk_tiles(q, q_seg, open_ct, g, unlabeled, gal_seg, k)
+    assert (np.asarray(si) == -1).all() and (np.asarray(sv) < -1e29).all()
+
+
 @settings(max_examples=12, deadline=None)
 @given(st.integers(1, 24), st.integers(0, 70), st.integers(2, 5),
        st.integers(1, 4), st.booleans())
@@ -204,6 +287,18 @@ def test_reid_rank_parity_property(Q, G, C, k, ties):
             jnp.asarray([seg_of[f] for f in gal_frame], jnp.int32), kk)
         np.testing.assert_array_equal(np.asarray(msv), np.asarray(ssv))
         np.testing.assert_array_equal(np.asarray(msi), np.asarray(ssi))
+        # and the tile entry with every tile open degrades to the segment
+        # entry bit-for-bit (the sub-frame plane's all-admitted contract)
+        TT = 4
+        gal_ct = jnp.asarray(gal_cam * TT + rng.integers(0, TT, G), jnp.int32)
+        tsv, tsi = ops.reid_topk_tiles(
+            jnp.asarray(qf),
+            jnp.asarray([seg_of[f] for f in q_frame], jnp.int32),
+            jnp.asarray(np.repeat(adm, TT, axis=1)), jnp.asarray(gf),
+            gal_ct, jnp.asarray([seg_of[f] for f in gal_frame], jnp.int32),
+            kk)
+        np.testing.assert_array_equal(np.asarray(msv), np.asarray(tsv))
+        np.testing.assert_array_equal(np.asarray(msi), np.asarray(tsi))
 
     (matched, match_cam, match_emb, topk_val, topk_idx, topk_cam,
      topk_frame) = (

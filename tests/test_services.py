@@ -253,3 +253,101 @@ def test_serving_engine_end_to_end(duke_sim):
     qs = eng.queries[0]
     # the engine must have processed far fewer frames than cams x steps
     assert eng.frames_processed < (t1 - t0) * vis.n_cams * 0.7
+
+
+def test_serving_tile_all_admitted_matches_camera_path():
+    """Single-engine half of the tile differential (tier-1, no fake-device
+    mesh): ``tile_grid=T`` over a tile-less model is trace-identical to
+    camera-granular serving, and the tile counters tile T*T exactly."""
+    from conftest import drive_serving_trace, make_serving_world, trace_key
+    from repro.core.policy import SearchPolicy
+
+    T = 4
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    _, ref_trace, ref_sum = drive_serving_trace(world, policy)
+    eng, tr, sm = drive_serving_trace(world, policy, tile_grid=T)
+    assert trace_key(tr) == trace_key(ref_trace)
+    assert sm["per_query"] == ref_sum["per_query"]
+    assert sm["admitted_steps"] == ref_sum["admitted_steps"]
+    assert eng.admitted_tiles == T * T * eng.admitted_steps
+    assert eng.unique_tiles == T * T * eng.unique_frames
+
+
+def test_serving_tile_learned_masks_prune_without_match_loss():
+    """Learned entry-region masks (profiled from the same world's ground
+    truth) must strictly shrink the admitted tile load while every query's
+    match outcome stays identical — the recall-safe construction
+    (mass-coverage threshold + dilation halo + phase/self-camera
+    relaxations) in miniature."""
+    from conftest import drive_serving_trace, make_serving_world
+    from repro import api as rexcam
+    from repro.core.policy import SearchPolicy
+
+    T = 4
+    world = make_serving_world(seed=0, n_queries=4)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    tile_model = rexcam.profile(world["vis"], time_limit=252, tile_grid=T)
+    assert tile_model.tile_grid == T
+    assert tile_model.tile_admit.shape == (8, 8, T * T)
+    base, _, base_sum = drive_serving_trace(world, policy, tile_grid=T)
+    eng, _, sm = drive_serving_trace(world, policy, tile_grid=T,
+                                     model=tile_model)
+    assert sm["per_query"] == base_sum["per_query"], \
+        "learned tile masks changed a match outcome"
+    assert eng.admitted_tiles < base.admitted_tiles, \
+        f"learned masks pruned nothing: {eng.admitted_tiles} vs " \
+        f"{base.admitted_tiles} all-admitted tiles"
+
+
+def test_serving_tile_ingest_requires_labels():
+    """Tile mode makes per-detection tile labels MANDATORY at ingest: a
+    missing camera or a length mismatch raises instead of silently serving
+    unrankable gallery rows."""
+    from conftest import make_serving_world
+    from repro import api as rexcam
+    from repro.core.policy import SearchPolicy
+
+    world = make_serving_world(n_entities=60, horizon=240, seed=3,
+                               n_queries=2)
+    eng = rexcam.serve(world["model"], embed_fn=lambda x: x,
+                       policy=SearchPolicy(), tile_grid=4)
+    crops = np.zeros((3, world["feats"].shape[1]), np.float32)
+    with pytest.raises(ValueError, match="tile labels"):
+        eng.ingest({0: crops})
+    with pytest.raises(ValueError, match="tile labels"):
+        eng.ingest({0: crops}, {1: np.zeros(3, np.int32)})
+    with pytest.raises(ValueError, match="3 detections"):
+        eng.ingest({0: crops}, {0: np.zeros(2, np.int32)})
+    eng.ingest({0: crops}, {0: np.zeros(3, np.int32)})   # labeled: accepted
+
+
+def test_serving_topk_rerank_k1_bit_identical():
+    """§5.2 top-k confidence re-ranking at k=1 degrades to plain argmax
+    BIT-identically (one passing band is its own vote winner), and at k=3
+    the voting path still runs the full differential world without
+    diverging the admission/phase plane."""
+    from conftest import drive_serving_trace, make_serving_world, trace_key
+    from repro.core.policy import SearchPolicy
+
+    world = make_serving_world(seed=0, n_queries=4)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=60)
+    _, ref_trace, ref_sum = drive_serving_trace(world, policy, topk=1)
+    _, rr_trace, rr_sum = drive_serving_trace(world, policy, topk=1,
+                                              topk_rerank=True)
+    assert trace_key(rr_trace) == trace_key(ref_trace), \
+        "topk_rerank at k=1 is not bit-identical to the argmax path"
+    assert rr_sum["per_query"] == ref_sum["per_query"]
+    # k=3 rerank: a live sanity run; re-anchoring may legitimately change
+    # trajectories, but the admission plane itself is rerank-independent —
+    # round 1's masks (before any match can diverge) must agree
+    _, k3_trace, k3_sum = drive_serving_trace(world, policy, topk=3,
+                                              topk_rerank=True)
+    assert k3_trace and len(k3_sum["per_query"]) == 4
+    first = {r["qid"]: tuple(map(bool, r["mask"])) for r in k3_trace[:4]}
+    ref_first = {r["qid"]: tuple(map(bool, r["mask"])) for r in ref_trace[:4]}
+    assert first == ref_first

@@ -68,6 +68,22 @@ def test_fleet_consolidated_path_trace_identical():
     _fleet_case("fleet_case_consolidation")
 
 
+def test_fleet_tile_path_trace_identical_to_camera_path():
+    """The sub-frame spatial admission differential: ``tile_grid=T`` over a
+    tile-less model (all tiles admitted) is bit-identical to camera-granular
+    serving for the single engine and shard counts {1, 2, 4, 8}, through a
+    mid-run worker loss, with the tile counters tiling T*T exactly."""
+    _fleet_case("fleet_case_tiles")
+
+
+def test_round_plan_conserves_admission_mass():
+    """Satellite regression: sum(want_count) == plan.admitted == the
+    engine's admitted_steps accrual, across consolidate on/off and shard
+    counts {1, 2, 4, 8} — the RoundPlan may never create or lose an
+    admission step."""
+    _fleet_case("fleet_case_plan_conservation", timeout=1200)
+
+
 def test_fleet_random_streams_property():
     """Satellite property test: random scheme/seed/shard-count/skip draws
     stay bit-identical (deterministic via tests/_hypothesis_fallback.py
