@@ -19,6 +19,7 @@ ALL = {
     "transport_sweep": scenarios.transport_sweep,
     "query_churn_sweep": scenarios.query_churn_sweep,
     "tile_sweep": scenarios.tile_sweep,
+    "soak_130": scenarios.soak_130,
     "sec3_potential": tables.sec3_potential,
     "fig10_anoncampus": tables.fig10_anoncampus,
     "fig11_duke": tables.fig11_duke,

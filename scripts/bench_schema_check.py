@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Validate a directory of BENCH_*.json perf-trajectory files (CI hook).
+
+Every file must be ``{"scenario": <name>, "records": [<row>, ...]}`` and
+every non-derived row must carry the golden schema keys
+(``benchmarks.scenarios.REQUIRED_BENCH_KEYS`` — imported, not duplicated,
+so the check can never drift from the writer).  Exit 1 on any violation,
+so the CI bench smoke fails when a sweep ships malformed trajectory rows.
+
+Usage: python scripts/bench_schema_check.py <dir-with-BENCH_*.json>
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.scenarios import REQUIRED_BENCH_KEYS  # noqa: E402
+
+
+def check_file(path: str) -> list[str]:
+    errs = []
+    with open(path) as f:
+        doc = json.load(f)
+    name = os.path.basename(path)
+    if not isinstance(doc.get("scenario"), str):
+        errs.append(f"{name}: top-level 'scenario' must be a string")
+    recs = doc.get("records")
+    if not isinstance(recs, list) or not recs:
+        errs.append(f"{name}: top-level 'records' must be a non-empty list")
+        return errs
+    for i, rec in enumerate(recs):
+        if not isinstance(rec, dict):
+            errs.append(f"{name}: records[{i}] is not an object")
+            continue
+        if rec.get("derived"):
+            continue
+        missing = [k for k in REQUIRED_BENCH_KEYS if k not in rec]
+        if missing:
+            errs.append(f"{name}: records[{i}] "
+                        f"(config={rec.get('config', '?')}) missing "
+                        f"required keys {missing}")
+    return errs
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    bench_dir = sys.argv[1]
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"bench_schema_check: no BENCH_*.json under {bench_dir}",
+              file=sys.stderr)
+        return 1
+    errs = []
+    for p in paths:
+        errs.extend(check_file(p))
+    for e in errs:
+        print(f"SCHEMA VIOLATION: {e}", file=sys.stderr)
+    total = len(paths)
+    if errs:
+        print(f"bench_schema_check: {len(errs)} violations in {total} files",
+              file=sys.stderr)
+        return 1
+    print(f"bench_schema_check: {total} files ok "
+          f"(required keys: {', '.join(REQUIRED_BENCH_KEYS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,11 +6,13 @@ from repro.core.correlation import SpatioTemporalModel  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     PhaseState, PhaseWindows, SearchPolicy, admit, advance, phase_windows,
 )
-from repro.core.profiler import build_model, transitions_from_visits  # noqa: F401
+from repro.core.profiler import (  # noqa: F401
+    build_model, merge_reprofiled_rows, transitions_from_visits,
+)
 from repro.core.simulate import (  # noqa: F401
     CameraNetwork, Visits, simulate_network, duke_like_network,
-    anoncampus_like_network, porto_like_network, build_gallery,
-    permute_network, concat_visits,
+    anoncampus_like_network, porto_like_network, clustered_city_network,
+    build_gallery, permute_network, concat_visits,
 )
 from repro.core.tracker import TrackerParams, track_queries, TrackResult  # noqa: F401
 from repro.core.detect import DetectorParams, identity_detection  # noqa: F401

@@ -24,6 +24,47 @@ import numpy as np
 
 INF_TIME = np.int32(2 ** 30)
 
+#: Model fields whose value at source-camera row ``r`` depends ONLY on
+#: transitions departing r (and exits at r): counts/hist->cdf/f0 accumulate
+#: per (src, dst) pair, and the S/exit_frac normalizer is the row's own
+#: outbound total (``counts[r].sum() + exits[r]``).  ``entry`` is the one
+#: GLOBAL field (normalized over every camera's first appearances) — a
+#: row-targeted re-profile must always recompute it from the full window.
+#: This is the contract that makes ``profiler.merge_reprofiled_rows``
+#: bit-identical to a full rebuild on untouched rows.
+ROW_LOCAL_FIELDS = ("S", "exit_frac", "cdf", "f0", "counts", "tile_admit")
+
+
+def splice_rows(model: "SpatioTemporalModel", rows, updates: dict, *,
+                entry=None, epoch: int | None = None) -> "SpatioTemporalModel":
+    """Replace source-camera rows of the ROW-LOCAL fields with freshly
+    profiled blocks, carrying every untouched row bit-for-bit.
+
+    ``updates`` maps field name (in ``ROW_LOCAL_FIELDS``) to a
+    ``(len(rows), ...)`` block; splicing keeps the base array's dtype, so a
+    float64 profiling block lands exactly as ``build_model``'s own float32
+    cast would.  ``entry`` (global — see ``ROW_LOCAL_FIELDS``) and ``epoch``
+    replace wholesale.  Array shapes never change, so a hot-swap of the
+    result through ``engine.swap_model`` compiles nothing."""
+    rows = np.asarray(rows, np.int64)
+    repl = {}
+    for name, block in updates.items():
+        if name not in ROW_LOCAL_FIELDS:
+            raise ValueError(f"splice_rows: {name!r} is not row-local "
+                             f"(row-local fields: {ROW_LOCAL_FIELDS})")
+        base = getattr(model, name)
+        if base is None:
+            raise ValueError(f"splice_rows: base model has no {name!r} to "
+                             f"splice into")
+        arr = np.asarray(base).copy()
+        arr[rows] = block
+        repl[name] = jnp.asarray(arr)
+    if entry is not None:
+        repl["entry"] = jnp.asarray(entry, jnp.float32)
+    if epoch is not None:
+        repl["epoch"] = int(epoch)
+    return dataclasses.replace(model, **repl)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

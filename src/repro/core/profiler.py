@@ -64,7 +64,8 @@ def transitions_from_visits(ent, cam, t_in, t_out):
 
 
 def tile_admit_from_visits(ent, cam, t_in, tile_xy, n_cams: int,
-                           tile_grid: int, tile_keep: float = 1.0):
+                           tile_grid: int, tile_keep: float = 1.0,
+                           rows=None):
     """Learn per directed camera-pair entry-region masks on a T x T grid.
 
     For every consecutive-visit transition (c_s -> c_d) the DESTINATION
@@ -76,7 +77,14 @@ def tile_admit_from_visits(ent, cam, t_in, tile_xy, n_cams: int,
     does not mean never-possible, and whole-camera admission already
     gates them spatially/temporally.
 
-    Returns a (C, C, T*T) bool ndarray.
+    Returns a (C, C, T*T) bool ndarray — or, with ``rows=`` (sorted source
+    camera ids), only those source rows as a (len(rows), C, T*T) block:
+    transitions departing other cameras are dropped before the histogram
+    and the per-pair thresholding loop only visits the requested rows,
+    which is what makes a row-targeted re-profile cheap
+    (``merge_reprofiled_rows``).  Each (s, d) pair's mask depends only on
+    that pair's own transitions, so the block is bit-identical to the
+    corresponding rows of a full pass.
     """
     from repro.core.simulate import tile_index
 
@@ -89,11 +97,21 @@ def tile_admit_from_visits(ent, cam, t_in, tile_xy, n_cams: int,
     dst = c[1:][same]
     dst_tile = tile_index(np.asarray(tile_xy)[order][1:][same], T)
 
-    hist = np.zeros((C, C, T * T), np.float64)
-    np.add.at(hist, (src, dst, dst_tile), 1.0)
+    if rows is None:
+        n_rows, row_of = C, np.arange(C)
+    else:
+        rows = np.asarray(rows, np.int64)
+        n_rows = len(rows)
+        row_of = np.full(C, -1, np.int64)        # source cam -> block row
+        row_of[rows] = np.arange(n_rows)
+        keep = row_of[src] >= 0
+        src, dst, dst_tile = src[keep], dst[keep], dst_tile[keep]
 
-    total = hist.sum(-1)                         # (C, C) transitions per pair
-    admit = np.ones((C, C, T * T), bool)         # unobserved pairs: admit all
+    hist = np.zeros((n_rows, C, T * T), np.float64)
+    np.add.at(hist, (row_of[src], dst, dst_tile), 1.0)
+
+    total = hist.sum(-1)                         # per-pair transition counts
+    admit = np.ones((n_rows, C, T * T), bool)    # unobserved pairs: admit all
     observed = np.argwhere(total > 0)
     for s, d in observed:
         h = hist[s, d]
@@ -196,6 +214,85 @@ def build_model(ent, cam, t_in, t_out, n_cams: int, *, n_bins: int = 256,
         tile_grid=tile_grid,
         tile_learned=tile_admit is not None,
     )
+
+
+def merge_reprofiled_rows(old: SpatioTemporalModel, ent, cam, t_in, t_out,
+                          rows, *, tile_xy=None, tile_keep: float = 1.0,
+                          epoch: int | None = None) -> SpatioTemporalModel:
+    """Row-targeted re-profile (§6 at 130-camera scale): recompute ONLY the
+    drifted source-camera ``rows`` from a fresh visit window and carry every
+    other row of ``old`` bit-for-bit.
+
+    Every per-pair statistic is row-local in the source camera (see
+    ``correlation.ROW_LOCAL_FIELDS``): counts/hist/f0 accumulate per
+    (src, dst) transition and the S/exit_frac normalizer is the row's own
+    outbound total — so recomputing a row from the window is arithmetically
+    identical to what a full ``build_model`` over the same window would put
+    there, float-for-float (same accumulation, same float64 -> float32
+    cast).  The one global field, ``entry``, is always recomputed from the
+    FULL window.  Consequence (the property test's contract): when the
+    non-drifted rows' window contents are unchanged, the merge is
+    bit-identical to a full rebuild — at a fraction of the (C, C, NB) array
+    traffic, which is the whole point at C=130.
+
+    Tile masks: with ``tile_xy`` given and a tile-learned ``old``, the
+    drifted rows' entry-region masks are re-learned from the window
+    (restricted per-pair pass); without window positions the incumbent
+    masks ride forward on every row, mirroring ``swap_model``'s carry.
+
+    Shapes, n_bins and bin_width all come from ``old``, so the merged model
+    hot-swaps without recompiling anything.  ``rows`` is deduplicated and
+    sorted; ``epoch`` defaults to ``old.epoch`` (``engine.swap_model``
+    restamps it on swap either way)."""
+    from repro.core.correlation import splice_rows
+
+    ent, cam, t_in, t_out = map(np.asarray, (ent, cam, t_in, t_out))
+    rows = np.unique(np.asarray(rows, np.int64))
+    C, NB, bw = old.n_cams, old.n_bins, old.bin_width
+    if len(rows) == 0 or rows[0] < 0 or rows[-1] >= C:
+        raise ValueError(f"merge_reprofiled_rows: rows {rows} outside the "
+                         f"model's [0, {C}) camera range (or empty)")
+    R = len(rows)
+    row_of = np.full(C, -1, np.int64)
+    row_of[rows] = np.arange(R)
+
+    src, dst, dt, exit_cams, entry_cams = \
+        transitions_from_visits(ent, cam, t_in, t_out)
+    keep = row_of[src] >= 0
+    r_src, r_dst, r_dt = row_of[src[keep]], dst[keep], dt[keep]
+
+    counts = np.zeros((R, C), np.float64)
+    np.add.at(counts, (r_src, r_dst), 1.0)
+    hist = np.zeros((R, C, NB), np.float64)
+    b = np.clip(r_dt // bw, 0, NB - 1)
+    np.add.at(hist, (r_src, r_dst, b), 1.0)
+    f0 = np.full((R, C), int(INF_TIME), np.int64)
+    np.minimum.at(f0, (r_src, r_dst), r_dt)
+
+    exits = np.zeros((R,), np.float64)
+    keep_x = row_of[exit_cams] >= 0
+    np.add.at(exits, row_of[exit_cams[keep_x]], 1.0)
+
+    out_total = counts.sum(1) + exits
+    denom = np.maximum(out_total, 1.0)
+    S = counts / denom[:, None]
+    exit_frac = exits / denom
+    cdf = np.cumsum(hist, axis=-1)
+    cdf = cdf / np.maximum(cdf[..., -1:], 1.0)
+
+    entry = np.zeros((C,), np.float64)           # global: full window, always
+    np.add.at(entry, entry_cams, 1.0)
+    entry = entry / max(entry.sum(), 1.0)
+
+    updates = dict(S=S, exit_frac=exit_frac, cdf=cdf,
+                   f0=np.minimum(f0, int(INF_TIME)), counts=counts)
+    if old.tile_admit is not None and tile_xy is not None \
+            and old.tile_grid > 0:
+        updates["tile_admit"] = tile_admit_from_visits(
+            ent, cam, t_in, np.asarray(tile_xy), C, old.tile_grid,
+            tile_keep, rows=rows)
+    return splice_rows(old, rows, updates, entry=entry,
+                       epoch=old.epoch if epoch is None else epoch)
 
 
 def profiling_cost(ent, cam, t_in, t_out, sample_every: int = 1,

@@ -177,6 +177,91 @@ def porto_like_network(n_cams: int = 130, grid=(13, 10), seed: int = 3) -> Camer
                          dwell_mean=6.0, geo_adjacent=geo, fps=1)
 
 
+def clustered_city_network(n_cams: int = 130, n_clusters: int | None = None,
+                           seed: int = 17) -> CameraNetwork:
+    """Large synthetic deployment for the paper's 130-camera soak (§8.1):
+    clusters of cameras (a neighborhood: one hub + leaves) joined by a
+    corridor graph over the hubs (arterial roads).
+
+    Structure, per cluster (cameras are CONTIGUOUS id blocks — cluster k owns
+    ``[starts[k], starts[k+1])`` with the hub first — so localized drift
+    injections can permute one block without touching the rest):
+
+      * leaves feed the hub heavily and their ring neighbors lightly
+        (local foot traffic),
+      * the hub fans back out to its leaves and to corridor-adjacent hubs
+        (a ring over clusters plus seeded chords),
+      * intra-cluster hops are short (~8-20 s), corridor hops long
+        (~30-70 s) — two clearly separated travel-time regimes, which is
+        what makes the temporal windows discriminative at this scale,
+      * entry mass concentrates at hubs (where traffic enters a
+        neighborhood), ``geo_adjacent`` = cluster-mates + corridor pairs.
+
+    Every draw comes from one ``default_rng(seed)`` in a fixed order, so the
+    topology is bit-reproducible per (n_cams, n_clusters, seed) — the soak
+    differential harness depends on that."""
+    C = n_cams
+    if n_clusters is None:
+        # ~13-camera neighborhoods at C=130; at least 2 so a corridor exists
+        n_clusters = max(2, int(round(np.sqrt(C / 1.3))))
+    assert C >= 2 * n_clusters, \
+        f"need >= 2 cameras per cluster: C={C}, n_clusters={n_clusters}"
+    rng = np.random.default_rng(seed)
+    sizes = np.full(n_clusters, C // n_clusters)
+    sizes[: C % n_clusters] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    members = [np.arange(starts[k], starts[k + 1]) for k in range(n_clusters)]
+    hubs = np.array([int(m[0]) for m in members])
+
+    # corridor graph over hubs: a ring plus ~K/2 chords
+    corridor = {(k, (k + 1) % n_clusters) for k in range(n_clusters)}
+    for _ in range(n_clusters // 2):
+        a, b = rng.choice(n_clusters, 2, replace=False)
+        corridor.add((min(a, b), max(a, b)))
+
+    W = np.zeros((C, C))
+    for k in range(n_clusters):
+        hub, leaves = hubs[k], members[k][1:]
+        n_leaf = len(leaves)
+        for i, v in enumerate(leaves):
+            W[v, hub] += 3.0                       # leaf -> hub: dominant
+            if n_leaf > 1:                         # leaf ring: light local flow
+                W[v, leaves[(i + 1) % n_leaf]] += 1.0
+                W[v, leaves[(i - 1) % n_leaf]] += 1.0
+            W[hub, v] += 1.0                       # hub fans back out
+    for a, b in sorted(corridor):
+        W[hubs[a], hubs[b]] += 2.5
+        W[hubs[b], hubs[a]] += 2.5
+    # per-edge seeded perturbation: no two pairs identically weighted
+    W *= rng.uniform(0.7, 1.3, W.shape)
+    np.fill_diagonal(W, 0.0)
+
+    exit_p = 0.15
+    row = W.sum(1)
+    assert (row > 0).all()                          # every camera has an edge
+    T = np.zeros((C, C + 1))
+    T[:, :C] = W / row[:, None] * (1.0 - exit_p)
+    T[:, C] = exit_p
+
+    same_cluster = np.zeros((C, C), bool)
+    for m in members:
+        same_cluster[np.ix_(m, m)] = True
+    mean = np.where(same_cluster, rng.uniform(8.0, 20.0, (C, C)),
+                    rng.uniform(30.0, 70.0, (C, C)))
+    std = np.clip(mean * 0.15, 1.5, 8.0)
+
+    entry = np.full(C, 0.4 / C)                    # 60% of entries at hubs
+    entry[hubs] += 0.6 / n_clusters
+    entry = entry / entry.sum()
+
+    geo = same_cluster.copy()
+    for a, b in sorted(corridor):
+        geo[hubs[a], hubs[b]] = geo[hubs[b], hubs[a]] = True
+    np.fill_diagonal(geo, False)
+    return CameraNetwork(f"city-{C}", C, T, mean, std, entry,
+                         dwell_mean=10.0, geo_adjacent=geo, fps=1)
+
+
 def permute_network(net: CameraNetwork, perm) -> CameraNetwork:
     """Traffic-pattern shift (paper §6's drift risk): relabel the topology by
     a camera permutation — camera i now behaves like camera ``perm[i]`` did

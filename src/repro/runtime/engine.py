@@ -517,11 +517,15 @@ class ServingEngine:
                 "swap_model called mid-round: the model must stay constant "
                 "within a round (admit and rank see one M) — swap between "
                 "ticks, e.g. from RecalibrationController.on_tick")
-        if model.n_cams != self.C or model.n_bins != self.model.n_bins:
+        if model.n_cams != self.C or model.n_bins != self.model.n_bins \
+                or model.bin_width != self.model.bin_width:
             raise ValueError(
                 f"swap_model shape mismatch: engine serves C={self.C}, "
-                f"NB={self.model.n_bins}; got C={model.n_cams}, "
-                f"NB={model.n_bins} (re-profile with the same n_bins)")
+                f"NB={self.model.n_bins}, bin_width={self.model.bin_width}; "
+                f"got C={model.n_cams}, NB={model.n_bins}, "
+                f"bin_width={model.bin_width} (re-profile with the same "
+                f"n_bins/bin_width — bin_width is jit-static, so a mismatch "
+                f"would recompile every step body)")
         if self.tile_grid > 0:
             # epoch-versioned tile carry: a recalibration that re-profiled
             # WITHOUT tile data keeps serving the incumbent learned masks

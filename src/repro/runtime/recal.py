@@ -50,11 +50,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable
 
 import numpy as np
 
-from repro.core.profiler import build_model, drift_score
+from repro.core.profiler import build_model, drift_score, merge_reprofiled_rows
 from repro.core.simulate import Visits
 
 # (ent, cam, t_in, t_out) arrays for a time window — what build_model eats
@@ -78,6 +79,13 @@ class RecalibrationPolicy:
     window: int = 1200             # sliding re-profile window (recent steps)
     smoothing: float = 3.0         # drift_score additive smoothing
     reset_rescues: bool = True     # zero the rescue matrix after a swap
+    # Row-targeted re-profiling (the 130-camera regime): instead of a full
+    # (C, C, NB) rebuild, re-profile only the source-camera rows whose
+    # per-row drift score reaches ``row_threshold`` (None: reuse
+    # ``drift_threshold``) and merge them into the incumbent model
+    # (``profiler.merge_reprofiled_rows`` — untouched rows carry bit-exact).
+    targeted: bool = False
+    row_threshold: float | None = None
 
 
 def visits_window_source(visits: Visits) -> VisitSource:
@@ -136,6 +144,14 @@ class RecalibrationController:
         self.polls: collections.deque[dict] = collections.deque(maxlen=512)
         self._last_poll: int | None = None
         self._last_swap: int | None = None
+        # profiler call accounting — what the soak's "targeted re-computes
+        # only the drifted rows" assertion reads: rows actually re-profiled
+        # (a full rebuild books all C), swap counts per mode, and the
+        # cumulative wall spent inside the profiling step itself
+        self.rows_reprofiled = 0
+        self.full_rebuilds = 0
+        self.targeted_swaps = 0
+        self.profile_wall = 0.0
 
     # -- the drift signal --------------------------------------------------
     def score(self) -> np.ndarray:
@@ -160,7 +176,8 @@ class RecalibrationController:
         p = self.policy
         t = int(self.clock()) if t is None else t
         rescues = int(np.asarray(self.engine.rescue_pairs).sum())
-        score = float(self.score().max())
+        score_mat = self.score()
+        score = float(score_mat.max())
         self.polls.append(dict(t=t, score=score, rescues=rescues))
         if rescues < p.min_rescues:            # small-sample guard
             return None
@@ -168,23 +185,51 @@ class RecalibrationController:
             return None
         if self._last_swap is not None and t - self._last_swap < p.cooldown:
             return None                        # cooling down: no thrash
-        return self._recalibrate(t, score, rescues)
+        return self._recalibrate(t, score, rescues, score_mat)
 
     # -- the re-profile + hot-swap ----------------------------------------
-    def _recalibrate(self, t: int, score: float, rescues: int) -> dict | None:
+    def _recalibrate(self, t: int, score: float, rescues: int,
+                     score_mat: np.ndarray | None = None) -> dict | None:
         p = self.policy
         lo, hi = max(t - p.window, 0), t
         ent, cam, t_in, t_out = self.visit_source(lo, hi)
         if len(ent) == 0:
             return None                        # nothing to profile from
         old = self.engine.model
-        fresh = build_model(ent, cam, t_in, t_out, self.engine.C,
-                            n_bins=old.n_bins, bin_width=old.bin_width)
+        if p.targeted:
+            # Row-targeted path: re-profile only the source-camera rows whose
+            # drift score implicates them; untouched rows carry bit-exact
+            # (ROW_LOCAL_FIELDS contract — see core.correlation).
+            if score_mat is None:
+                score_mat = self.score()
+            thr = p.drift_threshold if p.row_threshold is None \
+                else p.row_threshold
+            row_max = np.asarray(score_mat).max(axis=1)
+            rows = np.flatnonzero(row_max >= thr)
+            if len(rows) == 0:                 # trigger fired: take the worst
+                rows = np.array([int(row_max.argmax())], np.int64)
+            t_prof = time.perf_counter()
+            fresh = merge_reprofiled_rows(old, ent, cam, t_in, t_out, rows)
+            self.profile_wall += time.perf_counter() - t_prof
+            self.targeted_swaps += 1
+            mode = "targeted"
+        else:
+            t_prof = time.perf_counter()
+            fresh = build_model(ent, cam, t_in, t_out, self.engine.C,
+                                n_bins=old.n_bins, bin_width=old.bin_width)
+            self.profile_wall += time.perf_counter() - t_prof
+            self.full_rebuilds += 1
+            rows = np.arange(self.engine.C, dtype=np.int64)
+            mode = "full"
+        self.rows_reprofiled += int(len(rows))
         epoch = self.engine.swap_model(fresh)
         if p.reset_rescues:
             self.engine.rescue_pairs[:] = 0
         self._last_swap = t
         event = dict(t=t, epoch=epoch, score=score, rescues=rescues,
-                     window=(lo, hi), visits=int(len(ent)))
+                     window=(lo, hi), visits=int(len(ent)), mode=mode,
+                     rows=int(len(rows)),
+                     row_ids=[int(r) for r in rows] if mode == "targeted"
+                     else None)
         self.events.append(event)
         return event

@@ -1,4 +1,5 @@
 import collections
+import dataclasses
 import functools
 import os
 import sys
@@ -70,11 +71,67 @@ def make_drifted_world(n_entities=80, t_shift=150, horizon=420, seed=0,
                 q_vids=q_vids, gt_vids=gt_vids, t_shift=t_shift)
 
 
+def make_soak_world(n_cams=32, n_entities=90, t_shift=160, horizon=480,
+                    seed=0, n_queries=8, anchor_hi=140):
+    """Scaled-down 130-camera soak world: the clustered city topology
+    (``clustered_city_network``) with a LOCALIZED mid-run drift — two hub
+    rows' arterial mass is rerouted onto their weakest leaf edges (edges
+    that sit below ``s_thresh`` in the profiled model but above the relaxed
+    replay threshold), so phase 1 misses the shifted hops while phase-2
+    rescues keep the chains alive AND pile the §6 drift signal onto exactly
+    those source rows.  Most rows stay truthful, so a row-targeted
+    re-profile is the right response.  The profile trains on dense history
+    (travel-time support bounds chain survival at this scale) and queries
+    anchor early in the post-shift traffic so every chain has runway across
+    the drift."""
+    from repro.core import (build_gallery, build_model,
+                            clustered_city_network, concat_visits,
+                            simulate_network)
+    from repro.core.features import FeatureParams, make_features
+    from repro.core.tracker import make_queries
+
+    # 3 big neighborhoods: the hub fanout must be wide enough that the
+    # weakest leaf edges straddle s_thresh (the same regime the 130-camera
+    # city hits naturally) — that is what makes the rerouted hops phase-2
+    # rescues rather than silent phase-1 admits
+    net = clustered_city_network(n_cams=n_cams, n_clusters=3, seed=seed + 40)
+    hubs = np.flatnonzero(net.entry > 1.0 / n_cams)
+    drift_rows = hubs[:2]
+    T = net.trans.copy()
+    for h in drift_rows:
+        row = T[h, :n_cams]
+        dests = np.flatnonzero(row)
+        order = np.argsort(row[dests])
+        boost, take = dests[order[:3]], dests[order[-3:]]
+        moved = 0.7 * row[take].sum()
+        row[take] *= 0.3
+        row[boost] += moved / len(boost)
+    shifted = dataclasses.replace(net, trans=T)
+    hist = simulate_network(net, n_entities * 16, 2000, seed=seed + 50)
+    model = build_model(hist.ent, hist.cam, hist.t_in, hist.t_out, n_cams)
+    vis_a = simulate_network(net, n_entities // 2, t_shift, seed=seed + 51)
+    vis_b = simulate_network(shifted, n_entities, horizon - t_shift,
+                             seed=seed + 52)
+    vis = concat_visits(vis_a, vis_b, t_shift)
+    gal, _ = build_gallery(vis, 16)
+    feats, _ = make_features(vis, int(vis.ent.max()) + 1,
+                             FeatureParams(seed=seed + 52))
+    q_b, gt_b = make_queries(vis_b, 8 * n_queries, seed=seed + 53)
+    keep = np.flatnonzero(vis_b.t_out[q_b] <= anchor_hi)[:n_queries]
+    q_b, gt_b = q_b[keep], gt_b[keep]
+    q_vids = q_b + len(vis_a)
+    gt_vids = np.where(gt_b >= 0, gt_b + len(vis_a), gt_b)
+    return dict(net=net, vis=vis, gal=gal, model=model, feats=feats,
+                q_vids=q_vids, gt_vids=gt_vids, t_shift=t_shift,
+                drift_rows=drift_rows)
+
+
 def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                         lose_worker=0, extra_ticks=500, gallery="auto",
                         topk=1, embed_fn=None, recalibrate=None,
                         transport=None, prefetch=False, consolidate=True,
-                        tile_grid=0, topk_rerank=False, model=None):
+                        tile_grid=0, topk_rerank=False, model=None,
+                        churn_wave=None):
     """Run one engine (single-process when ``shards`` is None, else the
     sharded fleet) over the world's live stream and return (engine, trace,
     summary).  ``lose_at`` kills one worker that many ticks into the run —
@@ -89,7 +146,9 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
     serves through the sub-frame spatial admission plane (per-detection
     tile labels from the world's ground-truth positions ride along with
     every ingest); ``model`` overrides the world's profile (e.g. a
-    tile-carrying re-profile of the same visits)."""
+    tile-carrying re-profile of the same visits).  ``churn_wave`` splits the
+    submits: the first half goes in at t0 and the rest that many steps in
+    (the late wave replays to catch up) — query churn for the soak cases."""
     from repro import api as rexcam
 
     vis, gal, feats = world["vis"], world["gal"], world["feats"]
@@ -113,10 +172,17 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
                        if recalibrate is not None else None)
     t0 = int(vis.t_out[q_vids].min())
     eng.t = t0
-    for i, q in enumerate(q_vids):
+    first = len(q_vids) if churn_wave is None else max(1, len(q_vids) // 2)
+    for i in range(first):
+        q = q_vids[i]
         eng.submit_query(i, feats[q], int(vis.cam[q]), int(vis.t_out[q]))
     trace = []
     for step, t in enumerate(range(t0, vis.horizon + extra_ticks)):
+        if churn_wave is not None and step == churn_wave:
+            for j in range(first, len(q_vids)):
+                q = q_vids[j]
+                eng.submit_query(j, feats[q], int(vis.cam[q]),
+                                 int(vis.t_out[q]))
         if lose_at is not None and step == lose_at and shards is not None:
             eng.lose_worker(lose_worker)
         if t < vis.horizon:
@@ -132,7 +198,8 @@ def drive_serving_trace(world, policy, *, shards=None, lose_at=None,
             else:
                 eng.ingest(frames)
         eng.tick(record_trace=trace)
-        if all(q.done for q in eng.queries.values()):
+        if all(q.done for q in eng.queries.values()) and \
+                (churn_wave is None or step >= churn_wave):
             break
     summary = dict(
         admitted_steps=eng.admitted_steps, unique_frames=eng.unique_frames,
@@ -160,7 +227,7 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
                                  lose_worker=0, single=None, gallery="auto",
                                  recalibrate=None, transport=None,
                                  prefetch=False, consolidate=True,
-                                 single_consolidate=True):
+                                 single_consolidate=True, churn_wave=None):
     """THE differential assertion: the sharded fleet's rounds are
     bit-identical to the single-process engine's — admissions, match
     indices/values (tie-breaks included), rescue attribution, model-epoch
@@ -176,13 +243,14 @@ def assert_fleet_trace_identical(world, policy, shards, *, lose_at=None,
     if single is None:
         _, ref_trace, ref_sum = drive_serving_trace(
             world, policy, recalibrate=recalibrate,
-            consolidate=single_consolidate)
+            consolidate=single_consolidate, churn_wave=churn_wave)
         single = (ref_trace, ref_sum)
     ref_trace, ref_sum = single
     eng, fl_trace, fl_sum = drive_serving_trace(
         world, policy, shards=shards, lose_at=lose_at,
         lose_worker=lose_worker, gallery=gallery, recalibrate=recalibrate,
-        transport=transport, prefetch=prefetch, consolidate=consolidate)
+        transport=transport, prefetch=prefetch, consolidate=consolidate,
+        churn_wave=churn_wave)
     assert trace_key(fl_trace) == trace_key(ref_trace), \
         f"fleet (shards={shards}) trace diverged from the single engine"
     assert fl_sum["admitted_steps"] == ref_sum["admitted_steps"]
@@ -439,6 +507,57 @@ def fleet_case_recalibration(shard_counts=(2, 4, 8), n_queries=8, seed=0):
             world, policy, shards, single=single, recalibrate=recal)
         assert eng.model_epoch == ref_sum["model_epoch"]
         assert int(eng.model.epoch) == eng.model_epoch
+
+
+def fleet_case_soak(shard_counts=(1, 2, 4, 8), n_queries=8, seed=3,
+                    churn_wave=40, lose_at=90, lose_worker=1):
+    """The scaled-down soak differential: query churn (a late submit wave),
+    worker loss, and a TARGETED recalibration swap all in ONE run — and
+    the fleet trace stays bit-identical to the single engine at every shard
+    count.  The single reference is reused across legs; loss only applies
+    on the multi-shard legs (a 1-shard fleet has no worker to spare).
+    On top of the differential, asserts the soak actually soaked: a swap
+    landed mid-trace, the late wave replayed, the lossy legs rebalanced
+    exactly once, and the targeted controller re-profiled a strict subset
+    of the model's rows."""
+    from repro.core.policy import SearchPolicy
+    from repro.runtime.recal import RecalibrationPolicy
+
+    _require_devices(max(shard_counts))
+    # exit_t must outlast the city network's corridor travel times (30-70s)
+    policy = SearchPolicy(scheme="rexcam", s_thresh=.05, t_thresh=.02,
+                          exit_t=120)
+    # the dense prior keeps normalized per-pair scores small — gate the trip
+    # on the sustained rescue count, and keep the re-profiling window wide
+    # enough that merged rows carry real travel-time support
+    recal = RecalibrationPolicy(drift_threshold=.005, min_rescues=2,
+                                cooldown=80, poll_every=10, window=250,
+                                targeted=True, row_threshold=.02)
+    world = make_soak_world(seed=seed, n_queries=n_queries)
+    C = world["net"].n_cams
+    single = None
+    eng = None
+    for shards in shard_counts:
+        loss = lose_at if shards >= 2 else None
+        eng, single = assert_fleet_trace_identical(
+            world, policy, shards, single=single, recalibrate=recal,
+            churn_wave=churn_wave, lose_at=loss, lose_worker=lose_worker)
+        if loss is not None:
+            assert eng.rebalances == 1
+    ref_trace, ref_sum = single
+    assert ref_sum["model_epoch"] >= 1, \
+        "soak world never tripped the recalibration trigger"
+    assert len({r["epoch"] for r in ref_trace}) >= 2, \
+        "no pre/post-swap rounds both present in trace"
+    assert ref_sum["replay_steps"] > 0, "late wave never replayed"
+    # targeted accounting: every swap re-profiled a strict subset of rows
+    ctl = eng.recal
+    assert ctl.targeted_swaps >= 1 and ctl.full_rebuilds == 0
+    assert ctl.rows_reprofiled < C * ctl.targeted_swaps, \
+        f"targeted recal touched {ctl.rows_reprofiled} rows over " \
+        f"{ctl.targeted_swaps} swaps — no better than a full rebuild (C={C})"
+    for ev in ctl.events:
+        assert ev["mode"] == "targeted" and 0 < ev["rows"] < C
 
 
 def _drive_counting(world, policy, *, shards=None, gallery="auto",

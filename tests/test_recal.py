@@ -147,6 +147,192 @@ def test_empty_window_skips_the_swap():
 
 
 # ---------------------------------------------------------------------------
+# row-targeted re-profiling: the merge-vs-rebuild bit-identity property
+# ---------------------------------------------------------------------------
+
+def _soak_windows(C=6, rows=(1, 4), seed=0):
+    """Two visit windows sharing their NON-drifted traffic bit-for-bit:
+    ``shared`` entities walk only the complement cameras, ``drift`` entities
+    (departures AND exits) stay inside ``rows``.  Returns (window_a,
+    window_b) as (ent, cam, t_in, t_out, tile_xy) tuples — the precondition
+    under which merging B's re-profiled rows into A's model must equal a
+    full rebuild on B."""
+    rng = np.random.default_rng(seed)
+    keep = [c for c in range(C) if c not in rows]
+
+    def walk(eid, cams, n_hops, t0):
+        e, c, ti, to, xy = [], [], [], [], []
+        t = t0
+        for _ in range(n_hops):
+            e.append(eid)
+            c.append(int(rng.choice(cams)))
+            ti.append(t)
+            to.append(t + int(rng.integers(1, 4)))
+            xy.append(rng.uniform(0, 1, 2))
+            t = to[-1] + int(rng.integers(2, 8))
+        return e, c, ti, to, xy
+
+    shared = [walk(e, keep, 5, e * 3) for e in range(6)]
+
+    def window(drift_seed):
+        drng = np.random.default_rng(drift_seed)
+        parts = [list(map(list, s)) for s in shared]
+        for e in range(6, 10):
+            t = int(drng.integers(0, 10))
+            ent_d, cam_d, ti_d, to_d, xy_d = [], [], [], [], []
+            for _ in range(4):
+                ent_d.append(e)
+                cam_d.append(int(drng.choice(rows)))
+                ti_d.append(t)
+                to_d.append(t + int(drng.integers(1, 4)))
+                xy_d.append(drng.uniform(0, 1, 2))
+                t = to_d[-1] + int(drng.integers(2, 8))
+            parts.append([ent_d, cam_d, ti_d, to_d, xy_d])
+        ent = np.concatenate([p[0] for p in parts]).astype(np.int64)
+        cam = np.concatenate([p[1] for p in parts]).astype(np.int64)
+        t_in = np.concatenate([p[2] for p in parts]).astype(np.int64)
+        t_out = np.concatenate([p[3] for p in parts]).astype(np.int64)
+        xy = np.concatenate([np.asarray(p[4]).reshape(-1, 2) for p in parts])
+        return ent, cam, t_in, t_out, xy
+
+    return window(seed + 100), window(seed + 200)
+
+
+def test_merge_reprofiled_rows_bit_identical_to_full_rebuild():
+    """THE row-locality property (core.correlation.ROW_LOCAL_FIELDS):
+    when the non-drifted rows' window contents are unchanged, splicing
+    freshly profiled drifted rows into the prior model equals a full
+    ``build_model`` rebuild on the new window — every field bit-for-bit,
+    tile_admit rows and the epoch stamp included."""
+    from repro.core.profiler import merge_reprofiled_rows
+
+    C, R, T = 6, (1, 4), 4
+    (ea, ca, ia, oa, xya), (eb, cb, ib, ob, xyb) = _soak_windows(C, R)
+    old = build_model(ea, ca, ia, oa, C, n_bins=32, bin_width=2,
+                      tile_xy=xya, tile_grid=T, epoch=4)
+    full = build_model(eb, cb, ib, ob, C, n_bins=32, bin_width=2,
+                       tile_xy=xyb, tile_grid=T, epoch=5)
+    merged = merge_reprofiled_rows(old, eb, cb, ib, ob, R, tile_xy=xyb,
+                                   epoch=5)
+    for f in ("S", "exit_frac", "cdf", "f0", "entry", "counts",
+              "tile_admit"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(merged, f)), np.asarray(getattr(full, f)),
+            err_msg=f"field {f} diverged from the full rebuild")
+    assert int(merged.epoch) == 5
+    assert merged.bin_width == full.bin_width == 2
+    # and the untouched rows really are the OLD arrays' rows
+    keep = [c for c in range(C) if c not in R]
+    np.testing.assert_array_equal(np.asarray(merged.S)[keep],
+                                  np.asarray(old.S)[keep])
+    np.testing.assert_array_equal(np.asarray(merged.tile_admit)[keep],
+                                  np.asarray(old.tile_admit)[keep])
+
+
+def test_merge_reprofiled_rows_without_tiles_carries_old_tile_rows():
+    """A targeted re-profile WITHOUT tile positions (the controller's
+    visit_source returns no tile_xy) must carry the incumbent learned
+    masks wholesale — mirroring engine.swap_model's tile carry."""
+    from repro.core.profiler import merge_reprofiled_rows
+
+    C, R = 6, (1, 4)
+    (ea, ca, ia, oa, xya), (eb, cb, ib, ob, _) = _soak_windows(C, R, seed=3)
+    old = build_model(ea, ca, ia, oa, C, tile_xy=xya, tile_grid=4)
+    merged = merge_reprofiled_rows(old, eb, cb, ib, ob, R)
+    np.testing.assert_array_equal(np.asarray(merged.tile_admit),
+                                  np.asarray(old.tile_admit))
+    assert merged.tile_grid == 4 and merged.tile_learned
+    # epoch defaults to the incumbent's (swap_model stamps the bump)
+    assert int(merged.epoch) == int(old.epoch)
+
+
+def test_merge_reprofiled_rows_validates_rows():
+    from repro.core.profiler import merge_reprofiled_rows
+
+    (ea, ca, ia, oa, _), _ = _soak_windows()
+    old = build_model(ea, ca, ia, oa, 6)
+    with pytest.raises(ValueError):
+        merge_reprofiled_rows(old, ea, ca, ia, oa, [])
+    with pytest.raises(ValueError):
+        merge_reprofiled_rows(old, ea, ca, ia, oa, [0, 6])
+
+
+def test_splice_rows_rejects_non_row_local_fields():
+    from repro.core.correlation import splice_rows
+
+    (ea, ca, ia, oa, _), _ = _soak_windows()
+    old = build_model(ea, ca, ia, oa, 6)
+    with pytest.raises(ValueError, match="not row-local"):
+        splice_rows(old, [0], {"entry": np.zeros((1,))})
+    with pytest.raises(ValueError, match="no 'tile_admit'"):
+        splice_rows(old, [0], {"tile_admit": np.ones((1, 6, 16), bool)})
+
+
+# ---------------------------------------------------------------------------
+# the targeted controller (profiler call accounting + drifted-row selection)
+# ---------------------------------------------------------------------------
+
+def _targeted_ctl(rows_hot, thr=.1, row_threshold=None):
+    """Stub engine + targeted controller with rescues concentrated on the
+    given source rows (never-profiled pairs, so their score is high)."""
+    eng = _StubEngine(_toy_model())
+    p = RecalibrationPolicy(drift_threshold=thr, min_rescues=1, cooldown=1,
+                            poll_every=1, targeted=True,
+                            row_threshold=row_threshold)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: eng.t)
+    for r in rows_hot:
+        eng.rescue_pairs[r, 3] = 5
+    return eng, ctl
+
+
+def test_targeted_recal_reprofiles_only_drifted_rows():
+    eng, ctl = _targeted_ctl(rows_hot=[2])
+    old = eng.model
+    ev = ctl.on_tick()
+    assert ev["mode"] == "targeted" and ev["row_ids"] == [2]
+    assert ctl.targeted_swaps == 1 and ctl.full_rebuilds == 0
+    assert ctl.rows_reprofiled == 1
+    assert ctl.profile_wall > 0.0
+    # untouched rows carry bit-exact; the hot row re-profiled from the
+    # window (here: no 2->x transitions in the source, so row 2 zeroes out)
+    keep = [0, 1, 3]
+    np.testing.assert_array_equal(np.asarray(eng.model.S)[keep],
+                                  np.asarray(old.S)[keep])
+    src = _source_from_model_inputs()
+    full = build_model(*src(0, 0), eng.C, n_bins=old.n_bins,
+                       bin_width=old.bin_width)
+    np.testing.assert_array_equal(np.asarray(eng.model.S)[2],
+                                  np.asarray(full.S)[2])
+    np.testing.assert_array_equal(np.asarray(eng.model.entry),
+                                  np.asarray(full.entry))
+
+
+def test_targeted_recal_row_threshold_widens_selection():
+    """row_threshold below the trip threshold pulls mildly drifted rows
+    into the same re-profile pass."""
+    eng, ctl = _targeted_ctl(rows_hot=[0, 2], row_threshold=.01)
+    ev = ctl.on_tick()
+    assert ev["row_ids"] == [0, 2]
+    assert ctl.rows_reprofiled == 2
+
+
+def test_full_rebuild_books_every_row():
+    eng = _StubEngine(_toy_model())
+    p = RecalibrationPolicy(drift_threshold=.1, min_rescues=1, cooldown=1,
+                            poll_every=1, targeted=False)
+    ctl = RecalibrationController(eng, _source_from_model_inputs(), p,
+                                  clock=lambda: eng.t)
+    eng.rescue_pairs[2, 3] = 5
+    ev = ctl.on_tick()
+    assert ev["mode"] == "full" and ev["row_ids"] is None
+    assert ev["rows"] == eng.C
+    assert ctl.full_rebuilds == 1 and ctl.targeted_swaps == 0
+    assert ctl.rows_reprofiled == eng.C
+    assert ctl.profile_wall > 0.0
+
+
+# ---------------------------------------------------------------------------
 # engine hot-swap semantics (the real engine)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,67 @@
+"""The 130-camera soak plane, scaled down to test size.
+
+Two layers:
+
+  * cheap in-process unit tests of ``clustered_city_network`` — the large
+    synthetic topology generator the soak scenario is built on must be
+    bit-reproducible per seed, row-stochastic, and geometrically sane at
+    any camera count;
+  * the soak DIFFERENTIAL (``conftest.fleet_case_soak`` via the shared
+    ``_fleet_case`` runner): query churn + worker loss + a targeted
+    recalibration swap in ONE run, trace-identical across shard counts
+    {1, 2, 4, 8} on 8 fake CPU devices.
+"""
+import numpy as np
+
+from test_sharded_engine import _fleet_case
+
+
+def _city(**kw):
+    from repro.core import clustered_city_network
+    return clustered_city_network(**kw)
+
+
+def test_city_network_bit_reproducible():
+    a = _city(n_cams=130, seed=17)
+    b = _city(n_cams=130, seed=17)
+    for f in ("trans", "travel_mean", "travel_std", "entry"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    c = _city(n_cams=130, seed=18)
+    assert not np.array_equal(a.trans, c.trans), "seed must matter"
+
+
+def test_city_network_row_stochastic_and_geo():
+    for C in (32, 130):
+        net = _city(n_cams=C, seed=5)
+        assert net.n_cams == C
+        # each row's camera mass + exit mass must be a distribution
+        np.testing.assert_allclose(net.trans[:, :C].sum(1), 0.85, atol=1e-6)
+        assert (net.trans >= 0).all()
+        # geo adjacency: symmetric, no self-loops, connected enough that
+        # every camera has at least one neighbor (leaf ring + hub links)
+        geo = np.asarray(net.geo_adjacent)
+        assert (geo == geo.T).all() and not geo.diagonal().any()
+        assert geo.any(axis=1).all()
+        # entry distribution sums to one with hub emphasis
+        np.testing.assert_allclose(net.entry.sum(), 1.0, atol=1e-6)
+        assert net.entry.max() > 1.0 / C
+        # clustered travel times: intra-cluster hops are faster than the
+        # corridor hops (means drawn from disjoint [8,20) vs [30,70) bands)
+        linked = net.trans[:, :C] > 0
+        assert net.travel_mean[linked].min() >= 8.0
+        assert net.travel_mean[linked].max() < 70.0
+
+
+def test_city_network_simulates():
+    from repro.core import simulate_network
+    net = _city(n_cams=32, seed=7)
+    vis = simulate_network(net, 60, 240, seed=1)
+    assert len(vis.ent) > 0
+    assert int(vis.cam.max()) < 32
+
+
+def test_soak_differential_trace_identical():
+    """Churn + loss + targeted recal swap in one run, bit-identical across
+    shard counts — THE scaled-down soak gate (see conftest.fleet_case_soak
+    for the full assertion list)."""
+    _fleet_case("fleet_case_soak", timeout=1500)

@@ -114,3 +114,69 @@ def test_drift_detection_and_reprofiling():
                             geo_adj=net.geo_adjacent)
     assert r_fresh.recall >= r_stale.recall - 0.02
     assert r_fresh.rescued.sum() <= r_stale.rescued.sum()
+
+
+# ---------------------------------------------------------------------------
+# the BENCH record golden schema (the persistent perf trajectory's contract)
+# ---------------------------------------------------------------------------
+
+def _bench_scenarios():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import scenarios
+    return scenarios
+
+
+def test_bench_record_rejects_missing_required_keys():
+    scenarios = _bench_scenarios()
+    with pytest.raises(ValueError, match="missing required keys"):
+        scenarios.bench_record("_schema_probe", scenario="x",
+                               admitted_steps=1)
+    assert scenarios.pop_bench_records("_schema_probe") == []
+    # a full measured row and a derived summary row both pass
+    scenarios.bench_record("_schema_probe", scenario="x", admitted_steps=1,
+                           unique_frames=1, wall_s=0.1, p50_tick_ms=1.0,
+                           p99_tick_ms=2.0)
+    scenarios.bench_record("_schema_probe", derived=True, savings_x=21.0)
+    assert len(scenarios.pop_bench_records("_schema_probe")) == 2
+
+
+def test_every_bench_record_call_site_satisfies_the_schema():
+    """Static golden-schema audit: every ``bench_record(...)`` call in
+    benchmarks/ passes all ``REQUIRED_BENCH_KEYS`` as explicit keywords (or
+    opts out with ``derived=True``) — so a schema violation is caught at
+    review time, not only when the offending sweep happens to run."""
+    import ast
+    import os
+
+    scenarios = _bench_scenarios()
+    bench_dir = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+    required = set(scenarios.REQUIRED_BENCH_KEYS)
+    audited = 0
+    for fn in sorted(os.listdir(bench_dir)):
+        if not fn.endswith(".py"):
+            continue
+        with open(os.path.join(bench_dir, fn)) as f:
+            tree = ast.parse(f.read(), filename=fn)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and ((isinstance(node.func, ast.Name)
+                          and node.func.id == "bench_record")
+                         or (isinstance(node.func, ast.Attribute)
+                             and node.func.attr == "bench_record"))):
+                continue
+            kw = {k.arg for k in node.keywords if k.arg is not None}
+            audited += 1
+            derived = any(
+                k.arg == "derived"
+                and isinstance(k.value, ast.Constant) and k.value.value
+                for k in node.keywords)
+            if derived:
+                continue
+            # **extra splats may carry extras, but the required set must be
+            # explicit at every call site so the audit stays static
+            assert not (required - kw), \
+                f"{fn}:{node.lineno}: bench_record missing explicit " \
+                f"required keys {sorted(required - kw)}"
+    assert audited >= 10, f"audit only found {audited} call sites"
